@@ -1,0 +1,67 @@
+"""Figure 1 — the speedup/validity trade-off frontier (ASCII rendering).
+
+The paper's headline figure: EvoEngineer variants dominate the frontier
+(Free at max speedup, Full at max validity, Insight between).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+_MARKS = {
+    "EvoEngineer-Free": "F",
+    "EvoEngineer-Insight": "I",
+    "EvoEngineer-Full": "U",
+    "EvoEngineer-Solution (EoH)": "E",
+    "FunSearch": "S",
+    "AI CUDA Engineer": "A",
+}
+
+
+def points(path):
+    recs = [json.loads(l) for l in open(path)]
+    out = {}
+    for m in _MARKS:
+        mr = [r for r in recs if r["method"] == m]
+        if mr:
+            out[m] = (
+                float(np.mean([r["validity_rate"] for r in mr])),
+                float(np.median([r["best_speedup"] for r in mr])),
+            )
+    return out
+
+
+def render(path, width=64, height=16) -> str:
+    pts = points(path)
+    if not pts:
+        return "no records"
+    vals = [v for v, _ in pts.values()]
+    spds = [s for _, s in pts.values()]
+    v_lo, v_hi = min(vals) - 0.02, max(vals) + 0.02
+    s_lo, s_hi = min(spds) - 0.05, max(spds) + 0.05
+    grid = [[" "] * width for _ in range(height)]
+    for m, (v, s) in pts.items():
+        x = int((v - v_lo) / (v_hi - v_lo) * (width - 1))
+        y = height - 1 - int((s - s_lo) / (s_hi - s_lo) * (height - 1))
+        grid[y][x] = _MARKS[m]
+    lines = [f"median speedup {s_hi:.2f}x"]
+    lines += ["|" + "".join(row) for row in grid]
+    lines.append("+" + "-" * width + f"> validity  [{v_lo:.2f}, {v_hi:.2f}]")
+    lines.append(f"          {s_lo:.2f}x")
+    legend = "  ".join(f"{mk}={m}" for m, mk in _MARKS.items())
+    lines.append(legend)
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table4", default="results/table4.jsonl")
+    args = ap.parse_args()
+    print(render(args.table4))
+
+
+if __name__ == "__main__":
+    main()

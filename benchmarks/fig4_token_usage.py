@@ -1,0 +1,48 @@
+"""Figure 4 — token usage vs speedup vs validity, per method.
+
+Reads the table4 JSONL; reports mean total tokens per kernel run alongside
+median speedup and validity (the paper's trade-off axes).  EvoEngineer-Free
+should sit at minimal tokens / high speedup; -Full at high tokens / high
+validity; AICE at high tokens without matching validity.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def summarize(path: str) -> str:
+    recs = [json.loads(l) for l in open(path)]
+    methods = []
+    for r in recs:
+        if r["method"] not in methods:
+            methods.append(r["method"])
+    lines = [
+        f"{'Method':28s} {'tok_in/run':>12s} {'tok_out/run':>12s} {'total':>10s} "
+        f"{'median_spd':>11s} {'validity':>9s}",
+        "-" * 90,
+    ]
+    for m in methods:
+        mr = [r for r in recs if r["method"] == m]
+        ti = float(np.mean([r["tokens"]["tokens_in"] for r in mr]))
+        to = float(np.mean([r["tokens"]["tokens_out"] for r in mr]))
+        spd = float(np.median([r["best_speedup"] for r in mr]))
+        val = float(np.mean([r["validity_rate"] for r in mr]))
+        lines.append(
+            f"{m:28s} {ti:12.0f} {to:12.0f} {ti+to:10.0f} {spd:11.2f} {val*100:8.1f}%"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table4", default="results/table4.jsonl")
+    args = ap.parse_args()
+    print(summarize(args.table4))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Roofline report (assignment §Roofline): reads the dry-run JSON cache.
+
+Per (arch x shape) single-pod cell: the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS = 6·N·D (2·N·D prefill, 2·N·B decode; N = active
+params), the useful-compute ratio MODEL_FLOPS / (HLO_FLOPS x chips), and a
+one-line lever for the dominant term.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+LEVERS = {
+    "compute": "raise arithmetic intensity: larger per-device tiles / fewer remat recomputes",
+    "memory": "fuse elementwise chains + cut fp32 intermediates (bytes term is an XLA upper bound)",
+    "collective": "reduce per-layer all-reduce payloads (bf16 wire, reassociate dx reductions, overlap)",
+}
+
+
+def load_cells(dryrun_dir: str, mesh: str = "single"):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, f"*_{mesh}.json"))):
+        r = json.load(open(p))
+        cells.append(r)
+    return cells
+
+
+def table(dryrun_dir: str, mesh: str = "single") -> str:
+    rows = []
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'st':5s} {'compute_s':>9s} {'memory_s':>9s} "
+        f"{'coll_s':>8s} {'dom':>10s} {'useful%':>8s} {'peak_GiB':>9s} {'mb':>3s} {'sp':>3s}"
+    )
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in load_cells(dryrun_dir, mesh):
+        if r["status"] == "skip":
+            rows.append(
+                f"{r['arch']:22s} {r['shape']:12s} SKIP  ({r['reason'][:70]})"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']:22s} {r['shape']:12s} ERROR {r.get('error','')[:60]}")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"{r['arch']:22s} {r['shape']:12s} ok    "
+            f"{rf['compute_s']:9.3f} {rf['memory_s']:9.3f} {rf['collective_s']:8.3f} "
+            f"{rf['dominant']:>10s} {rf['model_vs_hlo_flops']*100:7.1f}% "
+            f"{r['memory']['peak_gib']:9.2f} {str(r.get('microbatches','-')):>3s} "
+            f"{'y' if r.get('seq_parallel') else 'n':>3s}"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    print(table(args.dryrun_dir, args.mesh))
+    print()
+    print("Levers for the dominant term:")
+    for k, v in LEVERS.items():
+        print(f"  {k:10s} -> {v}")
+
+
+if __name__ == "__main__":
+    main()

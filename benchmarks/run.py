@@ -1,0 +1,80 @@
+"""Benchmark orchestrator: one harness per paper table/figure.
+
+Default: summarizes whatever results exist (running the quick table4 sweep
+if none do) and prints the roofline table from the dry-run cache.  CSV lines
+``name,value,derived`` stream to stdout for machine consumption.
+
+  PYTHONPATH=src python -m benchmarks.run            # summaries (+quick sweep)
+  PYTHONPATH=src python -m benchmarks.run --full     # full 91x6x3 sweep first
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--table4", default="results/table4.jsonl")
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig1_frontier,
+        fig4_token_usage,
+        roofline,
+        table4_overall,
+        table7_speedup_dist,
+        table8_aice,
+    )
+
+    if args.full or not os.path.exists(args.table4):
+        ns = argparse.Namespace(
+            mode="full" if args.full else "quick",
+            seeds=3, trials=45, timing_runs=11,
+            out=args.table4, summarize_only=False,
+        )
+        table4_overall.run(ns)
+
+    print("\n### Table 4 — overall results (speedup & validity) ###")
+    print(table4_overall.summarize(args.table4))
+    print("\n### Figure 1 — speedup/validity frontier ###")
+    print(fig1_frontier.render(args.table4))
+    print("\n### Figure 4 — token usage ###")
+    print(fig4_token_usage.summarize(args.table4))
+    print("\n### Table 7 — speedup distribution ###")
+    print(table7_speedup_dist.summarize(args.table4))
+    print("\n### Table 8 — AI CUDA Engineer replication ###")
+    print(table8_aice.summarize(args.table4))
+    if os.path.isdir(args.dryrun_dir):
+        print("\n### Roofline (single-pod) ###")
+        print(roofline.table(args.dryrun_dir, "single"))
+        print("\n### Roofline (multi-pod) ###")
+        print(roofline.table(args.dryrun_dir, "multi"))
+
+    # machine-readable CSV tail
+    print("\nname,value,derived")
+    recs = [json.loads(l) for l in open(args.table4)]
+    methods = sorted(set(r["method"] for r in recs))
+    for m in methods:
+        mr = [r for r in recs if r["method"] == m]
+        med = float(np.median([r["best_speedup"] for r in mr]))
+        val = float(np.mean([r["validity_rate"] for r in mr]))
+        tok = float(np.mean([r["tokens"]["tokens_in"] + r["tokens"]["tokens_out"] for r in mr]))
+        key = m.replace(" ", "_")
+        print(f"{key}_median_speedup,{med:.3f},x")
+        print(f"{key}_validity,{val:.3f},rate")
+        print(f"{key}_tokens_per_run,{tok:.0f},tokens")
+
+
+if __name__ == "__main__":
+    main()

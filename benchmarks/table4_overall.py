@@ -1,0 +1,156 @@
+"""Table 4 — the paper's main experiment.
+
+Runs every method on the 91-task benchmark set for `--seeds` independent
+runs of 45 trials each, and reports per category:
+  * Speedup Count (tasks with any >1x improvement, averaged over seeds),
+  * Median Speedup Rate (failures count as 1.0 — the paper's convention),
+  * Compilation Success and Functional Correctness Pass@1.
+
+Results stream to JSONL (one record per task x method x seed) and reruns
+resume by skipping existing records — a killed sweep loses at most one
+engine run (whose own checkpoints make even that resumable).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.table4_overall --mode quick   # 12 tasks, 1 seed
+  PYTHONPATH=src python -m benchmarks.table4_overall --mode full    # 91 tasks, 3 seeds
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import warnings
+from collections import defaultdict
+
+import numpy as np
+
+warnings.filterwarnings("ignore")
+
+from repro.core.engine import EvolutionEngine
+from repro.core.methods import DISPLAY_ORDER, get_method
+from repro.evaluation import EvalConfig, Evaluator
+from repro.tasks import benchmark_tasks
+from repro.tasks.base import CATEGORIES
+
+CATEGORY_INDEX = {c: i + 1 for i, c in enumerate(CATEGORIES)}
+
+
+def quick_subset(tasks, per_category=2):
+    by_cat = defaultdict(list)
+    for t in tasks:
+        by_cat[t.category].append(t)
+    out = []
+    for c in CATEGORIES:
+        out += by_cat[c][:per_category]
+    return out
+
+
+def run(args):
+    tasks = benchmark_tasks()
+    if args.mode == "quick":
+        tasks = quick_subset(tasks)
+    seeds = 1 if args.mode == "quick" else args.seeds
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["task"], r["method"], r["seed"]))
+                except json.JSONDecodeError:
+                    pass
+
+    # RAG pool for AI CUDA Engineer's Compose stage: naive sources of other
+    # tasks (stands in for the cross-kernel archive retrieval)
+    rag_pool = [(t.name, t.initial_source) for t in tasks[:8]]
+
+    total = len(tasks) * len(DISPLAY_ORDER) * seeds
+    n = len(done)
+    t_start = time.time()
+    for task in tasks:
+        evaluator = Evaluator(EvalConfig(timing_runs=args.timing_runs))
+        for seed in range(seeds):
+            for mkey in DISPLAY_ORDER:
+                method = get_method(mkey)
+                if (task.name, method.name, seed) in done:
+                    continue
+                eng = EvolutionEngine(
+                    task, method, evaluator=evaluator, seed=seed,
+                    rag_pool=[r for r in rag_pool if r[0] != task.name],
+                )
+                res = eng.run(max_trials=args.trials)
+                rec = res.to_dict()
+                rec["category"] = task.category
+                rec["speedups_all"] = [
+                    s.speedup for s in res.history if s.valid and s.speedup
+                ]
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                n += 1
+                if n % 10 == 0:
+                    el = time.time() - t_start
+                    print(
+                        f"[{n}/{total}] {task.name} {method.name} "
+                        f"spd={res.best_speedup:.2f} val={res.validity_rate:.2f} "
+                        f"({el:.0f}s)",
+                        flush=True,
+                    )
+    print(f"table4 sweep complete: {n} records in {args.out}")
+
+
+def summarize(path: str) -> str:
+    recs = [json.loads(l) for l in open(path)]
+    lines = ["", "=" * 100,
+             f"{'Method':28s} | " + " | ".join(f"cat{i}" for i in range(1, 7)) +
+             " | overall  (median speedup | any-speedup count | validity | compile)",
+             "-" * 100]
+    methods = []
+    for r in recs:
+        if r["method"] not in methods:
+            methods.append(r["method"])
+    for m in methods:
+        mr = [r for r in recs if r["method"] == m]
+        med = {}
+        cnt = {}
+        for c, i in CATEGORY_INDEX.items():
+            cr = [r for r in mr if r["category"] == c]
+            if cr:
+                med[i] = float(np.median([r["best_speedup"] for r in cr]))
+                cnt[i] = sum(1 for r in cr if r["best_speedup"] > 1.0) / max(
+                    1, len(set(r["seed"] for r in cr))
+                )
+        overall_med = float(np.median([r["best_speedup"] for r in mr]))
+        overall_cnt = sum(1 for r in mr if r["best_speedup"] > 1.0) / max(
+            1, len(set(r["seed"] for r in mr))
+        )
+        val = float(np.mean([r["validity_rate"] for r in mr]))
+        comp = float(np.mean([r["compile_rate"] for r in mr]))
+        cats = " | ".join(f"{med.get(i, 0):4.2f}" for i in range(1, 7))
+        lines.append(
+            f"{m:28s} | {cats} | {overall_med:5.2f} | {overall_cnt:5.1f} | "
+            f"{val*100:5.1f}% | {comp*100:5.1f}%"
+        )
+    lines.append("=" * 100)
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["quick", "full"], default="quick")
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--trials", type=int, default=45)
+    ap.add_argument("--timing-runs", type=int, default=11)
+    ap.add_argument("--out", default="results/table4.jsonl")
+    ap.add_argument("--summarize-only", action="store_true")
+    args = ap.parse_args()
+    if not args.summarize_only:
+        run(args)
+    print(summarize(args.out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table 7 — distribution of best speedups across buckets, per method.
+
+Buckets follow the paper: <1.0 (never improved; by the metric convention
+best_speedup==1.0 means 'no improvement found'), 1.0-2.0, 2.0-5.0, 5.0-10.0,
+>10.0.  Uses the MAX over seeds per task (the paper reports max across runs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+BUCKETS = [(0.0, 1.0001), (1.0001, 2.0), (2.0, 5.0), (5.0, 10.0), (10.0, 1e9)]
+LABELS = ["<=1.0", "1.0~2.0", "2.0~5.0", "5.0~10.0", ">10.0"]
+
+
+def summarize(path: str) -> str:
+    recs = [json.loads(l) for l in open(path)]
+    best = defaultdict(float)  # (method, task) -> max speedup over seeds
+    methods = []
+    for r in recs:
+        if r["method"] not in methods:
+            methods.append(r["method"])
+        key = (r["method"], r["task"])
+        best[key] = max(best[key], r["best_speedup"])
+    lines = [
+        f"{'Method':28s} " + " ".join(f"{l:>9s}" for l in LABELS),
+        "-" * 80,
+    ]
+    for m in methods:
+        vals = [v for (mm, _), v in best.items() if mm == m]
+        counts = []
+        for lo, hi in BUCKETS:
+            counts.append(sum(1 for v in vals if lo < v <= hi or (lo == 0.0 and v <= hi)))
+        # first bucket counts v <= 1.0 strictly
+        counts[0] = sum(1 for v in vals if v <= 1.0001)
+        counts[1] = sum(1 for v in vals if 1.0001 < v <= 2.0)
+        lines.append(f"{m:28s} " + " ".join(f"{c:9d}" for c in counts))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table4", default="results/table4.jsonl")
+    args = ap.parse_args()
+    print(summarize(args.table4))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table 8 — AI CUDA Engineer staged-workflow replication summary.
+
+Reports the AICE results from the table4 sweep through the original paper's
+Table-8 lens: median speedup over all tasks (failures = 1.0), median over
+successful tasks only, and the successful-task count — the three numbers
+the paper uses to validate its own AICE replication.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def summarize(path: str) -> str:
+    recs = [json.loads(l) for l in open(path) if '"AI CUDA Engineer"' in l]
+    if not recs:
+        return "no AI CUDA Engineer records yet"
+    spd = np.array([r["best_speedup"] for r in recs])
+    succ = spd[spd > 1.0]
+    lines = [
+        "AI CUDA Engineer staged workflow (Convert->Translate->Optimize->Compose)",
+        f"  runs:                          {len(recs)}",
+        f"  median speedup (all):          {np.median(spd):.2f}x",
+        f"  median speedup (successful):   {np.median(succ) if len(succ) else 0:.2f}x",
+        f"  successful tasks (>1x):        {len(succ)} ({100*len(succ)/len(recs):.1f}%)",
+        f"  mean compile success:          {100*np.mean([r['compile_rate'] for r in recs]):.1f}%",
+        f"  mean functional correctness:   {100*np.mean([r['validity_rate'] for r in recs]):.1f}%",
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table4", default="results/table4.jsonl")
+    args = ap.parse_args()
+    print(summarize(args.table4))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Beyond-paper example: EvoEngineer autotunes the Pallas kernel genomes.
+
+Runs the evolution loop over (block_q, block_k) / (block_m, block_n,
+block_k) / chunk against the TPU v5e roofline model, then validates the
+winning genome numerically via the interpret-mode kernel vs the oracle.
+
+    PYTHONPATH=src python examples/autotune_kernels.py
+"""
+
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.launch.autotune import tune
+
+
+def main():
+    for kernel in ("flash", "matmul", "wkv6"):
+        res = tune(kernel, trials=40)
+        print(
+            f"{kernel:8s} best genome {res['best_genome']} "
+            f"modeled {res['best_modeled_us']:.1f}us "
+            f"(valid proposals: {res['valid_rate']:.0%})"
+        )
+
+    # numerically validate the tuned flash genome in interpret mode
+    res = tune("flash", trials=40)
+    g = res["best_genome"]
+    b, s, h, d = 1, 512, 2, 64
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d), jnp.float32)
+    got = ops.flash_attention(
+        q, k, v, block_q=min(g["block_q"], s), block_k=min(g["block_k"], s)
+    )
+    want = ref.flash_attention_ref(q, k, v)
+    err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+    print(f"tuned flash genome validates vs oracle: max err {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

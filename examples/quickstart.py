@@ -1,0 +1,38 @@
+"""Quickstart: evolve one kernel with EvoEngineer in under a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import warnings
+
+warnings.filterwarnings("ignore")
+
+from repro.core import EvolutionEngine, get_method
+from repro.evaluation import EvalConfig, Evaluator
+from repro.tasks import get_task
+
+
+def main():
+    task = get_task("mm_square_m")
+    print(f"Task: {task.name} — {task.description}")
+    print("Initial (naive) implementation:")
+    print("\n".join("  " + l for l in task.initial_source.splitlines()[-10:]))
+
+    evaluator = Evaluator(EvalConfig(timing_runs=7))
+    print(f"\nnaive runtime: {evaluator.baseline_us(task):.0f} us")
+
+    for method_key in ("evoengineer-free", "evoengineer-full"):
+        method = get_method(method_key)
+        engine = EvolutionEngine(task, method, evaluator=evaluator, seed=0)
+        result = engine.run(max_trials=45)
+        print(
+            f"\n{method.name}: best speedup {result.best_speedup:.2f}x | "
+            f"validity {result.validity_rate:.0%} | "
+            f"tokens {result.ledger.total:,}"
+        )
+        print("best kernel:")
+        print("\n".join("  " + l for l in result.best.source.splitlines()[-8:]))
+
+
+if __name__ == "__main__":
+    main()

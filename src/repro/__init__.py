@@ -1,0 +1,19 @@
+"""repro — EvoEngineer on JAX/Pallas: LLM-driven kernel code evolution, adapted to TPU.
+
+Subpackages
+-----------
+core/        Evolution engine (the paper's contribution): problem formulation,
+             two-layer traverse techniques, population management, method configs.
+tasks/       KernelBench-JAX: 91 kernel-optimization tasks in 6 categories.
+proposers/   Solution generation: SyntheticLLM mutation engine + HTTP LLM clients.
+evaluation/  Two-stage evaluator (compile check -> functional test -> perf).
+kernels/     Pallas TPU kernels (pallas_call + BlockSpec) with jnp oracles.
+models/      The 10 assigned architectures (dense/moe/hybrid/ssm/vlm/audio).
+parallel/    Mesh axes, sharding rules, gradient compression.
+train/       Optimizers, data pipeline, checkpointing, train-step builder.
+serve/       KV-cache management, prefill/decode steps.
+configs/     One module per assigned architecture (full + smoke).
+launch/      mesh.py, dryrun.py, train.py, serve.py, autotune.py.
+"""
+
+__version__ = "1.0.0"

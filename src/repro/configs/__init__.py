@@ -1,0 +1,72 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exposes ``full()`` (the exact assigned config) and ``smoke()``
+(a reduced same-family config for CPU tests).  ``get_config(name, smoke=)``
+resolves either; ``ARCHS`` lists all ten assigned ids.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import (
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    ModelConfig,
+    ShapeConfig,
+)
+
+ARCHS = (
+    "gemma3_27b",
+    "deepseek_67b",
+    "gemma2_27b",
+    "qwen25_32b",
+    "recurrentgemma_9b",
+    "deepseek_v2_lite_16b",
+    "phi35_moe_42b",
+    "internvl2_26b",
+    "rwkv6_1b6",
+    "musicgen_large",
+)
+
+# assignment ids (with dashes/dots) -> module names
+ALIASES = {
+    "gemma3-27b": "gemma3_27b",
+    "deepseek-67b": "deepseek_67b",
+    "gemma2-27b": "gemma2_27b",
+    "qwen2.5-32b": "qwen25_32b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "internvl2-26b": "internvl2_26b",
+    "rwkv6-1.6b": "rwkv6_1b6",
+    "musicgen-large": "musicgen_large",
+}
+
+
+def get_config(name: str, *, smoke: bool = False) -> ModelConfig:
+    mod_name = ALIASES.get(name, name)
+    if mod_name not in ARCHS:
+        raise KeyError(f"unknown architecture {name!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg = mod.smoke() if smoke else mod.full()
+    cfg.validate()
+    return cfg
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) assignment cells; long_500k only for sub-quadratic
+    archs unless include_skipped."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in ALL_SHAPES:
+            skip = shape.name == "long_500k" and not cfg.is_sub_quadratic()
+            if skip and not include_skipped:
+                continue
+            out.append((arch, shape.name, skip))
+    return out

@@ -1,0 +1,45 @@
+"""deepseek-67b — dense llama-architecture.
+
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400.
+[arXiv:2401.02954; hf tier]
+"""
+
+from repro.models.config import DENSE_MLP, GLOBAL_ATTN, ModelConfig
+
+_PATTERN = ((GLOBAL_ATTN, DENSE_MLP),)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-67b",
+        family="dense",
+        num_layers=95,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=22016,
+        vocab_size=102_400,
+        pattern=_PATTERN,
+        rope_theta=10_000.0,
+        act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-67b-smoke",
+        family="dense",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=160,
+        vocab_size=401,
+        pattern=_PATTERN,
+        act="silu",
+        tie_embeddings=False,
+        remat="none",
+    )

@@ -1,0 +1,82 @@
+"""deepseek-v2-lite-16b — MoE with Multi-head Latent Attention.
+
+27L d_model=2048 16H d_ff(expert)=1408 vocab=102400, MLA kv_lora=512,
+2 shared + 64 routed experts, top-6.  [arXiv:2405.04434; hf tier]
+
+Config note (recorded in DESIGN.md): the assignment line says both
+"MoE 64e top-6" and "160 routed"; the published V2-Lite has 64 routed +
+2 shared, top-6 — we use that.  The published model's first layer is a
+dense FFN; we use MoE in all 27 layers to keep the pattern uniform
+(deviation noted in DESIGN.md §Arch-applicability).
+"""
+
+from repro.models.config import (
+    MLA_ATTN,
+    MOE_MLP,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+)
+
+_PATTERN = ((MLA_ATTN, MOE_MLP),)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b",
+        family="moe",
+        num_layers=27,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=192,  # qk_nope(128) + qk_rope(64)
+        d_ff=1408,
+        vocab_size=102_400,
+        pattern=_PATTERN,
+        mla=MLAConfig(
+            kv_lora_rank=512,
+            qk_nope_head_dim=128,
+            qk_rope_head_dim=64,
+            v_head_dim=128,
+        ),
+        moe=MoEConfig(
+            num_experts=64,
+            num_shared_experts=2,
+            top_k=6,
+            capacity_factor=1.25,
+            expert_d_ff=1408,
+        ),
+        act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b-smoke",
+        family="moe",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=24,
+        d_ff=48,
+        vocab_size=269,
+        pattern=_PATTERN,
+        mla=MLAConfig(
+            kv_lora_rank=32,
+            qk_nope_head_dim=16,
+            qk_rope_head_dim=8,
+            v_head_dim=16,
+        ),
+        moe=MoEConfig(
+            num_experts=8,
+            num_shared_experts=2,
+            top_k=2,
+            capacity_factor=1.5,
+            expert_d_ff=48,
+        ),
+        act="silu",
+        tie_embeddings=False,
+        remat="none",
+    )

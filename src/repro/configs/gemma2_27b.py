@@ -1,0 +1,60 @@
+"""gemma2-27b — dense, local/global alternating, logit soft-capping.
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000.
+[arXiv:2408.00118; hf tier]
+"""
+
+from repro.models.config import (
+    DENSE_MLP,
+    GLOBAL_ATTN,
+    LOCAL_ATTN,
+    ModelConfig,
+)
+
+_PATTERN = ((LOCAL_ATTN, DENSE_MLP), (GLOBAL_ATTN, DENSE_MLP))
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b",
+        family="dense",
+        num_layers=46,  # 23 (local, global) pairs
+        d_model=4608,
+        num_heads=32,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab_size=256_000,
+        pattern=_PATTERN,
+        window=4096,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        rope_theta=10_000.0,
+        act="gelu",
+        scale_embeddings=True,
+        use_post_norms=True,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b-smoke",
+        family="dense",
+        num_layers=4,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=347,
+        pattern=_PATTERN,
+        window=8,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        act="gelu",
+        scale_embeddings=True,
+        use_post_norms=True,
+        tie_embeddings=True,
+        remat="none",
+    )

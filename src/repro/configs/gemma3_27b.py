@@ -1,0 +1,58 @@
+"""gemma3-27b — dense, 5:1 local:global interleaving, 128k context.
+
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144.
+[hf:google/gemma-3-1b-pt scaled per assignment; unverified tier]
+"""
+
+from repro.models.config import (
+    DENSE_MLP,
+    GLOBAL_ATTN,
+    LOCAL_ATTN,
+    ModelConfig,
+)
+
+_PATTERN = tuple([(LOCAL_ATTN, DENSE_MLP)] * 5 + [(GLOBAL_ATTN, DENSE_MLP)])
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b",
+        family="dense",
+        num_layers=62,  # 10 pattern blocks + 2 remainder local layers
+        d_model=5376,
+        num_heads=32,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=21504,
+        vocab_size=262_144,
+        pattern=_PATTERN,
+        window=1024,
+        rope_theta=1_000_000.0,
+        act="gelu",
+        scale_embeddings=True,
+        use_post_norms=True,
+        use_qk_norm=True,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b-smoke",
+        family="dense",
+        num_layers=8,  # one pattern block + 2 remainder
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=503,
+        pattern=_PATTERN,
+        window=8,
+        act="gelu",
+        scale_embeddings=True,
+        use_post_norms=True,
+        use_qk_norm=True,
+        tie_embeddings=True,
+        remat="none",
+    )

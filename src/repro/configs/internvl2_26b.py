@@ -1,0 +1,54 @@
+"""internvl2-26b — VLM: InternViT frontend (STUB) + InternLM2-20B backbone.
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+[arXiv:2404.16821; hf tier]
+
+Per the assignment, the ViT frontend is a stub: ``input_specs()`` supplies
+precomputed patch embeddings (B, 256, d_model) which the backbone prepends
+to the token sequence.  seq_len cells count the TOTAL sequence (patches +
+text).
+"""
+
+from repro.models.config import DENSE_MLP, GLOBAL_ATTN, ModelConfig
+
+_PATTERN = ((GLOBAL_ATTN, DENSE_MLP),)
+
+NUM_PATCHES = 256
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b",
+        family="vlm",
+        num_layers=48,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=92_553,
+        pattern=_PATTERN,
+        num_prefix_embeds=NUM_PATCHES,
+        rope_theta=1_000_000.0,
+        act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b-smoke",
+        family="vlm",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=331,
+        pattern=_PATTERN,
+        num_prefix_embeds=8,
+        act="silu",
+        tie_embeddings=False,
+        remat="none",
+    )

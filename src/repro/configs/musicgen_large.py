@@ -1,0 +1,54 @@
+"""musicgen-large — decoder-only over EnCodec tokens (4 codebooks).
+
+48L d_model=2048 32H d_ff=8192 vocab=2048 per codebook.
+[arXiv:2306.05284; hf tier]
+
+The EnCodec frontend is a STUB per the assignment: tokens are (B, S, 4)
+codebook ids; embeddings are summed across codebooks and the model emits
+one logit head per codebook.  Positional encoding uses RoPE instead of the
+original learned sinusoidal embeddings (hardware-adaptation note in
+DESIGN.md).
+"""
+
+from repro.models.config import DENSE_MLP, GLOBAL_ATTN, ModelConfig
+
+_PATTERN = ((GLOBAL_ATTN, DENSE_MLP),)
+
+NUM_CODEBOOKS = 4
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=2048,
+        pattern=_PATTERN,
+        num_codebooks=NUM_CODEBOOKS,
+        act="gelu",
+        tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large-smoke",
+        family="audio",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=61,
+        pattern=_PATTERN,
+        num_codebooks=NUM_CODEBOOKS,
+        act="gelu",
+        tie_embeddings=False,
+        remat="none",
+    )

@@ -1,0 +1,64 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE.
+
+32L d_model=4096 32H (GQA kv=8) d_ff(expert)=6400 vocab=32064.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf tier]
+"""
+
+from repro.models.config import (
+    GLOBAL_ATTN,
+    MOE_MLP,
+    MoEConfig,
+    ModelConfig,
+)
+
+_PATTERN = ((GLOBAL_ATTN, MOE_MLP),)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="phi3.5-moe-42b-a6.6b",
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=6400,
+        vocab_size=32_064,
+        pattern=_PATTERN,
+        moe=MoEConfig(
+            num_experts=16,
+            num_shared_experts=0,
+            top_k=2,
+            capacity_factor=1.25,
+            expert_d_ff=6400,
+        ),
+        rope_theta=10_000.0,
+        act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="phi3.5-moe-42b-smoke",
+        family="moe",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=96,
+        vocab_size=257,
+        pattern=_PATTERN,
+        moe=MoEConfig(
+            num_experts=4,
+            num_shared_experts=0,
+            top_k=2,
+            capacity_factor=1.5,
+            expert_d_ff=96,
+        ),
+        act="silu",
+        tie_embeddings=False,
+        remat="none",
+    )

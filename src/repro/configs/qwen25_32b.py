@@ -1,0 +1,47 @@
+"""qwen2.5-32b — dense GQA with QKV bias.
+
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064.
+[hf:Qwen/Qwen2.5-0.5B family scaled per assignment; hf tier]
+"""
+
+from repro.models.config import DENSE_MLP, GLOBAL_ATTN, ModelConfig
+
+_PATTERN = ((GLOBAL_ATTN, DENSE_MLP),)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-32b",
+        family="dense",
+        num_layers=64,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=27648,
+        vocab_size=152_064,
+        pattern=_PATTERN,
+        attn_bias=True,
+        rope_theta=1_000_000.0,
+        act="silu",
+        tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-32b-smoke",
+        family="dense",
+        num_layers=3,
+        d_model=80,
+        num_heads=5,
+        num_kv_heads=1,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=419,
+        pattern=_PATTERN,
+        attn_bias=True,
+        act="silu",
+        tie_embeddings=False,
+        remat="none",
+    )

@@ -1,0 +1,59 @@
+"""recurrentgemma-9b — Griffin hybrid: RG-LRU + local attention, 1 attn : 2 lru.
+
+38L d_model=4096 16H (GQA kv=1, i.e. MQA) d_ff=12288 vocab=256000.
+[arXiv:2402.19427; unverified tier]
+
+Sub-quadratic: local attention window 2048 + linear recurrences, so the
+long_500k decode cell RUNS for this architecture.
+"""
+
+from repro.models.config import (
+    DENSE_MLP,
+    LOCAL_ATTN,
+    RGLRU,
+    ModelConfig,
+    RecurrentConfig,
+)
+
+_PATTERN = ((RGLRU, DENSE_MLP), (RGLRU, DENSE_MLP), (LOCAL_ATTN, DENSE_MLP))
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        num_layers=38,  # 12 pattern blocks + 2 remainder RG-LRU layers
+        d_model=4096,
+        num_heads=16,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab_size=256_000,
+        pattern=_PATTERN,
+        window=2048,
+        recurrent=RecurrentConfig(lru_width=4096, conv_width=4),
+        act="gelu",
+        scale_embeddings=True,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke",
+        family="hybrid",
+        num_layers=5,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=311,
+        pattern=_PATTERN,
+        window=8,
+        recurrent=RecurrentConfig(lru_width=64, conv_width=4),
+        act="gelu",
+        scale_embeddings=True,
+        tie_embeddings=True,
+        remat="none",
+    )

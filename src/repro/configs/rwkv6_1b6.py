@@ -1,0 +1,55 @@
+"""rwkv6-1.6b (Finch) — attention-free SSM with data-dependent decay.
+
+24L d_model=2048 d_ff=7168 vocab=65536.  [arXiv:2404.05892; unverified tier]
+
+Attention-free and O(S): the long_500k decode cell RUNS.  The paper's
+attention-tiling mutations are inapplicable here; the WKV6 chunk kernel
+genome (chunk size, state dtype) is what the EvoEngineer tuner traverses
+instead (DESIGN.md §Arch-applicability).
+"""
+
+from repro.models.config import (
+    RWKV6,
+    RWKV_CHANNEL_MIX,
+    ModelConfig,
+    RecurrentConfig,
+)
+
+_PATTERN = ((RWKV6, RWKV_CHANNEL_MIX),)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b",
+        family="ssm",
+        num_layers=24,
+        d_model=2048,
+        num_heads=32,  # 2048 / head_dim 64
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=7168,
+        vocab_size=65_536,
+        pattern=_PATTERN,
+        recurrent=RecurrentConfig(rwkv_head_dim=64, rwkv_decay_lora=64),
+        act="relu",
+        tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b-smoke",
+        family="ssm",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=277,
+        pattern=_PATTERN,
+        recurrent=RecurrentConfig(rwkv_head_dim=16, rwkv_decay_lora=8),
+        act="relu",
+        tie_embeddings=False,
+        remat="none",
+    )

@@ -1,0 +1,40 @@
+"""EvoEngineer core: the paper's systematic LLM code-evolution framework.
+
+Decomposition (paper §4): two orthogonal components —
+  * traverse techniques  = Solution Guiding Layer (what information guides
+    the step: I1 task context, I2 historical solutions, I3 optimization
+    insights) + Prompt Engineering Layer (how it is serialized),
+  * population management = single-best / elite / islands.
+
+Method configurations (paper Table 3 + baselines):
+  EvoEngineer-Free, -Insight, -Full, EvoEngineer-Solution (EoH), FunSearch,
+  AI CUDA Engineer.
+"""
+
+from repro.core.solution import Solution, TokenLedger
+from repro.core.population import (
+    ElitePopulation,
+    IslandPopulation,
+    Population,
+    SingleBestPopulation,
+)
+from repro.core.traverse import GuidingConfig, InformationBundle, render_prompt
+from repro.core.methods import METHODS, MethodConfig, get_method
+from repro.core.engine import EvolutionEngine, RunResult
+
+__all__ = [
+    "ElitePopulation",
+    "EvolutionEngine",
+    "GuidingConfig",
+    "InformationBundle",
+    "IslandPopulation",
+    "METHODS",
+    "MethodConfig",
+    "Population",
+    "RunResult",
+    "SingleBestPopulation",
+    "Solution",
+    "TokenLedger",
+    "get_method",
+    "render_prompt",
+]

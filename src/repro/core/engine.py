@@ -1,0 +1,249 @@
+"""The evolution engine: ties traverse techniques, population management,
+proposer and evaluator into the paper's three-step loop (configure ->
+generate -> evaluate), with exact checkpoint/resume.
+
+Fault tolerance contract: engine state (population, insight store, RNG
+state, trial count, token ledger, history) serializes after every trial
+batch; `EvolutionEngine.resume()` continues a killed run to the identical
+trajectory (tested in tests/test_engine.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.insights import InsightRecord, InsightStore
+from repro.core.methods import MethodConfig
+from repro.core.solution import Solution, TokenLedger, count_tokens
+from repro.core.traverse import build_bundle, render_prompt
+from repro.evaluation.evaluator import Evaluator
+from repro.tasks.base import KernelTask
+
+if False:  # typing only — imported lazily in __init__ to avoid an import
+    from repro.proposers.base import Proposer  # noqa: F401  (cycle)
+
+
+@dataclasses.dataclass
+class RunResult:
+    task: str
+    method: str
+    seed: int
+    best: Optional[Solution]
+    history: List[Solution]
+    ledger: TokenLedger
+    baseline_us: float
+
+    @property
+    def best_speedup(self) -> float:
+        """Paper metric: 1.0 when no valid improvement was found."""
+        if self.best is None or not self.best.valid:
+            return 1.0
+        return max(1.0, self.baseline_us / self.best.runtime_us)
+
+    @property
+    def any_speedup(self) -> bool:
+        return self.best is not None and self.baseline_us / self.best.runtime_us > 1.0
+
+    @property
+    def compile_rate(self) -> float:
+        if not self.history:
+            return 0.0
+        return sum(1 for s in self.history if s.compile_ok) / len(self.history)
+
+    @property
+    def validity_rate(self) -> float:
+        if not self.history:
+            return 0.0
+        return sum(1 for s in self.history if s.valid) / len(self.history)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "task": self.task,
+            "method": self.method,
+            "seed": self.seed,
+            "best_speedup": self.best_speedup,
+            "compile_rate": self.compile_rate,
+            "validity_rate": self.validity_rate,
+            "tokens": self.ledger.to_dict(),
+            "baseline_us": self.baseline_us,
+            "best_runtime_us": self.best.runtime_us if self.best else None,
+        }
+
+
+class EvolutionEngine:
+    def __init__(
+        self,
+        task: KernelTask,
+        method: MethodConfig,
+        evaluator: Optional[Evaluator] = None,
+        proposer=None,
+        seed: int = 0,
+        checkpoint_dir: Optional[str] = None,
+        rag_pool: Optional[List[Tuple[str, str]]] = None,
+    ):
+        from repro.proposers.synthetic import SyntheticLLM  # lazy: cycle
+
+        self.task = task
+        self.method = method
+        self.evaluator = evaluator or Evaluator()
+        self.insights = InsightStore()
+        self.proposer = proposer or SyntheticLLM(self.insights)
+        if isinstance(self.proposer, SyntheticLLM):
+            self.proposer.insight_store = self.insights
+        self.seed = seed
+        self.checkpoint_dir = checkpoint_dir
+        self.rag_pool = rag_pool or []
+
+        self.population = method.make_population()
+        self.ledger = TokenLedger()
+        self.history: List[Solution] = []
+        self.trial = 0
+        self.rng = np.random.default_rng(
+            (seed, hash(task.name) % 2**31, hash(method.name) % 2**31)
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, max_trials: Optional[int] = None, checkpoint_every: int = 5) -> RunResult:
+        max_trials = max_trials or self.method.trials
+        baseline_us = self.evaluator.baseline_us(self.task)
+        # seed the population with the initial (naive) implementation — the
+        # optimization starting point, as in the paper's setup
+        if self.trial == 0 and self.population.best is None:
+            init = self._make_solution(
+                self.task.initial_source, self.task.naive_genome, "init", -1
+            )
+            init = self._evaluate(init, baseline_us)
+            self.population.tell(init)
+
+        while self.trial < max_trials:
+            op = self.method.schedule(self.trial)
+            parents = self.population.sample(self.rng, self.method.guiding.n_historical or 2)
+            bundle = build_bundle(
+                self.method.guiding,
+                self.task.task_context(),
+                parents,
+                self.insights.texts(),
+                op,
+                rag=self.rag_pool,
+            )
+            prompt = render_prompt(bundle, self.method.guiding)
+            proposal = self.proposer.propose(
+                self.task, prompt, bundle, self.method.guiding, self.method.fault, self.rng
+            )
+            sol = Solution(
+                source=proposal.source,
+                genome=proposal.genome,
+                insight=proposal.insight,
+                trial=self.trial,
+                operator=op,
+                parents=(proposal.parent_sid,) if proposal.parent_sid else (),
+            )
+            sol.tokens_in = count_tokens(prompt)
+            sol.tokens_out = proposal.tokens_out
+            self.ledger.charge(sol.tokens_in, sol.tokens_out)
+
+            sol = self._evaluate(sol, baseline_us)
+            self.history.append(sol)
+            self.population.tell(sol)
+            self._record_insight(sol, proposal)
+            self.trial += 1
+            if self.checkpoint_dir and self.trial % checkpoint_every == 0:
+                self.save_checkpoint()
+
+        if self.checkpoint_dir:
+            self.save_checkpoint()
+        return RunResult(
+            task=self.task.name,
+            method=self.method.name,
+            seed=self.seed,
+            best=self.population.best,
+            history=self.history,
+            ledger=self.ledger,
+            baseline_us=baseline_us,
+        )
+
+    # ------------------------------------------------------------------
+    def _make_solution(self, source, genome, op, trial) -> Solution:
+        return Solution(source=source, genome=genome, operator=op, trial=trial)
+
+    def _evaluate(self, sol: Solution, baseline_us: float) -> Solution:
+        res = self.evaluator.evaluate(self.task, sol.source)
+        sol.compile_ok = res.compile_ok
+        sol.correct = res.correct
+        sol.runtime_us = res.runtime_us
+        sol.error = res.error
+        if res.valid and res.runtime_us:
+            sol.speedup = baseline_us / res.runtime_us
+        return sol
+
+    def _record_insight(self, sol: Solution, proposal) -> None:
+        """Solution-insight pairs with MEASURED outcome (confirmed/refuted)."""
+        gain = 0.0
+        if sol.valid and sol.parents:
+            parent = next(
+                (h for h in self.history if h.sid == sol.parents[0]), None
+            )
+            if parent and parent.speedup and sol.speedup:
+                gain = sol.speedup - parent.speedup
+        elif sol.valid and sol.speedup:
+            gain = sol.speedup - 1.0
+        status = "confirmed" if gain > 0 else ("refuted" if sol.valid else "invalid")
+        text = f"{sol.insight} -> {status} ({gain:+.2f}x)"
+        self.insights.add(
+            InsightRecord(
+                text=text,
+                knob=proposal.knob if sol.valid else None,
+                choice=proposal.choice if sol.valid else None,
+                gain=gain,
+            )
+        )
+
+    # ------------------------------------------------------------------
+    # checkpoint / resume (fault tolerance)
+    # ------------------------------------------------------------------
+    def _ckpt_path(self) -> str:
+        safe = self.method.name.replace(" ", "_").replace("(", "").replace(")", "")
+        return os.path.join(
+            self.checkpoint_dir, f"{self.task.name}_{safe}_s{self.seed}.json"
+        )
+
+    def save_checkpoint(self) -> str:
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        state = {
+            "trial": self.trial,
+            "seed": self.seed,
+            "rng_state": self.rng.bit_generator.state,
+            "population": {
+                "kind": self.population.kind,
+                "state": self.population.state_dict(),
+            },
+            "insights": self.insights.state_dict(),
+            "ledger": self.ledger.to_dict(),
+            "history": [s.to_dict() for s in self.history],
+        }
+        path = self._ckpt_path()
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f)
+        os.replace(tmp, path)
+        return path
+
+    def resume(self) -> bool:
+        path = self._ckpt_path()
+        if not os.path.exists(path):
+            return False
+        with open(path) as f:
+            state = json.load(f)
+        self.trial = state["trial"]
+        self.rng.bit_generator.state = state["rng_state"]
+        self.population.load_state_dict(state["population"]["state"])
+        self.insights.load_state_dict(state["insights"])
+        self.ledger = TokenLedger(**state["ledger"])
+        self.history = [Solution.from_dict(d) for d in state["history"]]
+        return True

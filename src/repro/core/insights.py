@@ -1,0 +1,70 @@
+"""Optimization-insight store (I3).
+
+Insights are the proposer's stated rationales PLUS measured outcomes: after
+every evaluation the engine records "(change) -> (confirmed/refuted, delta)".
+EvoEngineer-Insight/-Full feed the most recent of these back through the
+guiding layer; the synthetic proposer additionally consumes the structured
+(knob, direction, gain) records to bias its sampling — the concrete
+mechanism by which I3 buys validity/exploitation, mirroring how a real LLM
+uses stated insights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class InsightRecord:
+    text: str
+    knob: Optional[str] = None  # which genome knob changed
+    choice: Any = None  # the value it changed to
+    gain: float = 0.0  # speedup delta vs parent (positive = better)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+class InsightStore:
+    def __init__(self, cap: int = 64):
+        self.cap = cap
+        self.records: List[InsightRecord] = []
+
+    def add(self, rec: InsightRecord) -> None:
+        self.records.append(rec)
+        del self.records[: -self.cap]
+
+    def texts(self) -> List[str]:
+        return [r.text for r in self.records]
+
+    def knob_bias(self) -> Dict[str, Dict[Any, float]]:
+        """Aggregate per-(knob, choice) average gain — the structured view
+        the synthetic proposer samples from."""
+        agg: Dict[str, Dict[Any, List[float]]] = {}
+        for r in self.records:
+            if r.knob is None:
+                continue
+            agg.setdefault(r.knob, {}).setdefault(_hashable(r.choice), []).append(r.gain)
+        return {
+            k: {c: sum(v) / len(v) for c, v in cs.items()} for k, cs in agg.items()
+        }
+
+    def state_dict(self):
+        return {"cap": self.cap, "records": [r.to_dict() for r in self.records]}
+
+    def load_state_dict(self, d):
+        self.cap = d["cap"]
+        self.records = [InsightRecord.from_dict(r) for r in d["records"]]
+
+
+def _hashable(v):
+    if isinstance(v, list):
+        return tuple(v)
+    if isinstance(v, dict):
+        return tuple(sorted(v.items()))
+    return v

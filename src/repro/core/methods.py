@@ -1,0 +1,169 @@
+"""Method configurations (paper Tables 2 & 3 + Appendix A.4).
+
+Every method = GuidingConfig (what information) + population factory (what
+is kept) + an operator schedule (what each trial asks for) + fault-model
+regime for the synthetic proposer.  Budgets follow the paper: 45 trials per
+kernel for every method.
+
+  EvoEngineer-Free      I1 only,        single-best, cheap prompts
+  EvoEngineer-Insight   I1+I3,          single-best
+  EvoEngineer-Full      I1+I2+I3,       elite(4)
+  EvoEngineer-Solution  I1+I2 (EoH),    elite(4), E1/E2/M1/M2 x 10 gens
+  FunSearch             I1+I2(2),       islands(5)
+  AI CUDA Engineer      I1+I2(5)+RAG,   single-best, staged
+                        Convert->Translate->Optimize(4x10)->Compose(5)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+from repro.core.population import (
+    ElitePopulation,
+    IslandPopulation,
+    Population,
+    SingleBestPopulation,
+)
+from repro.core.traverse import GuidingConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRegime:
+    """Synthetic-proposer fault calibration for one method.
+
+    Rates express how often an (simulated) LLM response is broken, as a
+    function of the information it saw — the paper's core observation is
+    that richer closed-world information raises validity (Table 4) while
+    pure exploration maximizes speedup headroom.
+    """
+
+    p_syntax: float = 0.10  # stage-1 failures (does not compile/trace)
+    p_semantic: float = 0.18  # stage-2 failures (wrong output)
+    explore: float = 0.5  # probability of a random-jump proposal vs local step
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodConfig:
+    name: str
+    guiding: GuidingConfig
+    make_population: Callable[[], Population]
+    trials: int = 45
+    # operator schedule: trial index -> operator string
+    schedule: Callable[[int], str] = lambda t: "propose"
+    fault: FaultRegime = FaultRegime()
+    # AICE: number of trailing compose/RAG trials
+    rag_trials: int = 0
+
+
+def _eoh_schedule(t: int) -> str:
+    # 5 init trials, then generations of E1, E2, M1, M2 (pop 4, 10 gens)
+    if t < 5:
+        return "e1"
+    return ("e1", "e2", "m1", "m2")[(t - 5) % 4]
+
+
+def _aice_schedule(t: int) -> str:
+    if t == 0:
+        return "convert"
+    if t == 1:
+        return "translate"
+    if t >= 40:
+        return "compose"
+    return "optimize"
+
+
+def _free() -> MethodConfig:
+    return MethodConfig(
+        name="EvoEngineer-Free",
+        guiding=GuidingConfig(task_context=True, n_historical=0, use_insights=False),
+        make_population=SingleBestPopulation,
+        schedule=lambda t: "propose",
+        # exploration-heavy, no grounding context -> lowest validity,
+        # widest search (paper: best speedups, worst validity)
+        fault=FaultRegime(p_syntax=0.16, p_semantic=0.26, explore=0.85),
+    )
+
+
+def _insight() -> MethodConfig:
+    return MethodConfig(
+        name="EvoEngineer-Insight",
+        guiding=GuidingConfig(task_context=True, n_historical=0, use_insights=True),
+        make_population=SingleBestPopulation,
+        schedule=lambda t: "propose",
+        fault=FaultRegime(p_syntax=0.10, p_semantic=0.17, explore=0.55),
+    )
+
+
+def _full() -> MethodConfig:
+    return MethodConfig(
+        name="EvoEngineer-Full",
+        guiding=GuidingConfig(task_context=True, n_historical=3, use_insights=True),
+        make_population=lambda: ElitePopulation(k=4),
+        schedule=lambda t: "propose",
+        # maximal grounding -> highest validity, conservative moves
+        fault=FaultRegime(p_syntax=0.045, p_semantic=0.10, explore=0.30),
+    )
+
+
+def _eoh() -> MethodConfig:
+    return MethodConfig(
+        name="EvoEngineer-Solution (EoH)",
+        guiding=GuidingConfig(task_context=True, n_historical=2, use_insights=False),
+        make_population=lambda: ElitePopulation(k=4),
+        schedule=_eoh_schedule,
+        fault=FaultRegime(p_syntax=0.11, p_semantic=0.20, explore=0.50),
+    )
+
+
+def _funsearch() -> MethodConfig:
+    return MethodConfig(
+        name="FunSearch",
+        guiding=GuidingConfig(task_context=True, n_historical=2, use_insights=False),
+        make_population=lambda: IslandPopulation(n_islands=5),
+        schedule=lambda t: "propose",
+        fault=FaultRegime(p_syntax=0.12, p_semantic=0.21, explore=0.60),
+    )
+
+
+def _aice() -> MethodConfig:
+    return MethodConfig(
+        name="AI CUDA Engineer",
+        guiding=GuidingConfig(
+            task_context=True,
+            n_historical=5,
+            use_insights=False,
+            cross_task_rag=5,
+            prompt_overhead=2.0,  # ensemble prompting + profiling feedback
+        ),
+        make_population=SingleBestPopulation,
+        schedule=_aice_schedule,
+        fault=FaultRegime(p_syntax=0.09, p_semantic=0.17, explore=0.45),
+        rag_trials=5,
+    )
+
+
+METHODS = {
+    "evoengineer-free": _free,
+    "evoengineer-insight": _insight,
+    "evoengineer-full": _full,
+    "eoh": _eoh,
+    "funsearch": _funsearch,
+    "aice": _aice,
+}
+
+DISPLAY_ORDER = [
+    "aice",
+    "funsearch",
+    "eoh",
+    "evoengineer-free",
+    "evoengineer-insight",
+    "evoengineer-full",
+]
+
+
+def get_method(name: str) -> MethodConfig:
+    key = name.lower()
+    if key not in METHODS:
+        raise KeyError(f"unknown method {name!r}; known: {sorted(METHODS)}")
+    return METHODS[key]()

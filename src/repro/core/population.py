@@ -1,0 +1,170 @@
+"""Population management strategies (paper §4.1.2).
+
+Three strategies, one ask/tell interface:
+  * SingleBestPopulation   — keep only the incumbent best (EvoEngineer-Free
+                             and -Insight).
+  * ElitePopulation(k)     — top-k by fitness (EvoEngineer-Full, EoH).
+  * IslandPopulation(n)    — FunSearch: independent islands, uniform island
+                             sampling, periodic reset of the worst half onto
+                             the global best.
+
+`sample(rng, n)` returns up to n parent Solutions for the guiding layer;
+`tell(solution)` folds an evaluated candidate in.  All state is plain data
+so the engine can checkpoint/restore it exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.solution import Solution
+
+
+class Population:
+    kind = "base"
+
+    def tell(self, sol: Solution) -> None:
+        raise NotImplementedError
+
+    def sample(self, rng: np.random.Generator, n: int) -> List[Solution]:
+        raise NotImplementedError
+
+    @property
+    def best(self) -> Optional[Solution]:
+        raise NotImplementedError
+
+    def state_dict(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+
+class SingleBestPopulation(Population):
+    kind = "single_best"
+
+    def __init__(self):
+        self._best: Optional[Solution] = None
+
+    def tell(self, sol: Solution) -> None:
+        if sol.valid and (self._best is None or sol.fitness < self._best.fitness):
+            self._best = sol
+
+    def sample(self, rng, n):
+        return [self._best] if self._best is not None else []
+
+    @property
+    def best(self):
+        return self._best
+
+    def state_dict(self):
+        return {"best": self._best.to_dict() if self._best else None}
+
+    def load_state_dict(self, d):
+        self._best = Solution.from_dict(d["best"]) if d.get("best") else None
+
+
+class ElitePopulation(Population):
+    kind = "elite"
+
+    def __init__(self, k: int = 4):
+        self.k = k
+        self._elite: List[Solution] = []
+
+    def tell(self, sol: Solution) -> None:
+        if not sol.valid:
+            return
+        if any(e.sid == sol.sid for e in self._elite):
+            return
+        self._elite.append(sol)
+        self._elite.sort(key=lambda s: s.fitness)
+        del self._elite[self.k :]
+
+    def sample(self, rng, n):
+        if not self._elite:
+            return []
+        idx = rng.permutation(len(self._elite))[:n]
+        return [self._elite[i] for i in sorted(idx)]
+
+    @property
+    def best(self):
+        return self._elite[0] if self._elite else None
+
+    def state_dict(self):
+        return {"k": self.k, "elite": [e.to_dict() for e in self._elite]}
+
+    def load_state_dict(self, d):
+        self.k = d["k"]
+        self._elite = [Solution.from_dict(e) for e in d["elite"]]
+
+
+class IslandPopulation(Population):
+    """FunSearch-style islands with periodic reset of the worst half."""
+
+    kind = "islands"
+
+    def __init__(self, n_islands: int = 5, per_island: int = 4, reset_period: int = 30):
+        self.n = n_islands
+        self.per = per_island
+        self.reset_period = reset_period
+        self._islands: List[List[Solution]] = [[] for _ in range(n_islands)]
+        self._tells = 0
+        self._next_island = 0
+
+    def current_island(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(self.n))
+
+    def tell(self, sol: Solution) -> None:
+        self._tells += 1
+        if sol.valid:
+            isl = self._islands[self._next_island]
+            if not any(e.sid == sol.sid for e in isl):
+                isl.append(sol)
+                isl.sort(key=lambda s: s.fitness)
+                del isl[self.per :]
+        if self.reset_period and self._tells % self.reset_period == 0:
+            self._reset_worst_half()
+
+    def _reset_worst_half(self) -> None:
+        scores = [
+            (isl[0].fitness if isl else float("inf"), i)
+            for i, isl in enumerate(self._islands)
+        ]
+        scores.sort()
+        survivors = [i for _, i in scores[: (self.n + 1) // 2]]
+        best = self.best
+        for _, i in scores[(self.n + 1) // 2 :]:
+            self._islands[i] = [best] if best is not None else []
+
+    def sample(self, rng, n):
+        self._next_island = self.current_island(rng)
+        isl = self._islands[self._next_island]
+        return isl[:n]
+
+    @property
+    def best(self):
+        cands = [isl[0] for isl in self._islands if isl]
+        return min(cands, key=lambda s: s.fitness) if cands else None
+
+    def state_dict(self):
+        return {
+            "n": self.n,
+            "per": self.per,
+            "reset_period": self.reset_period,
+            "tells": self._tells,
+            "next_island": self._next_island,
+            "islands": [[e.to_dict() for e in isl] for isl in self._islands],
+        }
+
+    def load_state_dict(self, d):
+        self.n = d["n"]
+        self.per = d["per"]
+        self.reset_period = d["reset_period"]
+        self._tells = d["tells"]
+        self._next_island = d["next_island"]
+        self._islands = [
+            [Solution.from_dict(e) for e in isl] for isl in d["islands"]
+        ]

@@ -1,0 +1,90 @@
+"""Solution and token-ledger records.
+
+A Solution is one candidate program: raw source text (the paper's search
+space S_text), plus the structured genome the synthetic proposer works in,
+plus evaluation outcome.  Fitness is runtime (lower is better); ``speedup``
+is relative to the task's initial implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Solution:
+    source: str
+    genome: Optional[Dict[str, Any]] = None
+    insight: Optional[str] = None
+
+    # evaluation outcome (two-stage g(p), then f(p))
+    compile_ok: Optional[bool] = None
+    correct: Optional[bool] = None
+    runtime_us: Optional[float] = None
+    speedup: Optional[float] = None
+    error: Optional[str] = None
+
+    # lineage / accounting
+    sid: str = ""
+    trial: int = -1
+    operator: str = ""
+    parents: Tuple[str, ...] = ()
+    tokens_in: int = 0
+    tokens_out: int = 0
+
+    def __post_init__(self):
+        if not self.sid:
+            self.sid = hashlib.sha1(self.source.encode()).hexdigest()[:12]
+
+    @property
+    def valid(self) -> bool:
+        return bool(self.compile_ok) and bool(self.correct)
+
+    @property
+    def fitness(self) -> float:
+        """Lower is better; invalid solutions are +inf."""
+        if not self.valid or self.runtime_us is None:
+            return float("inf")
+        return self.runtime_us
+
+    def brief(self) -> str:
+        st = "OK" if self.valid else ("COMPILE_FAIL" if not self.compile_ok else "WRONG")
+        sp = f" {self.speedup:.2f}x" if self.speedup else ""
+        return f"[{self.sid} t{self.trial} {self.operator}] {st}{sp}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Solution":
+        d = dict(d)
+        d["parents"] = tuple(d.get("parents") or ())
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class TokenLedger:
+    """Per-run token accounting (paper Fig. 4 reproduces from this)."""
+
+    tokens_in: int = 0
+    tokens_out: int = 0
+    calls: int = 0
+
+    def charge(self, tin: int, tout: int) -> None:
+        self.tokens_in += tin
+        self.tokens_out += tout
+        self.calls += 1
+
+    @property
+    def total(self) -> int:
+        return self.tokens_in + self.tokens_out
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def count_tokens(text: str) -> int:
+    """Cheap deterministic token estimate (~4 chars/token)."""
+    return max(1, len(text) // 4)

@@ -1,0 +1,118 @@
+"""Traverse techniques — the two-layer design (paper §4.1.1).
+
+Solution Guiding Layer: decides WHAT closed-world information enters a
+generation step — I1 task context, I2 historical solutions, I3 optimization
+insights (I4 open-world knowledge is future work in the paper; the AICE
+baseline's cross-task RAG is the one exception, modeled explicitly).
+
+Prompt Engineering Layer: decides HOW the bundle is serialized.  The same
+renderer feeds both the real-LLM proposers (as the literal prompt) and the
+token ledger (paper Fig. 4 measures exactly these bytes).  The synthetic
+proposer additionally receives the bundle structurally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.solution import Solution
+
+
+@dataclasses.dataclass(frozen=True)
+class GuidingConfig:
+    """Which information types the Solution Guiding Layer includes."""
+
+    task_context: bool = True  # I1
+    n_historical: int = 0  # I2: how many parent solutions enter the prompt
+    use_insights: bool = False  # I3
+    n_insights: int = 5
+    cross_task_rag: int = 0  # I4-ish: AICE Compose stage only
+    # prompt verbosity multiplier (AICE's ensemble prompting is ~2x)
+    prompt_overhead: float = 1.0
+
+
+@dataclasses.dataclass
+class InformationBundle:
+    task_context: str = ""
+    historical: List[Solution] = dataclasses.field(default_factory=list)
+    insights: List[str] = dataclasses.field(default_factory=list)
+    rag_solutions: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    operator: str = "propose"
+
+
+def build_bundle(
+    guiding: GuidingConfig,
+    task_context: str,
+    parents: List[Solution],
+    insights: List[str],
+    operator: str,
+    rag: Optional[List[Tuple[str, str]]] = None,
+) -> InformationBundle:
+    b = InformationBundle(operator=operator)
+    if guiding.task_context:
+        b.task_context = task_context
+    b.historical = parents[: guiding.n_historical]
+    if guiding.use_insights:
+        b.insights = insights[-guiding.n_insights :]
+    if guiding.cross_task_rag and rag:
+        b.rag_solutions = rag[: guiding.cross_task_rag]
+    return b
+
+
+# --------------------------------------------------------------------------
+# Prompt Engineering Layer
+# --------------------------------------------------------------------------
+_OPERATOR_INSTRUCTIONS = {
+    "propose": "Propose an optimized implementation of the kernel below.",
+    "e1": "Create a NEW implementation as different as possible from the "
+    "given ones while preserving semantics.",
+    "e2": "Combine the ideas of the given implementations into a better one.",
+    "m1": "Modify the given implementation to improve performance.",
+    "m2": "Tune the parameters (tile sizes, dtypes, loop structure) of the "
+    "given implementation.",
+    "convert": "Convert the reference specification into a working kernel.",
+    "translate": "Translate the kernel to an equivalent faster formulation.",
+    "optimize": "Optimize the kernel using the provided high-performing "
+    "examples and profiling feedback.",
+    "compose": "Compose optimizations retrieved from related kernels into "
+    "this one.",
+}
+
+
+def render_prompt(bundle: InformationBundle, guiding: GuidingConfig) -> str:
+    """Serialize the bundle.  Structure follows common prompt practice
+    (explicit sections, explicit instructions)."""
+    parts: List[str] = []
+    parts.append("## Instruction\n" + _OPERATOR_INSTRUCTIONS[bundle.operator])
+    if bundle.task_context:
+        parts.append("## Task\n" + bundle.task_context)
+    if bundle.historical:
+        lines = []
+        for i, sol in enumerate(bundle.historical):
+            fit = f"{sol.runtime_us:.1f}us" if sol.runtime_us else "n/a"
+            lines.append(f"### Solution {i} (runtime {fit})\n```python\n{sol.source}\n```")
+        parts.append("## High-quality solutions so far\n" + "\n".join(lines))
+    if bundle.insights:
+        parts.append(
+            "## Optimization insights\n"
+            + "\n".join(f"- {i}" for i in bundle.insights)
+        )
+    if bundle.rag_solutions:
+        lines = [
+            f"### Retrieved from task {name}\n```python\n{src}\n```"
+            for name, src in bundle.rag_solutions
+        ]
+        parts.append("## Related kernels (retrieval)\n" + "\n".join(lines))
+    parts.append(
+        "## Output format\nReturn a single Python function named `kernel` "
+        "using jax.numpy only, plus a one-line insight explaining the "
+        "optimization rationale."
+    )
+    text = "\n\n".join(parts)
+    if guiding.prompt_overhead > 1.0:
+        # ensemble prompting / extra framing (AICE): modeled as padding that
+        # is charged to the ledger but carries no extra information
+        pad = int(len(text) * (guiding.prompt_overhead - 1.0))
+        text = text + "\n## Additional framing\n" + ("." * pad)
+    return text

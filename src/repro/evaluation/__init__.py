@@ -1,0 +1,5 @@
+"""Two-stage evaluation: compile check -> functional test -> performance."""
+
+from repro.evaluation.evaluator import EvalConfig, EvalResult, Evaluator
+
+__all__ = ["EvalConfig", "EvalResult", "Evaluator"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel ships as a triple:
+    <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling
+    ops.py     — jit'd dispatch wrappers (backend="xla" | "pallas_interpret")
+    ref.py     — pure-jnp oracles the tests sweep against
+
+Block shapes are genome knobs: launch/autotune.py drives the EvoEngineer
+engine over them with the TPU v5e cost model as f(p) (see DESIGN.md §3 —
+the paper's own future-work item, "co-evolving kernels with their
+compilation parameters").
+"""
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,69 @@
+"""Pallas blocked matmul with fp32 VMEM accumulator.
+
+Grid (M/bm, N/bn, K/bk), K innermost and sequential: each (i, j) output tile
+is revisited across K steps accumulating in VMEM scratch — the canonical MXU
+tiling.  (bm, bn, bk) are the kernel genome; 128-multiples keep the 128x128
+systolic array saturated and the (bm*bk + bk*bn + bm*bn) working set must
+fit VMEM (checked by `vmem_bytes`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_scr, *, nk):
+    k_i = pl.program_id(2)
+
+    @pl.when(k_i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_i == nk - 1)
+    def _done():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 2) -> int:
+    return (bm * bk + bk * bn) * itemsize + bm * bn * 4
+
+
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    nk = k // bk
+    kernel = functools.partial(_mm_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

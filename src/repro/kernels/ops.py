@@ -1,0 +1,72 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+backend="pallas_interpret" executes the kernel bodies in Python on CPU
+(correctness); on a real TPU the same code path runs with interpret=False.
+backend="xla" falls back to the pure-jnp reference — the path the dry-run
+and CPU smoke tests compile.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.blocked_matmul import matmul_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rglru import rglru_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.wkv6 import wkv6_pallas
+
+_INTERPRET = True  # flip to False on real TPU hardware
+
+
+def _dispatch(backend: str):
+    if backend not in ("xla", "pallas_interpret", "pallas"):
+        raise ValueError(backend)
+    return backend != "xla"
+
+
+@functools.partial(jax.jit, static_argnames=("logit_cap", "block_q", "block_k", "backend"))
+def flash_attention(q, k, v, *, logit_cap=None, block_q=128, block_k=128, backend="pallas_interpret"):
+    if _dispatch(backend):
+        return flash_attention_pallas(
+            q, k, v, logit_cap=logit_cap, block_q=block_q, block_k=block_k,
+            interpret=_INTERPRET,
+        )
+    return _ref.flash_attention_ref(q, k, v, logit_cap=logit_cap)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "backend"))
+def matmul(a, b, *, block_m=256, block_n=256, block_k=256, backend="pallas_interpret"):
+    if _dispatch(backend):
+        return matmul_pallas(
+            a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=_INTERPRET,
+        )
+    return _ref.matmul_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "backend"))
+def rmsnorm(x, scale, *, eps=1e-6, block_rows=128, backend="pallas_interpret"):
+    if _dispatch(backend):
+        return rmsnorm_pallas(
+            x, scale, eps=eps, block_rows=block_rows, interpret=_INTERPRET
+        )
+    return _ref.rmsnorm_ref(x, scale, eps=eps)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def wkv6(r, k, v, log_w, u, *, chunk=64, backend="pallas_interpret"):
+    if _dispatch(backend):
+        return wkv6_pallas(r, k, v, log_w, u, chunk=chunk, interpret=_INTERPRET)
+    return _ref.wkv6_ref(r, k, v, log_w, u, chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def rglru(a, b, *, chunk=64, backend="pallas_interpret"):
+    if _dispatch(backend):
+        return rglru_pallas(a, b, chunk=chunk, interpret=_INTERPRET)
+    return _ref.rglru_ref(a, b)

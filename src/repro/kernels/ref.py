@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, logit_cap: Optional[float] = None):
+    from repro.models.attention import full_attention
+
+    return full_attention(q, k, v, causal=True, logit_cap=logit_cap)
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def wkv6_ref(r, k, v, log_w, u, *, chunk: int = 16):
+    from repro.models.recurrent import wkv6_chunked
+
+    out, _ = wkv6_chunked(r, k, v, log_w, u, chunk=chunk)
+    return out
+
+
+def wkv6_sequential_ref(r, k, v, log_w, u):
+    """Step-by-step recurrence — the ground-truth oracle."""
+    from repro.models.recurrent import wkv6_step
+
+    b, s, h, kd = r.shape
+    state = jnp.zeros((b, h, kd, kd), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, state = wkv6_step(
+            r[:, t : t + 1], k[:, t : t + 1], v[:, t : t + 1],
+            log_w[:, t : t + 1], u, state,
+        )
+        outs.append(o[:, 0])
+    return jnp.stack(outs, axis=1)
+
+
+def rglru_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t via associative scan."""
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,72 @@
+"""Pallas RG-LRU linear-recurrence scan.
+
+Grid (B, S/chunk) with the chunk axis sequential and the hidden state h in
+VMEM scratch.  Within a chunk the recurrence h_t = a_t * h_{t-1} + b_t runs
+as a log2(C)-step Blelloch-style doubling over VMEM tiles (vectorized over
+the width dim on the VPU), so the sequential depth is log(C) rather than C.
+`chunk` is the genome knob.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_scr, *, chunk):
+    c_i = pl.program_id(1)
+
+    @pl.when(c_i == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)  # (C, W)
+    b = b_ref[0].astype(jnp.float32)
+
+    # inclusive scan of the affine recurrence by doubling:
+    # (A, B) composed with shift-by-2^k of itself
+    steps = int(math.log2(chunk))
+    A, B = a, b
+    for k in range(steps):
+        sh = 1 << k
+        A_prev = jnp.concatenate([jnp.ones((sh, A.shape[1]), A.dtype), A[:-sh]], 0)
+        B_prev = jnp.concatenate([jnp.zeros((sh, B.shape[1]), B.dtype), B[:-sh]], 0)
+        B = A * B_prev + B
+        A = A * A_prev
+    # fold in the carried state: h_t = A_t * h_in + B_t
+    out = A * h_scr[...] + B
+    h_scr[...] = out[-1]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def rglru_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Linear recurrence h_t = a_t*h_{t-1} + b_t.  a, b: (B, S, W) -> (B, S, W)."""
+    bsz, s, w = a.shape
+    chunk = min(chunk, s)
+    while s % chunk or (chunk & (chunk - 1)):
+        chunk //= 2
+    nc = s // chunk
+    kernel = functools.partial(_rglru_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, w), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, w), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, w), lambda bi, ci: (bi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

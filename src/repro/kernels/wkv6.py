@@ -1,0 +1,103 @@
+"""Pallas chunked WKV6 (RWKV6 linear attention with data-dependent decay).
+
+Grid (B*H, S/chunk) with the chunk axis sequential: the (K x K) state matrix
+lives in VMEM scratch and is carried across chunk steps — the TPU-native
+version of the recurrence, replacing CUDA's per-warp state registers with
+VMEM persistence (hardware-adaptation note in DESIGN.md).
+
+Per chunk the kernel computes the same math as models/recurrent.wkv6_chunked:
+inter-chunk term through the carried state, intra-chunk lower-triangular
+attention with decay ratios, and the state update — all MXU-shaped matmuls.
+`chunk` is the kernel genome (VMEM working set ~ 5*C*K + K*K fp32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_scr, *, chunk):
+    c_i = pl.program_id(1)
+
+    @pl.when(c_i == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0].astype(jnp.float32)  # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (1, K) bonus
+
+    cum = jnp.cumsum(lw, axis=0)
+    cum_excl = cum - lw
+    total = cum[-1:, :]
+
+    state = state_scr[...]
+    r_dec = r * jnp.exp(cum_excl)
+    o_inter = jax.lax.dot_general(
+        r_dec, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    k_dec = k * jnp.exp(jnp.minimum(-cum, 30.0))
+    m = jax.lax.dot_general(
+        r_dec, k_dec, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    idx_r = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    idx_c = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m = jnp.where(idx_r > idx_c, m, 0.0)
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)
+    o_intra = jax.lax.dot_general(
+        m, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + diag * v
+
+    k_state = k * jnp.exp(total - cum)
+    state_scr[...] = jnp.exp(total).T * state + jax.lax.dot_general(
+        k_state, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0] = (o_inter + o_intra).astype(o_ref.dtype)
+
+
+def wkv6_pallas(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    log_w: jax.Array,
+    u: jax.Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """r/k/v/log_w: (B, S, H, K); u: (H, K).  Returns (B, S, H, K) fp32."""
+    b, s, h, kd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, kd)
+
+    rf, kf, vf, lwf = flat(r), flat(k), flat(v), flat(log_w)
+    uf = jnp.broadcast_to(u[None, :, :], (b, h, kd)).reshape(b * h, 1, kd)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1, kd), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, kd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((kd, kd), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, lwf, uf)
+    return out.reshape(b, h, s, kd).transpose(0, 2, 1, 3)

@@ -1,0 +1,382 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first two lines, before any jax-importing module:
+# jax locks the device count at first init, and the dry-run needs 512
+# placeholder host devices to build the production meshes.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  * builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  * lowers the right step function (train_step for train cells, prefill /
+    serve_step for inference cells) against ShapeDtypeStruct inputs with the
+    sharding rules from parallel/sharding.py,
+  * compiles, records memory_analysis() + trip-corrected cost analysis
+    (launch/hlo_analysis.py) + collective wire bytes,
+  * writes one JSON per cell under --out (benchmarks/roofline.py and
+    EXPERIMENTS.md consume these).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b \
+      --shape train_4k --mesh multi                           # one cell
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALIASES, ARCHS, get_config, get_shape
+from repro.launch import mesh as mesh_lib
+from repro.launch.specs import input_specs
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.models import config as C
+from repro.models.transformer import forward, param_specs
+from repro.parallel import sharding as sh
+from repro.serve.engine import make_decode_step
+from repro.train.optim import adamw
+from repro.train.steps import TrainState, init_train_state, make_train_step
+
+from jax.sharding import PartitionSpec as P
+
+
+def _opt_state_specs(param_spec_tree):
+    return {"mu": param_spec_tree, "nu": param_spec_tree}
+
+
+def count_params(cfg: C.ModelConfig) -> Dict[str, float]:
+    """Total and active parameter counts (active < total only for MoE)."""
+    specs = param_specs(cfg)
+    total = sum(int(np_prod(l.shape)) for l in jax.tree.leaves(specs))
+    active = total
+    if cfg.moe is not None:
+        flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+        routed = 0
+        for keypath, leaf in flat:
+            path = "/".join(sh._key_str(k) for k in keypath)
+            if ("mlp/w_gate" in path or "mlp/w_up" in path or "mlp/w_down" in path) and (
+                "shared" not in path
+            ) and leaf.ndim >= 3:
+                routed += int(np_prod(leaf.shape))
+        active = total - routed + int(routed * cfg.moe.top_k / cfg.moe.num_experts)
+    return {"total": float(total), "active": float(active)}
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def model_flops(cfg: C.ModelConfig, shape: C.ShapeConfig, counts) -> float:
+    """6*N*D for training, 2*N*D for prefill, 2*N*B for decode (one token)."""
+    n = counts["active"]
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+# --------------------------------------------------------------------------
+# Step builders (lower targets)
+# --------------------------------------------------------------------------
+def _bf16_params(p_specs):
+    """Serving weights are bf16 (production checkpoints); fp32 stays for
+    small norm scales where it matters numerically -- here we cast all."""
+    import jax.numpy as _jnp
+
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, _jnp.bfloat16)
+        if s.dtype == _jnp.float32
+        else s,
+        p_specs,
+    )
+
+
+def build_train_target(cfg: C.ModelConfig, shape: C.ShapeConfig, mesh, microbatches: int = 1):
+    specs = input_specs(cfg, shape)
+    p_specs = param_specs(cfg)
+    p_shard = sh.param_sharding(mesh, p_specs)
+    opt = adamw(1e-4)
+    step_fn = make_train_step(cfg, opt, microbatches=microbatches)
+
+    state_specs = jax.eval_shape(
+        lambda p: init_train_state(p, opt), p_specs
+    )
+    state_shard = TrainState(
+        params=p_shard, opt_state=_opt_state_specs(p_shard), step=P()
+    )
+    batch_shard = sh.activation_specs(mesh, specs)
+
+    in_shardings = (
+        TrainState(p_shard, _opt_state_specs(p_shard), P()),
+        batch_shard,
+    )
+    out_shardings = (
+        TrainState(p_shard, _opt_state_specs(p_shard), P()),
+        None,  # metrics: let the compiler place scalars
+    )
+    args = (state_specs, specs)
+    return step_fn, args, in_shardings, out_shardings
+
+
+def build_prefill_target(cfg: C.ModelConfig, shape: C.ShapeConfig, mesh):
+    specs = input_specs(cfg, shape)
+    p_specs = _bf16_params(param_specs(cfg))
+    p_shard = sh.param_sharding(mesh, p_specs)
+    batch_shard = sh.activation_specs(mesh, specs)
+
+    # inference: no remat needed
+    infer_cfg = dataclasses.replace(cfg, remat="none")
+
+    def prefill_fn(params, batch):
+        logits, _, cache = forward(
+            infer_cfg, params, batch["tokens"],
+            image_embeds=batch.get("image_embeds"), return_cache=True,
+            last_only=True,
+        )
+        return logits[:, -1], cache
+
+    out_shape = jax.eval_shape(lambda p, b: prefill_fn(p, b), p_specs, specs)
+    logits_shape, cache_shape = out_shape
+    cache_shard = sh.cache_specs_sharding(mesh, cache_shape)
+    logits_rule = (sh.DP,) + (None,) * (len(logits_shape.shape) - 2) + (sh.TP,)
+    logits_spec = sh._fit(mesh, logits_shape.shape, logits_rule)
+    in_shardings = (p_shard, batch_shard)
+    out_shardings = (logits_spec, cache_shard)
+    args = (p_specs, specs)
+    return prefill_fn, args, in_shardings, out_shardings
+
+
+def build_decode_target(cfg: C.ModelConfig, shape: C.ShapeConfig, mesh):
+    specs = input_specs(cfg, shape)
+    p_specs = _bf16_params(param_specs(cfg))
+    p_shard = sh.param_sharding(mesh, p_specs)
+    infer_cfg = dataclasses.replace(cfg, remat="none")
+    decode_fn = make_decode_step(infer_cfg)
+
+    cache_shard = sh.cache_specs_sharding(mesh, specs["cache"])
+    tok_shard = sh.activation_specs(mesh, {"tokens": specs["tokens"]})["tokens"]
+
+    def step(params, cache, tokens, pos):
+        return decode_fn(params, cache, tokens, pos)
+
+    logits_shape = jax.eval_shape(
+        step, p_specs, specs["cache"], specs["tokens"], specs["pos"]
+    )[0]
+    logits_rule = (sh.DP,) + (None,) * (len(logits_shape.shape) - 2) + (sh.TP,)
+    logits_spec = sh._fit(mesh, logits_shape.shape, logits_rule)
+    in_shardings = (p_shard, cache_shard, tok_shard, P())
+    out_shardings = (logits_spec, cache_shard)
+    args = (p_specs, specs["cache"], specs["tokens"], specs["pos"])
+    return step, args, in_shardings, out_shardings
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_dev = np_prod(mesh.devices.shape)
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch}_{shape_name}_{mesh_name}"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": n_dev, "mode": shape.mode,
+    }
+
+    if shape.name == "long_500k" and not cfg.is_sub_quadratic():
+        rec["status"] = "skip"
+        rec["reason"] = "full-attention architecture; O(L^2) at 524k (DESIGN.md)"
+        _write(out_dir, cell_id, rec)
+        return rec
+
+    try:
+        from repro.parallel.act_sharding import activation_sharding
+
+        # HBM-fit escalation: when the per-device peak exceeds the v5e
+        # budget on a train cell, raise the gradient-accumulation
+        # microbatch count (the standard production lever) and recompile.
+        microbatches = 1
+        seq_parallel = False
+        counts_total = count_params(cfg)["total"]
+        attempts = []
+        while True:
+            if shape.mode == "train":
+                fn, args, in_sh, out_sh = build_train_target(
+                    cfg, shape, mesh, microbatches=microbatches
+                )
+            elif shape.mode == "prefill":
+                fn, args, in_sh, out_sh = build_prefill_target(cfg, shape, mesh)
+            else:
+                fn, args, in_sh, out_sh = build_decode_target(cfg, shape, mesh)
+
+            donate = (
+                (0,) if shape.mode == "train" else ((1,) if shape.mode == "decode" else ())
+            )
+            t0 = time.time()
+            with jax.set_mesh(mesh), activation_sharding(
+                mesh, seq_parallel=seq_parallel
+            ):
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=in_sh,
+                    out_shardings=out_sh,
+                    donate_argnums=donate,
+                ).lower(*args)
+                t1 = time.time()
+                compiled = lowered.compile()
+            t2 = time.time()
+
+            ma0 = compiled.memory_analysis()
+            peak = (
+                ma0.argument_size_in_bytes
+                + ma0.output_size_in_bytes
+                + ma0.temp_size_in_bytes
+                - getattr(ma0, "alias_size_in_bytes", 0)  # donated buffers
+            ) / 2**30
+            attempts.append(
+                {
+                    "microbatches": microbatches,
+                    "seq_parallel": seq_parallel,
+                    "peak_gib": peak,
+                }
+            )
+            local_batch = shape.global_batch * mesh.shape["model"] // n_dev
+            mb_maxed = microbatches >= min(local_batch, 64)
+            if shape.mode != "train" or peak <= 15.0:
+                break
+            # ZeRO-3 weight-gather traffic scales with the microbatch count,
+            # so sequence-parallel residuals (cheap per-layer collectives)
+            # engage BEFORE pushing microbatches past 8 (§Perf iteration 5)
+            # Measured trade (EXPERIMENTS.md §Perf iters 5/7): seq-parallel
+            # residuals beat extra grad-accum for mid-size models (qwen:
+            # coll 42.8->30.4s) but trigger pathological SPMD resharding at
+            # deepseek-67b scale (coll 78->452s).  Heuristic: sp-first only
+            # under 40B params.
+            sp_first = counts_total <= 4e10
+            mb_cap = (
+                8 if (sp_first and not seq_parallel) else min(local_batch, 64)
+            )
+            if sp_first and microbatches >= 8 and not seq_parallel:
+                seq_parallel = True
+            elif microbatches < mb_cap:
+                factor = max(2, 2 ** math.ceil(math.log2(peak / 12.0)))
+                microbatches = min(microbatches * factor, mb_cap)
+            elif not seq_parallel:
+                seq_parallel = True  # last resort for the big models
+            else:
+                break
+        rec["microbatches"] = microbatches
+        rec["seq_parallel"] = seq_parallel
+        rec["hbm_fit_attempts"] = attempts
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gib": ma.argument_size_in_bytes / 2**30,
+            "output_gib": ma.output_size_in_bytes / 2**30,
+            "temp_gib": ma.temp_size_in_bytes / 2**30,
+            "alias_gib": getattr(ma, "alias_size_in_bytes", 0) / 2**30,
+            "code_gib": ma.generated_code_size_in_bytes / 2**30,
+            "peak_gib": (
+                ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+                - getattr(ma, "alias_size_in_bytes", 0)
+            ) / 2**30,
+        }
+        rec["fits_hbm16"] = rec["memory"]["peak_gib"] <= 16.0
+        rec["timings"] = {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+        analysis = analyze_compiled(compiled, n_dev)
+        rec["cost"] = analysis
+
+        counts = count_params(cfg)
+        rec["params"] = counts
+        mf = model_flops(cfg, shape, counts)
+        rec["model_flops"] = mf
+
+        # roofline terms (per device; HLO costs are already per-device)
+        flops_t = analysis["flops"] / mesh_lib.PEAK_FLOPS_BF16
+        mem_t = analysis["bytes_accessed"] / mesh_lib.HBM_BW
+        coll_t = analysis["wire_bytes"] / mesh_lib.ICI_BW
+        dominant = max(
+            ("compute", flops_t), ("memory", mem_t), ("collective", coll_t),
+            key=lambda kv: kv[1],
+        )[0]
+        rec["roofline"] = {
+            "compute_s": flops_t,
+            "memory_s": mem_t,
+            "collective_s": coll_t,
+            "dominant": dominant,
+            "bound_s": max(flops_t, mem_t, coll_t),
+            "model_vs_hlo_flops": mf / max(analysis["flops"] * n_dev, 1.0),
+        }
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _write(out_dir, cell_id, rec)
+    return rec
+
+
+def _write(out_dir: str, cell_id: str, rec: Dict[str, Any]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="assignment id or module name")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = [ALIASES.get(args.arch, args.arch)] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in C.ALL_SHAPES]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, multi, args.out)
+                dt = time.time() - t0
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skip"
+                n_err += status == "error"
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f"peak={rec['memory']['peak_gib']:.2f}GiB "
+                        f"dom={r['dominant']} bound={r['bound_s']*1e3:.2f}ms"
+                    )
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(
+                    f"[{status:5s}] {arch:22s} {shape_name:12s} {mesh_name:6s} "
+                    f"({dt:5.1f}s) {extra}",
+                    flush=True,
+                )
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skip={n_skip} error={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving driver: batched generation with the ServeEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
+        --batch 4 --prompt-len 16 --steps 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALIASES, get_config
+from repro.models.transformer import init_params
+from repro.serve.engine import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(ALIASES.get(args.arch, args.arch), smoke=args.smoke)
+    params = init_params(jax.random.key(args.seed), cfg)
+    engine = ServeEngine(
+        cfg, params, max_len=args.prompt_len + args.steps + cfg.num_prefix_embeds,
+        temperature=args.temperature,
+    )
+    key = jax.random.key(args.seed + 1)
+    shape = (args.batch, args.prompt_len)
+    if cfg.num_codebooks > 1:
+        shape = shape + (cfg.num_codebooks,)
+    prompt2d = jax.random.randint(key, shape[:2], 0, cfg.vocab_size)
+    kwargs = {}
+    if cfg.num_prefix_embeds:
+        kwargs["image_embeds"] = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.num_prefix_embeds, cfg.d_model), jnp.float32
+        )
+
+    t0 = time.time()
+    out = engine.generate(prompt2d, steps=args.steps, key=key, **kwargs)
+    dt = time.time() - t0
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.steps / dt:.1f} tok/s incl. compile)")
+    print("sample row:", out[0, : args.prompt_len + 8].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+train_step / prefill_step / serve_step against these.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as C
+from repro.models.transformer import cache_specs
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: C.ModelConfig, shape: C.ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    text_s = s - cfg.num_prefix_embeds  # seq cells count the total sequence
+    tok_shape = (b, text_s) if cfg.num_codebooks == 1 else (b, text_s, cfg.num_codebooks)
+    specs = {
+        "tokens": sds(tok_shape, jnp.int32),
+        "targets": sds(tok_shape, jnp.int32),
+    }
+    if cfg.num_prefix_embeds > 0:
+        specs["image_embeds"] = sds(
+            (b, cfg.num_prefix_embeds, cfg.d_model), jnp.float32
+        )
+    return specs
+
+
+def prefill_input_specs(cfg: C.ModelConfig, shape: C.ShapeConfig) -> Dict[str, Any]:
+    specs = train_input_specs(cfg, shape)
+    del specs["targets"]
+    return specs
+
+
+def decode_input_specs(cfg: C.ModelConfig, shape: C.ShapeConfig) -> Dict[str, Any]:
+    """One new token against a cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, 1) if cfg.num_codebooks == 1 else (b, 1, cfg.num_codebooks)
+    cache = jax.eval_shape(lambda: cache_specs(cfg, b, s))
+    return {
+        "tokens": sds(tok_shape, jnp.int32),
+        "cache": cache,
+        "pos": sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: C.ModelConfig, shape: C.ShapeConfig) -> Dict[str, Any]:
+    if shape.mode == "train":
+        return train_input_specs(cfg, shape)
+    if shape.mode == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.mode == "decode":
+        return decode_input_specs(cfg, shape)
+    raise ValueError(shape.mode)

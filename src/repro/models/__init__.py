@@ -1,0 +1,28 @@
+"""Model definitions for the 10 assigned architectures.
+
+A single pattern-block transformer (`transformer.py`) covers every family:
+mixers (global/local attention, MLA, RG-LRU, RWKV6) and MLPs (dense gated,
+MoE, RWKV channel-mix) are selected per pattern-unit from the ModelConfig.
+"""
+
+from repro.models.config import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    RecurrentConfig,
+)
+from repro.models.transformer import (
+    Transformer,
+    init_params,
+    param_specs,
+)
+
+__all__ = [
+    "MLAConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "RecurrentConfig",
+    "Transformer",
+    "init_params",
+    "param_specs",
+]

@@ -1,0 +1,189 @@
+"""Model configuration dataclasses.
+
+Every assigned architecture is expressed as a ModelConfig.  The transformer is
+built from a repeating *pattern* of units (e.g. 5 local-attention layers
+followed by 1 global-attention layer for gemma3); the model scans over
+`num_layers // len(pattern)` stacked pattern-blocks and applies the remainder
+`num_layers % len(pattern)` units unstacked.  This keeps the HLO small (one
+block body) without lax.switch branching, so `cost_analysis()` FLOPs are exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# Mixer kinds usable inside a pattern.
+GLOBAL_ATTN = "global_attn"
+LOCAL_ATTN = "local_attn"
+MLA_ATTN = "mla_attn"
+RGLRU = "rglru"
+RWKV6 = "rwkv6"
+
+MIXER_KINDS = (GLOBAL_ATTN, LOCAL_ATTN, MLA_ATTN, RGLRU, RWKV6)
+
+# MLP kinds.
+DENSE_MLP = "dense"
+MOE_MLP = "moe"
+RWKV_CHANNEL_MIX = "rwkv_cmix"
+
+MLP_KINDS = (DENSE_MLP, MOE_MLP, RWKV_CHANNEL_MIX)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Token-choice top-k mixture of experts with shared experts."""
+
+    num_experts: int = 64
+    num_shared_experts: int = 2
+    top_k: int = 6
+    capacity_factor: float = 1.25
+    # d_ff of each routed expert (shared experts use the same width scaled by
+    # num_shared_experts, matching DeepSeek's layout).
+    expert_d_ff: int = 1408
+    router_noise: float = 0.0
+    aux_loss_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentConfig:
+    """RG-LRU (Griffin/RecurrentGemma) and RWKV6 hyperparameters."""
+
+    lru_width: Optional[int] = None  # defaults to d_model when None
+    conv_width: int = 4
+    rwkv_head_dim: int = 64
+    rwkv_decay_lora: int = 64
+    rwkv_gate_lora: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # Repeating pattern of (mixer, mlp) units; cycled to cover num_layers.
+    pattern: Tuple[Tuple[str, str], ...] = ((GLOBAL_ATTN, DENSE_MLP),)
+
+    # Attention details.
+    attn_bias: bool = False  # qwen2.5-style QKV bias
+    attn_logit_softcap: Optional[float] = None  # gemma2
+    final_logit_softcap: Optional[float] = None  # gemma2
+    window: Optional[int] = None  # sliding window for local_attn units
+    rope_theta: float = 10_000.0
+    rope_scaling: float = 1.0
+
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    recurrent: Optional[RecurrentConfig] = None
+
+    # Modality stubs.  num_prefix_embeds > 0 prepends precomputed embeddings
+    # (ViT patches for VLM).  num_codebooks > 1 sums codebook embeddings and
+    # emits one logit head per codebook (EnCodec tokens for audio).
+    num_prefix_embeds: int = 0
+    num_codebooks: int = 1
+
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    act: str = "silu"  # silu | gelu
+    # Scale token embeddings by sqrt(d_model) (gemma family convention).
+    scale_embeddings: bool = False
+    # Post-attention/post-mlp extra norms (gemma2/3 use sandwich norms).
+    use_post_norms: bool = False
+    # qk-norm (gemma3).
+    use_qk_norm: bool = False
+
+    # Compute dtype for matmuls; params are kept fp32.
+    compute_dtype: str = "bfloat16"
+
+    # Remat policy for training: "none" | "full" | "dots".
+    remat: str = "full"
+
+    # Kernel backend: "xla" (default, used for dry-run/compile) or
+    # "pallas_interpret" (routes hot-spots through the Pallas kernels in
+    # interpret mode; used by integration tests on CPU).
+    kernel_backend: str = "xla"
+
+    # ---- derived helpers -------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab dimension of
+        the embedding / logits shards over any mesh axis up to 256 — the
+        standard production trick for odd tokenizer sizes (e.g. 92553).
+        Logits over padded ids are masked to -inf in the loss/serving."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def lru_width(self) -> int:
+        rec = self.recurrent or RecurrentConfig()
+        return rec.lru_width or self.d_model
+
+    def unit_kinds(self) -> Tuple[Tuple[str, str], ...]:
+        """The full per-layer (mixer, mlp) list, pattern cycled."""
+        reps = -(-self.num_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.num_layers]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def n_remainder(self) -> int:
+        return self.num_layers % len(self.pattern)
+
+    def validate(self) -> None:
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, self.name
+        for mixer, mlp in self.pattern:
+            assert mixer in MIXER_KINDS, mixer
+            assert mlp in MLP_KINDS, mlp
+            if mixer == MLA_ATTN:
+                assert self.mla is not None
+            if mlp == MOE_MLP:
+                assert self.moe is not None
+            if mixer in (RGLRU, RWKV6):
+                assert self.recurrent is not None
+        if any(m == LOCAL_ATTN for m, _ in self.pattern):
+            assert self.window is not None, f"{self.name}: local attn needs window"
+
+    def is_sub_quadratic(self) -> bool:
+        """True when no pattern unit uses unbounded (global/MLA) attention."""
+        return all(m in (LOCAL_ATTN, RGLRU, RWKV6) for m, _ in self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}

@@ -1,0 +1,215 @@
+"""Shared layers: norms, rotary embeddings, activations, dense MLPs.
+
+All parameters are plain pytrees (nested dicts of jnp arrays).  Params stay
+fp32; matmul inputs are cast to the config compute dtype at the call site.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.act_sharding import constrain
+
+
+def _cast(x: jax.Array, dtype) -> jax.Array:
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm_init(dim: int) -> dict:
+    return {"scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with (1 + scale) parameterization (gemma convention).
+
+    Normalization happens in fp32 regardless of input dtype.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    out = normed * (1.0 + params["scale"])
+    return out.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    theta: float = 10_000.0,
+    scaling: float = 1.0,
+) -> jax.Array:
+    """Rotate the last dim of ``x``.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    Uses the split-halves convention (llama/gemma).
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    pos = positions.astype(jnp.float32) / scaling
+    angles = pos[..., None] * inv_freq  # (..., seq, head_dim//2)
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate((x1 * cos - x2 * sin, x2 * cos + x1 * sin), axis=-1)
+    return rotated.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        # gemma uses tanh-approximated gelu
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Logit soft-capping: cap * tanh(x / cap).  No-op when cap is None."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Dense (gated) MLP
+# --------------------------------------------------------------------------
+def dense_mlp_init(key: jax.Array, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model**-0.5
+    scale_out = d_ff**-0.5
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * scale_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), jnp.float32) * scale_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), jnp.float32) * scale_out,
+    }
+
+
+def dense_mlp(params: dict, x: jax.Array, *, act: str, dtype) -> jax.Array:
+    """SwiGLU / GeGLU MLP.  x: (..., d_model)."""
+    xc = _cast(x, dtype)
+    gate = xc @ _cast(params["w_gate"], dtype)
+    up = xc @ _cast(params["w_up"], dtype)
+    hidden = constrain(activation(act)(gate) * up, "bsf")
+    return constrain(hidden @ _cast(params["w_down"], dtype), "btd")
+
+
+# --------------------------------------------------------------------------
+# RWKV channel mix (the FFN used by rwkv6 blocks)
+# --------------------------------------------------------------------------
+def rwkv_cmix_init(key: jax.Array, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "w_k": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * d_model**-0.5,
+        "w_v": jax.random.normal(k2, (d_ff, d_model), jnp.float32) * d_ff**-0.5,
+        "w_r": jax.random.normal(k3, (d_model, d_model), jnp.float32) * d_model**-0.5,
+    }
+
+
+def token_shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """RWKV token shift: x_{t-1} (zeros / `last` carry for t=0).
+
+    x: (B, S, D).  `last`: (B, D) carry from the previous chunk, or None.
+    """
+    if last is None:
+        last = jnp.zeros_like(x[:, :1, :])
+    else:
+        last = last[:, None, :]
+    return jnp.concatenate([last.astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def rwkv_cmix(
+    params: dict,
+    x: jax.Array,
+    *,
+    dtype,
+    shifted: Optional[jax.Array] = None,
+) -> jax.Array:
+    """RWKV channel mix.  x: (B, S, D); shifted defaults to token_shift(x)."""
+    if shifted is None:
+        shifted = token_shift(x)
+    xc, sc = _cast(x, dtype), _cast(shifted, dtype)
+    mu_k, mu_r = _cast(params["mu_k"], dtype), _cast(params["mu_r"], dtype)
+    xk = xc + mu_k * (sc - xc)
+    xr = xc + mu_r * (sc - xc)
+    k = constrain(jnp.square(jax.nn.relu(xk @ _cast(params["w_k"], dtype))), "bsf")
+    r = jax.nn.sigmoid(xr @ _cast(params["w_r"], dtype))
+    return constrain(r * (k @ _cast(params["w_v"], dtype)), "btd")
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def embed_init(key: jax.Array, vocab: int, d_model: int, num_codebooks: int = 1) -> dict:
+    shape = (vocab, d_model) if num_codebooks == 1 else (num_codebooks, vocab, d_model)
+    return {"table": jax.random.normal(key, shape, jnp.float32) * d_model**-0.5}
+
+
+def embed_lookup(params: dict, tokens: jax.Array, *, dtype, scale: bool) -> jax.Array:
+    """tokens: (B, S) int32 or (B, S, C) for multi-codebook."""
+    table = params["table"]
+    if table.ndim == 2:
+        out = jnp.take(table, tokens, axis=0)
+    else:
+        # (C, V, D) table, (B, S, C) tokens -> sum over codebooks.
+        per_cb = jax.vmap(
+            lambda tab, tok: jnp.take(tab, tok, axis=0), in_axes=(0, 2), out_axes=0
+        )(table, tokens)
+        out = jnp.sum(per_cb, axis=0)
+    out = out.astype(dtype)
+    if scale:
+        d_model = table.shape[-1]
+        out = out * jnp.asarray(d_model**0.5, dtype)
+    return out
+
+
+def unembed(
+    params: dict,
+    x: jax.Array,
+    *,
+    dtype,
+    num_codebooks: int = 1,
+    head: Optional[dict] = None,
+) -> jax.Array:
+    """Project hidden states to logits.
+
+    Tied embeddings: uses embed table transpose.  Multi-codebook: one head per
+    codebook, output (..., C, V).
+    """
+    xc = _cast(x, dtype)
+    if head is not None:
+        w = head["w"]
+        if num_codebooks == 1:
+            return xc @ _cast(w, dtype)
+        return jnp.einsum("...d,cdv->...cv", xc, _cast(w, dtype))
+    table = params["table"]
+    if table.ndim == 2:
+        return xc @ _cast(table, dtype).T
+    return jnp.einsum("...d,cvd->...cv", xc, _cast(table, dtype))
+
+
+def lm_head_init(key: jax.Array, vocab: int, d_model: int, num_codebooks: int = 1) -> dict:
+    shape = (d_model, vocab) if num_codebooks == 1 else (num_codebooks, d_model, vocab)
+    return {"w": jax.random.normal(key, shape, jnp.float32) * d_model**-0.5}

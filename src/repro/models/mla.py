@@ -1,0 +1,165 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — prefill/train and absorbed decode.
+
+The KV cache stores only the compressed latent ``c_kv`` (rank 512) plus the
+shared rope key (64 dims) per token — the memory win that defines MLA.  Decode
+uses the *absorbed* formulation: query projected through W_UK into latent
+space so attention runs directly against the compressed cache, and the
+attention output is expanded through W_UV afterwards.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF, full_attention
+from repro.models.flash import flash_attention
+from repro.models.config import MLAConfig
+from repro.models.layers import apply_rope
+from repro.parallel.act_sharding import constrain
+
+
+def mla_init(key: jax.Array, d_model: int, num_heads: int, cfg: MLAConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    sc = d_model**-0.5
+    scr = r**-0.5
+    return {
+        # queries (V2-Lite has no q-lora): d_model -> heads x (nope + rope)
+        "w_q": jax.random.normal(ks[0], (d_model, num_heads, dn + dr), jnp.float32) * sc,
+        # compressed kv latent
+        "w_dkv": jax.random.normal(ks[1], (d_model, r), jnp.float32) * sc,
+        "kv_norm": {"scale": jnp.zeros((r,), jnp.float32)},
+        # up-projections from the latent
+        "w_uk": jax.random.normal(ks[2], (r, num_heads, dn), jnp.float32) * scr,
+        "w_uv": jax.random.normal(ks[3], (r, num_heads, dv), jnp.float32) * scr,
+        # shared (per-token, head-agnostic) rope key
+        "w_kr": jax.random.normal(ks[4], (d_model, dr), jnp.float32) * sc,
+        "w_o": jax.random.normal(ks[5], (num_heads, dv, d_model), jnp.float32)
+        * (num_heads * dv) ** -0.5,
+    }
+
+
+def mla_project(
+    params: dict,
+    x: jax.Array,
+    cfg: MLAConfig,
+    *,
+    dtype,
+    positions: jax.Array,
+    rope_theta: float,
+    rope_scaling: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns (q_nope, q_rope, c_kv, k_rope).
+
+    q_nope: (B,S,H,dn)  q_rope: (B,S,H,dr)  c_kv: (B,S,r)  k_rope: (B,S,dr).
+    """
+    from repro.models.layers import rmsnorm
+
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    xc = x.astype(dtype)
+    q = constrain(jnp.einsum("bsd,dhk->bshk", xc, params["w_q"].astype(dtype)), "bshd")
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta=rope_theta, scaling=rope_scaling)
+    c_kv = xc @ params["w_dkv"].astype(dtype)
+    c_kv = rmsnorm(params["kv_norm"], c_kv)
+    k_rope = xc @ params["w_kr"].astype(dtype)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta=rope_theta, scaling=rope_scaling)[
+        :, :, 0, :
+    ]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention_train(
+    params: dict,
+    x: jax.Array,
+    cfg: MLAConfig,
+    *,
+    dtype,
+    positions: jax.Array,
+    rope_theta: float,
+    rope_scaling: float,
+) -> jax.Array:
+    """Training/prefill path: decompress K/V and run standard attention."""
+    b, s, _ = x.shape
+    h = params["w_uk"].shape[1]
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = mla_project(
+        params, x, cfg, dtype=dtype, positions=positions,
+        rope_theta=rope_theta, rope_scaling=rope_scaling,
+    )
+    k_nope = constrain(
+        jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"].astype(dtype)), "bshd"
+    )
+    v = constrain(
+        jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"].astype(dtype)), "bshd"
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1)
+    if s <= 1024:
+        attn = full_attention(q, k, v, causal=True)
+    else:
+        attn = flash_attention(q, k, v)
+    out = jnp.einsum("bshk,hkd->bsd", attn.astype(dtype), params["w_o"].astype(dtype))
+    return constrain(out, "btd")
+
+
+def mla_decode(
+    params: dict,
+    x: jax.Array,
+    cache_ckv: jax.Array,
+    cache_krope: jax.Array,
+    cfg: MLAConfig,
+    *,
+    dtype,
+    lengths: jax.Array,
+    rope_theta: float,
+    rope_scaling: float,
+) -> jax.Array:
+    """Absorbed decode.  x: (B, 1, D); caches: (B, S, r) and (B, S, dr).
+
+    The new token's (c_kv, k_rope) must already be written into the caches at
+    position ``lengths - 1`` by the caller.
+    """
+    b = x.shape[0]
+    positions = (lengths - 1)[:, None]  # (B, 1)
+    q_nope, q_rope, _, _ = mla_project(
+        params, x, cfg, dtype=dtype, positions=positions,
+        rope_theta=rope_theta, rope_scaling=rope_scaling,
+    )
+    # absorb W_UK into the query: (B,1,H,dn) @ (r,H,dn) -> (B,1,H,r)
+    q_latent = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["w_uk"].astype(dtype))
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    logits = (
+        jnp.einsum("bqhr,bsr->bhqs", q_latent, cache_ckv)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, cache_krope)
+    ).astype(jnp.float32) * scale
+    s = cache_ckv.shape[1]
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    # attention in latent space, then expand through W_UV
+    o_latent = jnp.einsum("bhqs,bsr->bqhr", probs, cache_ckv)
+    o = jnp.einsum("bqhr,rhk->bqhk", o_latent, params["w_uv"].astype(dtype))
+    return jnp.einsum("bqhk,hkd->bqd", o, params["w_o"].astype(dtype))
+
+
+def mla_new_token_latents(
+    params: dict,
+    x: jax.Array,
+    cfg: MLAConfig,
+    *,
+    dtype,
+    positions: jax.Array,
+    rope_theta: float,
+    rope_scaling: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """(c_kv, k_rope) for new tokens — what gets appended to the cache."""
+    _, _, c_kv, k_rope = mla_project(
+        params, x, cfg, dtype=dtype, positions=positions,
+        rope_theta=rope_theta, rope_scaling=rope_scaling,
+    )
+    return c_kv, k_rope

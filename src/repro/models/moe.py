@@ -1,0 +1,252 @@
+"""Token-choice top-k Mixture of Experts with shared experts.
+
+Dispatch is sort-free: token->slot assignment is computed with a stable
+argsort over expert ids (the standard dropping implementation), then experts
+run as one batched einsum over an (E, C, D) tensor.  Tokens beyond an
+expert's capacity are dropped (their combine weight contribution is zero),
+matching capacity-factor semantics of Switch/DeepSeek training.
+
+Sharding intent: the expert dimension E lives on the "model" mesh axis
+(expert parallelism); the token dimension stays on ("pod", "data").  XLA
+inserts the dispatch all-to-all from the scatter/gather pair.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.layers import activation
+from repro.parallel.act_sharding import constrain
+
+
+def moe_init(key: jax.Array, d_model: int, cfg: MoEConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    e, f = cfg.num_experts, cfg.expert_d_ff
+    sc_in, sc_out = d_model**-0.5, f**-0.5
+    params = {
+        "router": jax.random.normal(ks[0], (d_model, e), jnp.float32) * sc_in,
+        "w_gate": jax.random.normal(ks[1], (e, d_model, f), jnp.float32) * sc_in,
+        "w_up": jax.random.normal(ks[2], (e, d_model, f), jnp.float32) * sc_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d_model), jnp.float32) * sc_out,
+    }
+    if cfg.num_shared_experts > 0:
+        fs = f * cfg.num_shared_experts
+        params["shared"] = {
+            "w_gate": jax.random.normal(ks[4], (d_model, fs), jnp.float32) * sc_in,
+            "w_up": jax.random.normal(ks[5], (d_model, fs), jnp.float32) * sc_in,
+            "w_down": jax.random.normal(
+                jax.random.fold_in(ks[5], 1), (fs, d_model), jnp.float32
+            )
+            * fs**-0.5,
+        }
+    return params
+
+
+def router_probs(params: dict, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """Softmax router over experts; fp32.  x: (..., D) -> (..., E)."""
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def capacity(num_tokens: int, cfg: MoEConfig) -> int:
+    c = int(num_tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    c = max(c, cfg.top_k)
+    if c >= 128:  # round up for capacity-axis shardability
+        c = -(-c // 128) * 128
+    return c
+
+
+def moe_mlp(
+    params: dict,
+    x: jax.Array,
+    cfg: MoEConfig,
+    *,
+    act: str,
+    dtype,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    cap = capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    probs = router_probs(params, x, cfg).reshape(t, e)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- slot assignment (dropping) ---------------------------------------
+    flat_e = top_e.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)  # group (token,choice) by expert
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_expert < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_expert, e * cap)  # drop -> OOB
+    src_token = order // k
+
+    # dispatch: (E*C, D); OOB writes fall off the end (mode="drop")
+    gathered_tokens = constrain(xf[src_token], "td")
+    dispatched = jnp.zeros((e * cap, d), x.dtype).at[slot].set(
+        gathered_tokens, mode="drop"
+    )
+    de = constrain(dispatched.reshape(e, cap, d).astype(dtype), "ecd")
+
+    # ---- expert computation ------------------------------------------------
+    gate = jnp.einsum("ecd,edf->ecf", de, params["w_gate"].astype(dtype))
+    up = jnp.einsum("ecd,edf->ecf", de, params["w_up"].astype(dtype))
+    hidden = constrain(activation(act)(gate) * up, "ecd")
+    expert_out = jnp.einsum("ecf,efd->ecd", hidden, params["w_down"].astype(dtype))
+    expert_out = constrain(expert_out, "ecd").reshape(e * cap, d)
+
+    # ---- combine -----------------------------------------------------------
+    gathered = constrain(
+        jnp.where(
+            keep[:, None],
+            expert_out.at[slot, :].get(mode="fill", fill_value=0.0),
+            0.0,
+        ),
+        "td",
+    )
+    weight = top_p.reshape(t * k)[order][:, None].astype(x.dtype)
+    combined = jnp.zeros((t, d), x.dtype).at[src_token].add(gathered * weight)
+    out = constrain(combined.reshape(b, s, d), "btd")
+
+    # ---- shared experts ----------------------------------------------------
+    if "shared" in params:
+        sh = params["shared"]
+        xc = x.astype(dtype)
+        g = xc @ sh["w_gate"].astype(dtype)
+        u = xc @ sh["w_up"].astype(dtype)
+        out = out + (activation(act)(g) * u) @ sh["w_down"].astype(dtype)
+
+    # ---- load-balancing aux loss (Switch-style) ----------------------------
+    # scatter-add histogram instead of a (T*k, E) one-hot — O(T*k) memory
+    counts_f = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0)
+    density = counts_f / (t * k)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_weight * e * jnp.sum(density * mean_probs)
+    return out, aux
+
+
+# ==========================================================================
+# Expert-parallel MoE via shard_map (the production path)
+#
+# Tokens are sharded over (pod, data) and replicated over "model"; experts
+# are sharded over "model".  Every device therefore already holds the tokens
+# of its data shard and the weights of its expert shard: dispatch is local,
+# and the only communication is one (B,S,D) psum over "model" to combine
+# expert outputs — the Megatron-style MoE schedule.  This replaces the
+# global-argsort dispatch (which SPMD cannot shard) whenever a mesh is
+# active; the pure-jnp path above remains the single-device reference.
+# ==========================================================================
+def _moe_local(params_local, x_loc, cfg: MoEConfig, *, act: str, dtype, e_loc: int, j):
+    """Per-device body.  x_loc: (B_loc, S, D); expert weights: (e_loc, D, F)."""
+    b, s, d = x_loc.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    xf = x_loc.reshape(t, d)
+
+    logits = xf.astype(jnp.float32) @ params_local["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    cap = capacity(t, cfg)
+    flat_e = top_e.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(t * k) - starts[sorted_e]
+    local_id = sorted_e - j * e_loc
+    mine = (local_id >= 0) & (local_id < e_loc) & (pos_in_expert < cap)
+    slot = jnp.where(mine, local_id * cap + pos_in_expert, e_loc * cap)
+    src_token = order // k
+
+    dispatched = jnp.zeros((e_loc * cap, d), x_loc.dtype).at[slot].set(
+        xf[src_token], mode="drop"
+    )
+    de = dispatched.reshape(e_loc, cap, d).astype(dtype)
+    # ZeRO-3: expert weights arrive D-sharded over "data"; gather per use in
+    # the compute dtype (half the wire of fp32), freeing 1/dp of the weight
+    # residency.  The transpose of the gather is the reduce-scatter that
+    # keeps gradient memory sharded too.
+    wg = jax.lax.all_gather(params_local["w_gate"].astype(dtype), "data", axis=1, tiled=True)
+    wu = jax.lax.all_gather(params_local["w_up"].astype(dtype), "data", axis=1, tiled=True)
+    wd = jax.lax.all_gather(params_local["w_down"].astype(dtype), "data", axis=2, tiled=True)
+    gate = jnp.einsum("ecd,edf->ecf", de, wg)
+    up = jnp.einsum("ecd,edf->ecf", de, wu)
+    hidden = activation(act)(gate) * up
+    expert_out = jnp.einsum("ecf,efd->ecd", hidden, wd).reshape(e_loc * cap, d)
+
+    gathered = jnp.where(
+        mine[:, None], expert_out.at[slot, :].get(mode="fill", fill_value=0.0), 0.0
+    )
+    weight = top_p.reshape(t * k)[order][:, None].astype(x_loc.dtype)
+    partial = jnp.zeros((t, d), x_loc.dtype).at[src_token].add(gathered * weight)
+    out = jax.lax.psum(partial, "model").reshape(b, s, d)
+
+    counts_f = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0)
+    density = counts_f / (t * k)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_weight * e * jnp.sum(density * mean_probs)
+    return out, aux
+
+
+def moe_mlp_expert_parallel(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str, dtype, mesh):
+    """shard_map'd expert-parallel MoE.  Falls back to moe_mlp when the
+    model axis does not divide the expert count."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    tp = mesh.shape.get("model", 1)
+    if tp == 1 or cfg.num_experts % tp != 0:
+        out, aux = moe_mlp(params, x, cfg, act=act, dtype=dtype)
+        return out, aux
+    e_loc = cfg.num_experts // tp
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    routed = {
+        "router": params["router"],
+        "w_gate": params["w_gate"],
+        "w_up": params["w_up"],
+        "w_down": params["w_down"],
+    }
+    in_specs = (
+        {
+            "router": P(None, None),
+            "w_gate": P("model", "data", None),
+            "w_up": P("model", "data", None),
+            "w_down": P("model", None, "data"),
+        },
+        P(batch_axes, None, None),
+    )
+    out_specs = (P(batch_axes, None, None), P())
+
+    def body(pl, x_loc):
+        j = jax.lax.axis_index("model")
+        out, aux = _moe_local(pl, x_loc, cfg, act=act, dtype=dtype, e_loc=e_loc, j=j)
+        # aux identical across model shards after psum-free local calc:
+        # average across batch shards for a global estimate
+        aux = jax.lax.pmean(aux, batch_axes) if batch_axes else aux
+        aux = jax.lax.pmean(aux, "model")
+        return out, aux
+
+    out, aux = shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )(routed, x)
+
+    # shared experts: plain tensor-parallel dense path outside the shard_map
+    if "shared" in params:
+        sh = params["shared"]
+        xc = x.astype(dtype)
+        g = xc @ sh["w_gate"].astype(dtype)
+        u = xc @ sh["w_up"].astype(dtype)
+        out = out + (activation(act)(g) * u) @ sh["w_down"].astype(dtype)
+    return out, aux

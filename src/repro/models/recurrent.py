@@ -1,0 +1,316 @@
+"""Recurrent mixers: RG-LRU (Griffin / RecurrentGemma) and RWKV6 (Finch).
+
+Both are O(S) in sequence length with O(1) decode state — they carry the
+``long_500k`` cells that full attention cannot serve.
+
+RG-LRU trains with ``jax.lax.associative_scan`` (parallel prefix over the
+linear recurrence h_t = a_t * h_{t-1} + b_t).  RWKV6 trains with the chunked
+formulation (intra-chunk attention-like matrix + inter-chunk state), scanned
+over chunks; ratios of cumulative decays are computed in log space.  A Pallas
+kernel (kernels/wkv6.py) implements the same chunk math for TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import RecurrentConfig
+from repro.models.layers import token_shift
+from repro.parallel.act_sharding import constrain
+
+_RGLRU_C = 8.0  # the fixed exponent scale from the Griffin paper
+
+
+# ==========================================================================
+# RG-LRU
+# ==========================================================================
+def rglru_init(key: jax.Array, d_model: int, cfg: RecurrentConfig, lru_width: int) -> dict:
+    ks = jax.random.split(key, 7)
+    w = lru_width
+    sc = d_model**-0.5
+    scw = w**-0.5
+    # Λ init so that a^c spans (0.9, 0.999) roughly — standard Griffin init.
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.4, 0.8)
+    return {
+        "w_y": jax.random.normal(ks[1], (d_model, w), jnp.float32) * sc,  # gate branch
+        "w_x": jax.random.normal(ks[2], (d_model, w), jnp.float32) * sc,  # main branch
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_a": jax.random.normal(ks[4], (w, w), jnp.float32) * scw,  # recurrence gate
+        "w_i": jax.random.normal(ks[5], (w, w), jnp.float32) * scw,  # input gate
+        "lambda": lam,
+        "w_out": jax.random.normal(ks[6], (w, d_model), jnp.float32) * scw,
+    }
+
+
+def causal_conv1d(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, carry: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal temporal conv.  x: (B,S,W); w: (K,W); carry: (B,K-1,W).
+
+    Returns (out, new_carry) where new_carry holds the last K-1 inputs.
+    """
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([carry.astype(x.dtype), x], axis=1)  # (B, S+K-1, W)
+    s = x.shape[1]
+    out = jnp.zeros_like(x)
+    for tap in range(k):
+        out = out + xp[:, tap : tap + s, :] * w[tap].astype(x.dtype)
+    out = out + b.astype(x.dtype)
+    new_carry = xp[:, -(k - 1) :, :]
+    return out, new_carry
+
+
+def _rglru_gates(params: dict, xw: jax.Array, dtype):
+    """Per-token log-decay and gated input.  xw: (B,S,W) post-conv."""
+    r = jax.nn.sigmoid(xw @ params["w_a"].astype(dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(xw @ params["w_i"].astype(dtype)).astype(jnp.float32)
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lambda"]) * r  # (B,S,W) fp32
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) via expm1 for stability near a ~ 1
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = mult * (i * xw.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(params: dict, xw: jax.Array, *, dtype) -> jax.Array:
+    """Parallel RG-LRU over a full sequence.  xw: (B,S,W) -> (B,S,W)."""
+    a, b = _rglru_gates(params, xw, dtype)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(xw.dtype)
+
+
+def rglru_step(
+    params: dict, xw: jax.Array, h_prev: jax.Array, *, dtype
+) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step.  xw: (B,1,W); h_prev: (B,W) fp32."""
+    a, b = _rglru_gates(params, xw, dtype)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(xw.dtype)[:, None, :], h
+
+
+def rglru_block(
+    params: dict,
+    x: jax.Array,
+    *,
+    dtype,
+    conv_carry: Optional[jax.Array] = None,
+    h_prev: Optional[jax.Array] = None,
+    decode: bool = False,
+):
+    """Full Griffin recurrent block.
+
+    Train/prefill: returns (out, (conv_carry, h_last)).
+    Decode: requires conv_carry + h_prev, returns (out, (conv_carry, h)).
+    """
+    xc = x.astype(dtype)
+    gate = constrain(jax.nn.gelu(xc @ params["w_y"].astype(dtype), approximate=True), "bsf")
+    main = constrain(xc @ params["w_x"].astype(dtype), "bsf")
+    main, new_conv_carry = causal_conv1d(
+        main, params["conv_w"], params["conv_b"], carry=conv_carry
+    )
+    if decode:
+        h_seq, h_last = rglru_step(params, main, h_prev, dtype=dtype)
+    else:
+        h_seq = rglru_scan(params, main, dtype=dtype)
+        h_last = h_seq[:, -1, :].astype(jnp.float32)
+    out = constrain(
+        (gate * h_seq.astype(dtype)) @ params["w_out"].astype(dtype), "btd"
+    )
+    return out, (new_conv_carry, h_last)
+
+
+# ==========================================================================
+# RWKV6 (Finch)
+# ==========================================================================
+def rwkv6_init(key: jax.Array, d_model: int, cfg: RecurrentConfig) -> dict:
+    ks = jax.random.split(key, 10)
+    d = d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    sc = d**-0.5
+    return {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": jax.random.normal(ks[0], (d, d), jnp.float32) * sc,
+        "w_k": jax.random.normal(ks[1], (d, d), jnp.float32) * sc,
+        "w_v": jax.random.normal(ks[2], (d, d), jnp.float32) * sc,
+        "w_g": jax.random.normal(ks[3], (d, d), jnp.float32) * sc,
+        "w_o": jax.random.normal(ks[4], (d, d), jnp.float32) * sc,
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32) + jax.random.uniform(ks[5], (d,)) * 2.0,
+        "decay_a": jax.random.normal(ks[6], (d, cfg.rwkv_decay_lora), jnp.float32) * sc,
+        "decay_b": jax.random.normal(
+            ks[7], (cfg.rwkv_decay_lora, d), jnp.float32
+        ) * cfg.rwkv_decay_lora**-0.5,
+        "bonus_u": jax.random.normal(ks[8], (h, hd), jnp.float32) * 0.1,
+        # per-head output group-norm
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "gn_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _rwkv6_projections(params: dict, x: jax.Array, *, dtype, shifted=None):
+    """Token-shift mixing + projections.  x: (B,S,D)."""
+    if shifted is None:
+        shifted = token_shift(x)
+    xc = x.astype(dtype)
+    sc = shifted.astype(dtype)
+
+    def mix(mu):
+        # compute the lerp in the compute dtype: keeps cotangents (and the
+        # per-layer tensor-parallel all-reduces) in bf16, not fp32
+        return xc + mu.astype(dtype) * (sc - xc)
+
+    r = constrain(mix(params["mu_r"]) @ params["w_r"].astype(dtype), "bsf")
+    k = constrain(mix(params["mu_k"]) @ params["w_k"].astype(dtype), "bsf")
+    v = constrain(mix(params["mu_v"]) @ params["w_v"].astype(dtype), "bsf")
+    g = constrain(jax.nn.silu(mix(params["mu_g"]) @ params["w_g"].astype(dtype)), "bsf")
+    xw = mix(params["mu_w"]).astype(jnp.float32)
+    log_w = -jnp.exp(  # decay path stays fp32 (exp-of-exp sensitivity)
+        params["decay_w0"]
+        + jnp.tanh(xw @ params["decay_a"].astype(jnp.float32))
+        @ params["decay_b"].astype(jnp.float32)
+    )  # (B,S,D), <= 0
+    return r, k, v, g, log_w
+
+
+def _split_heads(x: jax.Array, head_dim: int) -> jax.Array:
+    b, s, d = x.shape
+    return x.reshape(b, s, d // head_dim, head_dim)
+
+
+def wkv6_chunked(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    log_w: jax.Array,
+    u: jax.Array,
+    *,
+    state: Optional[jax.Array] = None,
+    chunk: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6.  r,k,v,log_w: (B,S,H,K); u: (H,K).
+
+    Returns (out (B,S,H,K) fp32, final state (B,H,K,K) fp32).
+    state[b,h,i,j]: sum over past s of  prod(decay)_{s+1..t} k_s[i] v_s[j].
+    """
+    b, s, h, dk = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)
+    lw = log_w.astype(f32).reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)
+    # shapes now (n, B, H, C, K)
+
+    if state is None:
+        state = jnp.zeros((b, h, dk, dk), f32)
+
+    uu = u.astype(f32)  # (H, K)
+
+    def chunk_step(s_in, inputs):
+        rc_, kc_, vc_, lw_ = inputs  # (B,H,C,K)
+        cum = jnp.cumsum(lw_, axis=2)  # inclusive cumulative log decay
+        cum_excl = cum - lw_  # exclusive: prod of decays before position i
+        total = cum[:, :, -1:, :]  # (B,H,1,K)
+        # inter-chunk: o_i += (r_i * exp(cum_excl_i)) @ S_in
+        r_dec = rc_ * jnp.exp(cum_excl)
+        o_inter = jnp.einsum("bhck,bhkv->bhcv", r_dec, s_in)
+        # intra-chunk: M[i,s] = sum_c r_i,c k_s,c exp(cum_excl_i - cum_s)  (s<i)
+        #              M[i,i] = sum_c r_i,c k_i,c u_c
+        # exp(cum_excl_i - cum_s) factored as exp(cum_excl_i) * exp(-cum_s);
+        # -cum_s >= 0 so clamp at 30 against fp32 overflow under extreme decay
+        # (inactive for the chunk=64 default; standard chunked-WKV practice).
+        k_dec = kc_ * jnp.exp(jnp.minimum(-cum, 30.0))
+        m = jnp.einsum("bhck,bhsk->bhcs", r_dec, k_dec)
+        idx = jnp.arange(rc_.shape[2])
+        strict = idx[:, None] > idx[None, :]
+        m = jnp.where(strict, m, 0.0)
+        diag = jnp.einsum("bhck,hk,bhck->bhc", rc_, uu, kc_)
+        o_intra = jnp.einsum("bhcs,bhsv->bhcv", m, vc_) + diag[..., None] * vc_
+        # state update: S_out = diag(exp(total)) S_in + sum_s exp(total-cum_s) k_s^T v_s
+        k_for_state = kc_ * jnp.exp(total - cum)
+        s_out = jnp.exp(total).transpose(0, 1, 3, 2) * s_in + jnp.einsum(
+            "bhsk,bhsv->bhkv", k_for_state, vc_
+        )
+        return s_out, o_inter + o_intra
+
+    # checkpoint the chunk body: backward recomputes intra-chunk tensors
+    # from (state, chunk inputs) instead of saving them per chunk
+    final_state, outs = jax.lax.scan(
+        jax.checkpoint(chunk_step), state, (rc, kc, vc, lw)
+    )
+    # (n, B, H, C, K) -> (B, S, H, K)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dk)
+    return out, final_state
+
+
+def wkv6_step(
+    r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array, u: jax.Array, state: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence.  r,k,v,log_w: (B,1,H,K); state: (B,H,K,K)."""
+    f32 = jnp.float32
+    r1, k1, v1, lw1 = (t.astype(f32)[:, 0] for t in (r, k, v, log_w))  # (B,H,K)
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    out = jnp.einsum("bhk,bhkv->bhv", r1, state + u.astype(f32)[None, :, :, None] * kv)
+    new_state = jnp.exp(lw1)[..., None] * state + kv
+    return out[:, None], new_state
+
+
+def rwkv6_block(
+    params: dict,
+    x: jax.Array,
+    cfg: RecurrentConfig,
+    *,
+    dtype,
+    norm_eps: float = 1e-5,
+    state: Optional[jax.Array] = None,
+    shift_carry: Optional[jax.Array] = None,
+    decode: bool = False,
+    chunk: int = 64,
+):
+    """Full RWKV6 time-mix block.  x: (B,S,D).
+
+    Returns (out, (new_state, new_shift_carry)).
+    """
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    shifted = None
+    if decode or shift_carry is not None:
+        shifted = token_shift(x, last=shift_carry)
+    r, k, v, g, log_w = _rwkv6_projections(params, x, dtype=dtype, shifted=shifted)
+    rh, kh, vh, lwh = (_split_heads(t, hd) for t in (r, k, v, log_w))
+    if decode:
+        out_h, new_state = wkv6_step(rh, kh, vh, lwh, params["bonus_u"], state)
+        out_h = out_h.reshape(b, 1, h, hd)
+    else:
+        out_h, new_state = wkv6_chunked(
+            rh, kh, vh, lwh, params["bonus_u"], state=state, chunk=chunk
+        )
+    # per-head group norm
+    mean = jnp.mean(out_h, axis=-1, keepdims=True)
+    var = jnp.var(out_h, axis=-1, keepdims=True)
+    normed = (out_h - mean) * jax.lax.rsqrt(var + norm_eps)
+    flat = normed.reshape(b, -1, d).astype(dtype)
+    flat = flat * params["gn_scale"].astype(dtype) + params["gn_bias"].astype(dtype)
+    out = constrain((flat * g) @ params["w_o"].astype(dtype), "btd")
+    new_shift = x[:, -1, :]
+    return out, (new_state, new_shift)

@@ -1,0 +1,583 @@
+"""Pattern-block transformer covering all 10 assigned architectures.
+
+The model is a repeating *pattern* of (mixer, mlp) units (cfg.pattern).  The
+forward pass scans over `n_blocks = num_layers // len(pattern)` stacked
+pattern-blocks (small HLO, exact cost accounting via the while-trip
+correction in launch/hlo_analysis.py) and applies the
+`num_layers % len(pattern)` remainder units unstacked.
+
+Three entry points:
+    forward()       train/prefill logits (+ aux loss, + cache when asked —
+                    cache entries are emitted as scan outputs of the same
+                    pass, no duplicated mixer compute)
+    decode_step()   one token against a cache (serve_step for decode cells)
+    init_cache()    per-unit cache pytree (ring-buffer for local attention)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import config as C
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+from repro.models.flash import flash_attention
+from repro.parallel.act_sharding import constrain
+
+# Sequence length at or below which plain materialized attention is used
+# (smoke tests / tiny models); above it the flash path kicks in.
+_FULL_ATTN_MAX_SEQ = 1024
+
+
+# ==========================================================================
+# Parameter init
+# ==========================================================================
+def _unit_init(key: jax.Array, cfg: C.ModelConfig, mixer: str, mlp: str) -> dict:
+    k_mix, k_mlp, k_norm = jax.random.split(key, 3)
+    p: Dict[str, Any] = {
+        "norm_mix": L.rmsnorm_init(cfg.d_model),
+        "norm_mlp": L.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.use_post_norms:
+        p["post_norm_mix"] = L.rmsnorm_init(cfg.d_model)
+        p["post_norm_mlp"] = L.rmsnorm_init(cfg.d_model)
+
+    if mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
+        p["mixer"] = attn.attention_init(
+            k_mix,
+            cfg.d_model,
+            cfg.num_heads,
+            cfg.num_kv_heads,
+            cfg.head_dim,
+            bias=cfg.attn_bias,
+            qk_norm=cfg.use_qk_norm,
+        )
+    elif mixer == C.MLA_ATTN:
+        p["mixer"] = mla_mod.mla_init(k_mix, cfg.d_model, cfg.num_heads, cfg.mla)
+    elif mixer == C.RGLRU:
+        p["mixer"] = rec.rglru_init(k_mix, cfg.d_model, cfg.recurrent, cfg.lru_width)
+    elif mixer == C.RWKV6:
+        p["mixer"] = rec.rwkv6_init(k_mix, cfg.d_model, cfg.recurrent)
+    else:
+        raise ValueError(mixer)
+
+    if mlp == C.DENSE_MLP:
+        p["mlp"] = L.dense_mlp_init(k_mlp, cfg.d_model, cfg.d_ff)
+    elif mlp == C.MOE_MLP:
+        p["mlp"] = moe_mod.moe_init(k_mlp, cfg.d_model, cfg.moe)
+    elif mlp == C.RWKV_CHANNEL_MIX:
+        p["mlp"] = L.rwkv_cmix_init(k_mlp, cfg.d_model, cfg.d_ff)
+    else:
+        raise ValueError(mlp)
+    return p
+
+
+def _block_init(key: jax.Array, cfg: C.ModelConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"u{i}": _unit_init(keys[i], cfg, mixer, mlp)
+        for i, (mixer, mlp) in enumerate(cfg.pattern)
+    }
+
+
+def init_params(key: jax.Array, cfg: C.ModelConfig) -> dict:
+    cfg.validate()
+    k_emb, k_blocks, k_rem, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, cfg.num_codebooks),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.n_blocks > 0:
+        block_keys = jax.random.split(k_blocks, cfg.n_blocks)
+        params["blocks"] = jax.vmap(lambda k: _block_init(k, cfg))(block_keys)
+    if cfg.n_remainder > 0:
+        rem_keys = jax.random.split(k_rem, max(cfg.n_remainder, 2))
+        params["rem"] = {
+            f"r{i}": _unit_init(rem_keys[i], cfg, *cfg.pattern[i])
+            for i in range(cfg.n_remainder)
+        }
+    if not cfg.tie_embeddings or cfg.num_codebooks > 1:
+        params["lm_head"] = L.lm_head_init(
+            k_head, cfg.padded_vocab, cfg.d_model, cfg.num_codebooks
+        )
+    return params
+
+
+def param_specs(cfg: C.ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def _dtype(cfg: C.ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ==========================================================================
+# Unit application (train / prefill).  `collect` asks mixers to also return
+# their cache entry (K/V, latents, recurrent state) from the same compute.
+# ==========================================================================
+def _mixer_apply(
+    cfg: C.ModelConfig,
+    mixer: str,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    collect: bool,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    dtype = _dtype(cfg)
+    rope_args = (cfg.rope_theta, cfg.rope_scaling)
+    s = x.shape[1]
+    uc: Dict[str, Any] = {}
+    if mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
+        q, k, v = attn.project_qkv(
+            p, x, dtype=dtype, rope_args=rope_args, positions=positions
+        )
+        window = cfg.window if mixer == C.LOCAL_ATTN else None
+        if collect:
+            if window is not None and window < s:
+                # ring-buffer fill: token p lands at slot p % window for the
+                # last `window` tokens — matches the decode write convention
+                # for any prompt length
+                idx = (jnp.arange(window) - s) % window + (s - window)
+                uc["k"] = constrain(k[:, idx], "cache_kv")
+                uc["v"] = constrain(v[:, idx], "cache_kv")
+            else:
+                uc["k"] = constrain(k, "cache_kv")
+                uc["v"] = constrain(v, "cache_kv")
+        if window is not None and window < s and s % window == 0:
+            # banded blocking beats windowed flash on HBM bytes here
+            # (hypothesis tested and REFUTED in §Perf iteration 6): cost
+            # 2*S*W exactly, no full-S logit rows
+            o = attn.local_attention(
+                q, k, v, window=window, logit_cap=cfg.attn_logit_softcap
+            )
+        elif s <= _FULL_ATTN_MAX_SEQ:
+            o = attn.full_attention(
+                q, k, v, causal=True, window=window, logit_cap=cfg.attn_logit_softcap
+            )
+        else:
+            o = flash_attention(
+                q, k, v, logit_cap=cfg.attn_logit_softcap, window=window
+            )
+        return attn.attention_out(p, o, dtype=dtype), uc
+    if mixer == C.MLA_ATTN:
+        if collect:
+            ckv, kr = mla_mod.mla_new_token_latents(
+                p, x, cfg.mla, dtype=dtype, positions=positions,
+                rope_theta=cfg.rope_theta, rope_scaling=cfg.rope_scaling,
+            )
+            uc["ckv"] = constrain(ckv, "cache_latent")
+            uc["kr"] = constrain(kr, "cache_latent")
+        out = mla_mod.mla_attention_train(
+            p, x, cfg.mla, dtype=dtype, positions=positions,
+            rope_theta=cfg.rope_theta, rope_scaling=cfg.rope_scaling,
+        )
+        return out, uc
+    if mixer == C.RGLRU:
+        out, (conv_c, h_last) = rec.rglru_block(p, x, dtype=dtype)
+        if collect:
+            uc["conv"], uc["h"] = conv_c, h_last
+        return out, uc
+    if mixer == C.RWKV6:
+        out, (state, shift) = rec.rwkv6_block(p, x, cfg.recurrent, dtype=dtype)
+        if collect:
+            uc["state"] = constrain(state, "cache_state")
+            uc["shift"] = shift.astype(dtype)
+        return out, uc
+    raise ValueError(mixer)
+
+
+def _mlp_apply(
+    cfg: C.ModelConfig, mlp: str, p: dict, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    dtype = _dtype(cfg)
+    if mlp == C.DENSE_MLP:
+        return L.dense_mlp(p, x, act=cfg.act, dtype=dtype), jnp.zeros((), jnp.float32)
+    if mlp == C.MOE_MLP:
+        from repro.parallel.act_sharding import current_mesh
+
+        mesh = current_mesh()
+        if mesh is not None:
+            return moe_mod.moe_mlp_expert_parallel(
+                p, x, cfg.moe, act=cfg.act, dtype=dtype, mesh=mesh
+            )
+        return moe_mod.moe_mlp(p, x, cfg.moe, act=cfg.act, dtype=dtype)
+    if mlp == C.RWKV_CHANNEL_MIX:
+        return L.rwkv_cmix(p, x, dtype=dtype), jnp.zeros((), jnp.float32)
+    raise ValueError(mlp)
+
+
+def _unit_apply(
+    cfg: C.ModelConfig,
+    unit: Tuple[str, str],
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    collect: bool = False,
+) -> Tuple[jax.Array, jax.Array, Dict[str, Any]]:
+    mixer, mlp = unit
+    h = L.rmsnorm(p["norm_mix"], x, eps=cfg.norm_eps)
+    h, uc = _mixer_apply(cfg, mixer, p["mixer"], h, positions, collect)
+    if cfg.use_post_norms:
+        h = L.rmsnorm(p["post_norm_mix"], h, eps=cfg.norm_eps)
+    x = x + h
+    h = L.rmsnorm(p["norm_mlp"], x, eps=cfg.norm_eps)
+    if collect and mlp == C.RWKV_CHANNEL_MIX:
+        uc["cmix_shift"] = h[:, -1, :].astype(_dtype(cfg))
+    h, aux = _mlp_apply(cfg, mlp, p["mlp"], h)
+    if cfg.use_post_norms:
+        h = L.rmsnorm(p["post_norm_mlp"], h, eps=cfg.norm_eps)
+    return x + h, aux, uc
+
+
+def _remat_groups(cfg: C.ModelConfig) -> int:
+    """Number of outer remat groups: the smallest divisor of n_blocks at or
+    above sqrt(n_blocks) (1 = flat single-level remat for small models)."""
+    n = cfg.n_blocks
+    if n < 16:
+        return 1
+    root = n**0.5
+    for d in range(int(root), n):
+        if d > 1 and n % d == 0 and d >= root:
+            return d
+    return 1
+
+
+def _remat_wrap(cfg: C.ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    raise ValueError(cfg.remat)
+
+
+# ==========================================================================
+# Forward (train / prefill)
+# ==========================================================================
+def forward(
+    cfg: C.ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    *,
+    image_embeds: Optional[jax.Array] = None,
+    return_cache: bool = False,
+    last_only: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Returns (logits, aux_loss, cache-or-None).
+
+    tokens: (B, S) int32, or (B, S, C) for multi-codebook audio.
+    image_embeds: (B, P, d_model) prepended when cfg.num_prefix_embeds > 0.
+    The returned cache (prefill mode) covers exactly the input length; the
+    serving layer pads it to its decode horizon.
+    """
+    dtype = _dtype(cfg)
+    x = L.embed_lookup(params["embed"], tokens, dtype=dtype, scale=cfg.scale_embeddings)
+    if cfg.num_prefix_embeds > 0:
+        assert image_embeds is not None
+        x = jnp.concatenate([image_embeds.astype(dtype), x], axis=1)
+    x = constrain(x, "btd")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def block_fn(carry, block_params):
+        h, aux = carry
+        h = constrain(h, "btd")
+        bc = {}
+        for i, unit in enumerate(cfg.pattern):
+            h, a, bc[f"u{i}"] = _unit_apply(
+                cfg, unit, block_params[f"u{i}"], h, positions, collect=return_cache
+            )
+            aux = aux + a
+        return (h, aux), bc
+
+    cache: Optional[Dict[str, Any]] = {} if return_cache else None
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_blocks > 0:
+        groups = _remat_groups(cfg) if (cfg.remat != "none" and not return_cache) else 1
+        if groups > 1:
+            # two-level (sqrt) remat: checkpoint at the GROUP level so the
+            # outer scan saves only `groups` carries instead of n_blocks;
+            # the inner scan's per-block residuals are transient within one
+            # group's backward.  Same single extra forward as flat remat.
+            inner = cfg.n_blocks // groups
+            gp = jax.tree.map(
+                lambda a: a.reshape((groups, inner) + a.shape[1:]),
+                params["blocks"],
+            )
+
+            def group_fn(carry, gparams):
+                out, _ = jax.lax.scan(block_fn, carry, gparams)
+                return out, None
+
+            wrapped = _remat_wrap(cfg, group_fn)
+            (x, aux), _ = jax.lax.scan(wrapped, (x, aux), gp)
+        else:
+            wrapped = _remat_wrap(cfg, block_fn)
+            (x, aux), block_caches = jax.lax.scan(wrapped, (x, aux), params["blocks"])
+            if return_cache:
+                cache["blocks"] = block_caches
+    if cfg.n_remainder > 0:
+        rem_caches = {}
+        for i in range(cfg.n_remainder):
+            unit_fn = _remat_wrap(
+                cfg,
+                lambda h, p, u=cfg.pattern[i]: _unit_apply(
+                    cfg, u, p, h, positions, collect=return_cache
+                ),
+            )
+            x, a, rem_caches[f"r{i}"] = unit_fn(x, params["rem"][f"r{i}"])
+            aux = aux + a
+        if return_cache:
+            cache["rem"] = rem_caches
+
+    if last_only:
+        # serving prefill: only the last position's logits are needed —
+        # slicing BEFORE the unembed keeps the (B, S, V) tensor out of the
+        # program entirely (it dominated prefill memory otherwise)
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.unembed(
+        params["embed"],
+        x,
+        dtype=dtype,
+        num_codebooks=cfg.num_codebooks,
+        head=params.get("lm_head"),
+    )
+    logits = constrain(L.softcap(logits, cfg.final_logit_softcap), "logits")
+    return logits, aux, cache
+
+
+# ==========================================================================
+# KV / state caches
+# ==========================================================================
+def _unit_cache_spec(
+    cfg: C.ModelConfig, mixer: str, mlp: str, batch: int, max_len: int
+) -> dict:
+    dtype = _dtype(cfg)
+    spec: Dict[str, Any] = {}
+    if mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
+        s_cache = max_len if mixer == C.GLOBAL_ATTN else min(max_len, cfg.window)
+        spec["k"] = jnp.zeros((batch, s_cache, cfg.num_kv_heads, cfg.head_dim), dtype)
+        spec["v"] = jnp.zeros((batch, s_cache, cfg.num_kv_heads, cfg.head_dim), dtype)
+    elif mixer == C.MLA_ATTN:
+        spec["ckv"] = jnp.zeros((batch, max_len, cfg.mla.kv_lora_rank), dtype)
+        spec["kr"] = jnp.zeros((batch, max_len, cfg.mla.qk_rope_head_dim), dtype)
+    elif mixer == C.RGLRU:
+        rc = cfg.recurrent
+        spec["conv"] = jnp.zeros((batch, rc.conv_width - 1, cfg.lru_width), dtype)
+        spec["h"] = jnp.zeros((batch, cfg.lru_width), jnp.float32)
+    elif mixer == C.RWKV6:
+        rc = cfg.recurrent
+        hd = rc.rwkv_head_dim
+        spec["state"] = jnp.zeros((batch, cfg.d_model // hd, hd, hd), jnp.float32)
+        spec["shift"] = jnp.zeros((batch, cfg.d_model), dtype)
+    if mlp == C.RWKV_CHANNEL_MIX:
+        spec["cmix_shift"] = jnp.zeros((batch, cfg.d_model), dtype)
+    return spec
+
+
+def init_cache(cfg: C.ModelConfig, batch: int, max_len: int) -> dict:
+    """Zero cache pytree.  Stacked (n_blocks, ...) leading dim for scan."""
+    cache: Dict[str, Any] = {}
+    if cfg.n_blocks > 0:
+        def one_block(_):
+            return {
+                f"u{i}": _unit_cache_spec(cfg, mixer, mlp, batch, max_len)
+                for i, (mixer, mlp) in enumerate(cfg.pattern)
+            }
+        cache["blocks"] = jax.vmap(one_block)(jnp.arange(cfg.n_blocks))
+    if cfg.n_remainder > 0:
+        cache["rem"] = {
+            f"r{i}": _unit_cache_spec(cfg, *cfg.pattern[i], batch, max_len)
+            for i in range(cfg.n_remainder)
+        }
+    return cache
+
+
+def cache_specs(cfg: C.ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+# ==========================================================================
+# Decode step
+# ==========================================================================
+def _unit_decode(
+    cfg: C.ModelConfig,
+    unit: Tuple[str, str],
+    p: dict,
+    ucache: dict,
+    x: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, D); pos: scalar int32 position of the new token."""
+    mixer, mlp = unit
+    dtype = _dtype(cfg)
+    rope_args = (cfg.rope_theta, cfg.rope_scaling)
+    b = x.shape[0]
+    new_cache = dict(ucache)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+
+    h = L.rmsnorm(p["norm_mix"], x, eps=cfg.norm_eps)
+    if mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
+        q, k, v = attn.project_qkv(
+            p["mixer"], h, dtype=dtype, rope_args=rope_args, positions=positions
+        )
+        s_cache = ucache["k"].shape[1]
+        slot = pos % s_cache if mixer == C.LOCAL_ATTN else pos
+        k_cache = jax.lax.dynamic_update_slice(
+            ucache["k"], k.astype(ucache["k"].dtype), (0, slot, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            ucache["v"], v.astype(ucache["v"].dtype), (0, slot, 0, 0)
+        )
+        lengths = jnp.minimum(pos + 1, s_cache)
+        o = attn.decode_attention(
+            q, k_cache, v_cache,
+            lengths=jnp.broadcast_to(lengths, (b,)),
+            logit_cap=cfg.attn_logit_softcap,
+        )
+        mo = attn.attention_out(p["mixer"], o, dtype=dtype)
+        new_cache["k"], new_cache["v"] = k_cache, v_cache
+    elif mixer == C.MLA_ATTN:
+        ckv_new, kr_new = mla_mod.mla_new_token_latents(
+            p["mixer"], h, cfg.mla, dtype=dtype, positions=positions,
+            rope_theta=cfg.rope_theta, rope_scaling=cfg.rope_scaling,
+        )
+        ckv = jax.lax.dynamic_update_slice(
+            ucache["ckv"], ckv_new.astype(ucache["ckv"].dtype), (0, pos, 0)
+        )
+        kr = jax.lax.dynamic_update_slice(
+            ucache["kr"], kr_new.astype(ucache["kr"].dtype), (0, pos, 0)
+        )
+        mo = mla_mod.mla_decode(
+            p["mixer"], h, ckv, kr, cfg.mla, dtype=dtype,
+            lengths=jnp.broadcast_to(pos + 1, (b,)),
+            rope_theta=cfg.rope_theta, rope_scaling=cfg.rope_scaling,
+        )
+        new_cache["ckv"], new_cache["kr"] = ckv, kr
+    elif mixer == C.RGLRU:
+        mo, (conv_c, h_c) = rec.rglru_block(
+            p["mixer"], h, dtype=dtype,
+            conv_carry=ucache["conv"], h_prev=ucache["h"], decode=True,
+        )
+        new_cache["conv"] = conv_c.astype(ucache["conv"].dtype)
+        new_cache["h"] = h_c
+    elif mixer == C.RWKV6:
+        mo, (state, shift) = rec.rwkv6_block(
+            p["mixer"], h, cfg.recurrent, dtype=dtype,
+            state=ucache["state"], shift_carry=ucache["shift"], decode=True,
+        )
+        new_cache["state"] = state
+        new_cache["shift"] = shift.astype(ucache["shift"].dtype)
+    else:
+        raise ValueError(mixer)
+    if cfg.use_post_norms:
+        mo = L.rmsnorm(p["post_norm_mix"], mo, eps=cfg.norm_eps)
+    x = x + mo
+
+    h = L.rmsnorm(p["norm_mlp"], x, eps=cfg.norm_eps)
+    if mlp == C.RWKV_CHANNEL_MIX:
+        shifted = L.token_shift(h, last=ucache["cmix_shift"])
+        mo = L.rwkv_cmix(p["mlp"], h, dtype=dtype, shifted=shifted)
+        new_cache["cmix_shift"] = h[:, -1, :].astype(ucache["cmix_shift"].dtype)
+    else:
+        mo, _ = _mlp_apply(cfg, mlp, p["mlp"], h)
+    if cfg.use_post_norms:
+        mo = L.rmsnorm(p["post_norm_mlp"], mo, eps=cfg.norm_eps)
+    return x + mo, new_cache
+
+
+def decode_step(
+    cfg: C.ModelConfig,
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    """One decode step.  tokens: (B, 1) (or (B, 1, C)); pos: scalar int32.
+
+    Returns (logits (B, 1, V) or (B, 1, C, V), new_cache).
+    """
+    dtype = _dtype(cfg)
+    x = L.embed_lookup(params["embed"], tokens, dtype=dtype, scale=cfg.scale_embeddings)
+    new_cache: Dict[str, Any] = {}
+
+    if cfg.n_blocks > 0:
+        # cache travels as scan CARRY with per-layer dynamic slice/update —
+        # one buffer, updated in place (xs/ys stacking would double-buffer
+        # the whole KV cache)
+        def block_fn(carry, inp):
+            h, blocks_cache = carry
+            li, bp = inp
+            bc = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
+                blocks_cache,
+            )
+            nbc = {}
+            for i, unit in enumerate(cfg.pattern):
+                h, nbc[f"u{i}"] = _unit_decode(
+                    cfg, unit, bp[f"u{i}"], bc[f"u{i}"], h, pos
+                )
+            blocks_cache = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), li, 0
+                ),
+                blocks_cache,
+                nbc,
+            )
+            return (h, blocks_cache), None
+
+        (x, new_cache["blocks"]), _ = jax.lax.scan(
+            block_fn,
+            (x, cache["blocks"]),
+            (jnp.arange(cfg.n_blocks), params["blocks"]),
+        )
+    if cfg.n_remainder > 0:
+        new_cache["rem"] = {}
+        for i in range(cfg.n_remainder):
+            x, nc = _unit_decode(
+                cfg, cfg.pattern[i], params["rem"][f"r{i}"], cache["rem"][f"r{i}"], x, pos
+            )
+            new_cache["rem"][f"r{i}"] = nc
+
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.unembed(
+        params["embed"], x, dtype=dtype,
+        num_codebooks=cfg.num_codebooks, head=params.get("lm_head"),
+    )
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+# ==========================================================================
+# Namespace object
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class Transformer:
+    """Config-bound convenience wrapper."""
+
+    cfg: C.ModelConfig
+
+    def init(self, key):
+        return init_params(key, self.cfg)
+
+    def param_specs(self):
+        return param_specs(self.cfg)
+
+    def __call__(self, params, tokens, **kw):
+        return forward(self.cfg, params, tokens, **kw)
+
+    def decode(self, params, cache, tokens, pos):
+        return decode_step(self.cfg, params, cache, tokens, pos)
+
+    def init_cache(self, batch, max_len):
+        return init_cache(self.cfg, batch, max_len)

@@ -1,0 +1,15 @@
+"""Distribution layer: mesh axes, sharding rules, gradient compression."""
+
+from repro.parallel.sharding import (
+    activation_specs,
+    cache_specs_sharding,
+    param_sharding,
+    shard_info,
+)
+
+__all__ = [
+    "activation_specs",
+    "cache_specs_sharding",
+    "param_sharding",
+    "shard_info",
+]

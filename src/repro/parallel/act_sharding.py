@@ -1,0 +1,95 @@
+"""Activation sharding constraints (GSPMD guide rails).
+
+Without explicit constraints, XLA's sharding propagation is free to
+replicate the batch dimension of intermediate activations inside the layer
+scan — which it happily does (observed: full global-batch f32 activations
+all-reduced per layer, 45 GiB peaks).  ``constrain(x, kind)`` pins the
+canonical layout at module boundaries:
+
+    btd    (B, S, D)        batch -> (pod, data)
+    bshd   (B, S, H, Dh)    batch -> (pod, data), heads -> model
+    bsf    (B, S, F)        batch -> (pod, data), features -> model
+    ecd    (E, C, D)        experts -> model, capacity -> (pod, data)
+    logits (B, S, [C,] V)   batch -> (pod, data), vocab -> model
+
+Constraints are inert (identity) unless a mesh has been activated via
+``activation_sharding(mesh)`` — single-device tests and the evolution
+engine's kernel tasks never see them.  Every rule passes through
+sharding._fit, so non-divisible dims gracefully drop axes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import DP, TP, _fit
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, seq_parallel: bool = False):
+    """seq_parallel=True shards the residual stream's sequence dim over the
+    model axis (Megatron sequence parallelism): layer inputs/outputs (and
+    therefore the remat saves) shrink by the TP degree; the per-layer
+    all-gather before QKV / reduce-scatter after the MLP is XLA's job."""
+    old = (getattr(_STATE, "mesh", None), getattr(_STATE, "seq_parallel", False))
+    _STATE.mesh = mesh
+    _STATE.seq_parallel = seq_parallel
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.seq_parallel = old
+
+
+_RULES = {
+    "btd": (DP, None, None),
+    "td": (DP, None),  # flattened token-major 2D tensors (MoE dispatch)
+    "bshd": (DP, None, TP, None),
+    "bsf": (DP, None, TP),
+    "ecd": (TP, DP, None),
+    "bd": (DP, None),
+}
+
+# cache entries: kv-heads on model when divisible, else the sequence axis
+# (context-parallel cache) — mirrors parallel.sharding._cache_rule
+_CACHE_RULES = {
+    "cache_kv": ((DP, None, TP, None), (DP, TP, None, None)),  # (B,S,KV,D)
+    "cache_latent": ((DP, TP, None), (DP, TP, None)),  # (B,S,r)
+    "cache_state": ((DP, TP, None, None), (DP, None, None, None)),  # (B,H,k,k)
+}
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if kind == "logits":
+        rule = (DP,) + (None,) * (x.ndim - 2) + (TP,)
+    elif kind == "btd" and getattr(_STATE, "seq_parallel", False):
+        rule = (DP, TP, None)
+    elif kind == "bshd" and x.shape[2] % mesh.shape.get("model", 1) != 0:
+        # heads don't divide TP (e.g. 40 heads / 16): context-parallel
+        # attention — shard the sequence dim instead of replicating heads
+        rule = (DP, TP, None, None)
+    elif kind in _CACHE_RULES:
+        primary, fallback = _CACHE_RULES[kind]
+        spec = _fit(mesh, tuple(x.shape), primary)
+        # if the head axis could not shard, fall back to sequence sharding
+        if kind == "cache_kv" and spec[2] is None:
+            spec = _fit(mesh, tuple(x.shape), fallback)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    else:
+        rule = _RULES[kind]
+    spec = _fit(mesh, tuple(x.shape), rule)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,265 @@
+"""Sharding rules: param/activation/cache PartitionSpecs for the production mesh.
+
+Mesh axes (launch/mesh.py):
+    single-pod : (data=16, model=16)
+    multi-pod  : (pod=2, data=16, model=16)
+
+Strategy (megatron tensor-parallel + ZeRO-style fsdp on the data axis):
+    * every weight matrix shards its "parallel" dimension (heads / d_ff /
+      experts / vocab) over ``model`` and its d_model-ish dimension over
+      ``data`` (fully-sharded params; XLA all-gathers at use — ZeRO-3);
+    * activations shard batch over ``(pod, data)`` and heads/vocab over
+      ``model``;
+    * decode caches shard batch over ``(pod, data)`` and kv-heads over
+      ``model`` when divisible, falling back to the cache sequence axis
+      (context-parallel decode), falling back to replication.
+
+Every rule passes through `_fit`, which drops a mesh axis from a dimension
+whose size it does not divide — so one rule set covers all ten architectures
+(e.g. kv=1 MQA caches can never shard kv-heads and fall back to sequence).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, shape: Sequence[int], spec: Sequence[Axis]) -> P:
+    """Drop axes that don't divide the corresponding dim (or don't exist)."""
+    fitted = []
+    for dim, axis in zip(shape, spec):
+        if axis is None:
+            fitted.append(None)
+            continue
+        names = (axis,) if isinstance(axis, str) else tuple(axis)
+        names = tuple(a for a in names if a in mesh.shape)
+        while names and dim % _axis_size(mesh, names) != 0:
+            names = names[:-1]  # drop innermost first
+        fitted.append(None if not names else (names[0] if len(names) == 1 else names))
+    # pad remaining dims with None
+    fitted += [None] * (len(shape) - len(fitted))
+    return P(*fitted)
+
+
+DP = ("pod", "data")  # the batch axes
+FSDP = "data"
+TP = "model"
+
+
+# --------------------------------------------------------------------------
+# Parameter rules: (path regex, spec builder by rank/shape)
+# --------------------------------------------------------------------------
+def _param_rule(path: str, shape: Tuple[int, ...]) -> Tuple[Axis, ...]:
+    """Returns the desired axis per dimension (pre-fit)."""
+    # ---- embeddings / heads -------------------------------------------
+    if re.search(r"embed/table$", path):
+        if len(shape) == 3:  # (C, V, D) multi-codebook
+            return (None, TP, FSDP)
+        return (TP, FSDP)  # (V, D)
+    if re.search(r"lm_head/w$", path):
+        if len(shape) == 3:  # (C, D, V)
+            return (None, FSDP, TP)
+        return (FSDP, TP)  # (D, V)
+    # ---- attention ------------------------------------------------------
+    if re.search(r"mixer/w_[qkv]$", path):
+        return (FSDP, TP, None)  # (D, H, Dh)
+    if re.search(r"mixer/w_o$", path):
+        return (TP, None, FSDP)  # (H, Dh, D)
+    if re.search(r"mixer/b_[qkv]$", path):
+        return (TP, None)  # (H, Dh)
+    # ---- MLA -------------------------------------------------------------
+    if re.search(r"mixer/w_dkv$", path):
+        return (FSDP, None)  # (D, r)
+    if re.search(r"mixer/w_(uk|uv)$", path):
+        return (None, TP, None)  # (r, H, dh)
+    if re.search(r"mixer/w_kr$", path):
+        return (FSDP, None)  # (D, dr)
+    # ---- MoE --------------------------------------------------------------
+    if re.search(r"mlp/router$", path):
+        return (None, None)  # (D, E): small; replicated for shard_map dispatch
+    if re.search(r"mlp/w_(gate|up)$", path) and len(shape) == 3:
+        return (TP, FSDP, None)  # (E, D, F): expert parallel + ZeRO-3 on D
+    if re.search(r"mlp/w_down$", path) and len(shape) == 3:
+        return (TP, None, FSDP)  # (E, F, D)
+    if re.search(r"shared/w_(gate|up)$", path):
+        return (FSDP, TP)  # (D, Fs)
+    if re.search(r"shared/w_down$", path):
+        return (TP, FSDP)  # (Fs, D)
+    # ---- dense MLP ----------------------------------------------------------
+    if re.search(r"mlp/w_(gate|up|k)$", path):
+        return (FSDP, TP)  # (D, F)
+    if re.search(r"mlp/w_(down|v)$", path):
+        return (TP, FSDP)  # (F, D)
+    if re.search(r"mlp/w_r$", path):
+        return (FSDP, TP)  # rwkv cmix receptance (D, D)
+    # ---- RG-LRU ---------------------------------------------------------------
+    if re.search(r"mixer/w_[yx]$", path):
+        return (FSDP, TP)  # (D, W)
+    if re.search(r"mixer/conv_w$", path):
+        return (None, TP)  # (K, W)
+    if re.search(r"mixer/conv_b$", path):
+        return (TP,)
+    if re.search(r"mixer/w_[ai]$", path):
+        return (FSDP, TP)  # (W, W)
+    if re.search(r"mixer/lambda$", path):
+        return (TP,)
+    if re.search(r"mixer/w_out$", path):
+        return (TP, FSDP)  # (W, D)
+    # ---- RWKV6 -------------------------------------------------------------------
+    if re.search(r"mixer/w_[rkvgo]$", path):
+        return (FSDP, TP)  # (D, D)
+    if re.search(r"mixer/decay_a$", path):
+        return (FSDP, None)
+    if re.search(r"mixer/decay_b$", path):
+        return (None, TP)
+    # ---- everything small (norms, mus, gains, bonus): replicate -------------------
+    return tuple(None for _ in shape)
+
+
+def _tree_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for keypath, leaf in flat:
+        path = "/".join(_key_str(k) for k in keypath)
+        yield path, leaf
+    return
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def param_sharding(mesh: Mesh, params: Any, *, stacked_prefixes=("blocks",)) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs).
+
+    Parameters under a stacked prefix (the scan-stacked pattern blocks) have a
+    leading n_blocks dim that is never sharded; rules apply to the rest.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for keypath, leaf in flat:
+        path = "/".join(_key_str(k) for k in keypath)
+        shape = tuple(leaf.shape)
+        stacked = any(path.startswith(p + "/") or path == p for p in stacked_prefixes)
+        eff_shape = shape[1:] if stacked else shape
+        rule = _param_rule(path, eff_shape)
+        spec = _fit(mesh, eff_shape, rule)
+        if stacked:
+            spec = P(None, *spec)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------------------
+# Activation / input specs
+# --------------------------------------------------------------------------
+def activation_specs(mesh: Mesh, inputs: Any) -> Any:
+    """Batch over (pod, data) for every input array; aux dims replicated.
+
+    ``inputs`` is the input_specs() dict: tokens/targets/image_embeds etc.,
+    all with leading batch.
+    """
+
+    def one(x):
+        return _fit(mesh, tuple(x.shape), (DP,) + (None,) * (len(x.shape) - 1))
+
+    return jax.tree_util.tree_map(one, inputs)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return _fit(mesh, (1 << 30, 1 << 30, 1 << 30), (DP, None, TP))
+
+
+# --------------------------------------------------------------------------
+# Decode-cache rules
+# --------------------------------------------------------------------------
+def _cache_rule(path: str, shape: Tuple[int, ...]) -> Tuple[Axis, ...]:
+    # shapes WITHOUT the stacked n_blocks dim
+    if re.search(r"/(k|v)$", path):  # (B, S, KV, Dh)
+        b, s, kv, dh = shape
+        return (DP, (TP,), None, None) if False else (DP, None, TP, None)
+    if re.search(r"/ckv$", path):  # (B, S, r)
+        return (DP, TP, None)
+    if re.search(r"/kr$", path):  # (B, S, dr)
+        return (DP, TP, None)
+    if re.search(r"/state$", path):  # (B, H, k, k)
+        return (DP, TP, None, None)
+    if re.search(r"/conv$", path):  # (B, K-1, W)
+        return (DP, None, TP)
+    if re.search(r"/h$", path):  # (B, W)
+        return (DP, TP)
+    if re.search(r"/(shift|cmix_shift)$", path):  # (B, D)
+        return (DP, TP)
+    return tuple(None for _ in shape)
+
+
+def cache_specs_sharding(mesh: Mesh, cache: Any) -> Any:
+    """Cache PartitionSpecs: batch over (pod,data); kv-heads over model when
+    divisible, else the cache sequence axis (context-parallel decode)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for keypath, leaf in flat:
+        path = "/".join(_key_str(k) for k in keypath)
+        shape = tuple(leaf.shape)
+        stacked = path.startswith("blocks/") or "/blocks/" in path
+        eff_shape = shape[1:] if stacked else shape
+        rule = list(_cache_rule(path, eff_shape))
+        spec = _fit(mesh, eff_shape, tuple(rule))
+        # fallback: if this is a k/v cache and kv-heads could not shard,
+        # shard the sequence axis instead (context-parallel decode)
+        if re.search(r"/(k|v)$", path) and len(eff_shape) == 4:
+            if spec[2] is None and eff_shape[1] % mesh.shape.get("model", 1) == 0:
+                spec = P(spec[0], TP, None, None)
+        specs.append(P(None, *spec) if stacked else spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------------------
+# Introspection helper
+# --------------------------------------------------------------------------
+def shard_info(mesh: Mesh, tree: Any, specs: Any) -> str:
+    """Human-readable table of leaf shapes, specs and per-device bytes."""
+    lines = []
+    total = 0
+    flat_t, _ = jax.tree_util.tree_flatten_with_path(tree)
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for (keypath, leaf), spec in zip(flat_t, flat_s):
+        path = "/".join(_key_str(k) for k in keypath)
+        n_shards = 1
+        for axis in spec:
+            if axis is not None:
+                n_shards *= _axis_size(mesh, axis)
+        nbytes = leaf.size * leaf.dtype.itemsize // max(n_shards, 1)
+        total += nbytes
+        lines.append(f"{path:70s} {str(leaf.shape):28s} {str(spec):40s} {nbytes/2**20:10.2f} MiB")
+    lines.append(f"{'TOTAL per device':70s} {'':28s} {'':40s} {total/2**30:10.2f} GiB")
+    return "\n".join(lines)
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )

@@ -1,0 +1,13 @@
+"""Solution generation: synthetic mutation engine + real-LLM HTTP clients."""
+
+from repro.proposers.base import Proposal, Proposer
+from repro.proposers.synthetic import SyntheticLLM
+from repro.proposers.llm import AnthropicProposer, OpenAIProposer
+
+__all__ = [
+    "AnthropicProposer",
+    "OpenAIProposer",
+    "Proposal",
+    "Proposer",
+    "SyntheticLLM",
+]

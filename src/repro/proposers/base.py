@@ -1,0 +1,42 @@
+"""Proposer interface: prompt (+ structured bundle) -> candidate source."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.traverse import GuidingConfig, InformationBundle
+from repro.tasks.base import KernelTask
+
+
+@dataclasses.dataclass
+class Proposal:
+    source: str
+    genome: Optional[Dict[str, Any]] = None
+    insight: str = ""
+    # what changed relative to the parent (structured view for the insight
+    # store; None for from-scratch proposals)
+    knob: Optional[str] = None
+    choice: Any = None
+    parent_sid: Optional[str] = None
+    tokens_out: int = 0
+
+
+class Proposer:
+    """One generation step.  Real-LLM proposers use only ``prompt``;
+    the synthetic engine additionally reads the structured bundle."""
+
+    name = "base"
+
+    def propose(
+        self,
+        task: KernelTask,
+        prompt: str,
+        bundle: InformationBundle,
+        guiding: GuidingConfig,
+        fault,
+        rng: np.random.Generator,
+    ) -> Proposal:
+        raise NotImplementedError

@@ -1,0 +1,104 @@
+"""Real-LLM proposers over HTTPS (unexercised offline; implemented for
+production use — EXPERIMENTS.md records that all offline results use the
+SyntheticLLM engine instead).
+
+Both clients render the prompt from the Prompt Engineering Layer verbatim,
+request a single ``kernel`` function plus a one-line insight, and extract
+the first python code block from the response.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import urllib.request
+from typing import Optional
+
+import numpy as np
+
+from repro.core.traverse import GuidingConfig, InformationBundle
+from repro.proposers.base import Proposal, Proposer
+from repro.tasks.base import KernelTask
+
+_CODE_RE = re.compile(r"```(?:python)?\n(.*?)```", re.S)
+_INSIGHT_RE = re.compile(r"(?:insight|rationale)\s*[:\-]\s*(.+)", re.I)
+
+
+def _extract(text: str) -> Proposal:
+    m = _CODE_RE.search(text)
+    source = m.group(1) if m else text
+    im = _INSIGHT_RE.search(text)
+    insight = im.group(1).strip() if im else ""
+    return Proposal(
+        source=source, insight=insight, tokens_out=max(1, len(text) // 4)
+    )
+
+
+class AnthropicProposer(Proposer):
+    name = "anthropic"
+
+    def __init__(self, model: str = "claude-sonnet-4-20250514", api_key: Optional[str] = None,
+                 max_tokens: int = 4096, temperature: float = 0.8):
+        self.model = model
+        self.api_key = api_key or os.environ.get("ANTHROPIC_API_KEY", "")
+        self.max_tokens = max_tokens
+        self.temperature = temperature
+
+    def propose(self, task: KernelTask, prompt: str, bundle: InformationBundle,
+                guiding: GuidingConfig, fault, rng: np.random.Generator) -> Proposal:
+        req = urllib.request.Request(
+            "https://api.anthropic.com/v1/messages",
+            data=json.dumps(
+                {
+                    "model": self.model,
+                    "max_tokens": self.max_tokens,
+                    "temperature": self.temperature,
+                    "messages": [{"role": "user", "content": prompt}],
+                }
+            ).encode(),
+            headers={
+                "x-api-key": self.api_key,
+                "anthropic-version": "2023-06-01",
+                "content-type": "application/json",
+            },
+        )
+        with urllib.request.urlopen(req, timeout=120) as resp:
+            body = json.loads(resp.read())
+        text = "".join(
+            b.get("text", "") for b in body.get("content", []) if b.get("type") == "text"
+        )
+        return _extract(text)
+
+
+class OpenAIProposer(Proposer):
+    name = "openai"
+
+    def __init__(self, model: str = "gpt-4.1-2025-04-14", api_key: Optional[str] = None,
+                 max_tokens: int = 4096, temperature: float = 0.8):
+        self.model = model
+        self.api_key = api_key or os.environ.get("OPENAI_API_KEY", "")
+        self.max_tokens = max_tokens
+        self.temperature = temperature
+
+    def propose(self, task: KernelTask, prompt: str, bundle: InformationBundle,
+                guiding: GuidingConfig, fault, rng: np.random.Generator) -> Proposal:
+        req = urllib.request.Request(
+            "https://api.openai.com/v1/chat/completions",
+            data=json.dumps(
+                {
+                    "model": self.model,
+                    "max_tokens": self.max_tokens,
+                    "temperature": self.temperature,
+                    "messages": [{"role": "user", "content": prompt}],
+                }
+            ).encode(),
+            headers={
+                "Authorization": f"Bearer {self.api_key}",
+                "content-type": "application/json",
+            },
+        )
+        with urllib.request.urlopen(req, timeout=120) as resp:
+            body = json.loads(resp.read())
+        text = body["choices"][0]["message"]["content"]
+        return _extract(text)

@@ -1,0 +1,182 @@
+"""SyntheticLLM — the offline stand-in for the LLM code generator.
+
+A seeded stochastic source-to-source engine over each task's genome space,
+with an explicit FAULT MODEL so validity is a measurable outcome:
+
+  * with p_syntax    : emit genuinely broken source (unbalanced paren,
+                       missing name, bad indent) -> fails stage 1 for real;
+  * with p_semantic  : emit compiling-but-wrong code (perturbed constant,
+                       wrong axis, off-by-one slice) -> fails stage 2 for real;
+  * otherwise        : a genome move — exploration (random genome) vs
+                       exploitation (neighbor of a parent, biased toward
+                       knob choices whose measured gains the insight store
+                       recorded) at the method's `explore` rate.
+
+The information regime modulates behavior exactly as the paper argues it
+does for real LLMs: parents (I2) anchor proposals near known-good genomes;
+insights (I3) steer knob choices; their absence means wide random search.
+Every proposal also states a one-line insight (knob -> choice), the
+"solution-insight pair" the paper's methods produce.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.insights import InsightStore
+from repro.core.traverse import GuidingConfig, InformationBundle
+from repro.proposers.base import Proposal, Proposer
+from repro.tasks.base import KernelTask
+
+
+def _break_syntax(source: str, rng: np.random.Generator) -> str:
+    """Introduce a real stage-1 fault."""
+    mode = int(rng.integers(4))
+    lines = source.splitlines()
+    body_idx = [i for i, l in enumerate(lines) if l.startswith("    ") and l.strip()]
+    if not body_idx:
+        return source + "\n)"
+    i = body_idx[int(rng.integers(len(body_idx)))]
+    if mode == 0:  # unbalanced paren
+        lines[i] = lines[i] + ")"
+    elif mode == 1:  # undefined name
+        lines[i] = re.sub(r"\bjnp\b", "jnp_undefined", lines[i], count=1)
+    elif mode == 2:  # bad indent
+        lines[i] = " " + lines[i]
+    else:  # truncated response (the classic LLM failure)
+        lines = lines[: max(3, len(lines) - int(rng.integers(1, 4)))]
+    return "\n".join(lines)
+
+
+def _break_semantics(source: str, rng: np.random.Generator) -> str:
+    """Introduce a real stage-2 fault: compiles, wrong output."""
+    candidates = [
+        (r"axis=-1", "axis=0"),
+        (r"jnp\.maximum", "jnp.minimum"),
+        (r"\+ 1e-05", "+ 1e-01"),
+        (r"(\W)0\.5(\W)", r"\g<1>0.55\g<2>"),
+        (r"i:i\+step", "i:i+step-1"),
+        (r"jnp\.exp", "jnp.expm1"),
+        (r"jnp\.sum", "jnp.mean"),
+        (r"jnp\.concatenate", "lambda a, axis=0: jnp.concatenate(a[::-1], axis=axis)"),
+        (r" @ ", " + 0.001 + @ "),  # may also be a syntax break — still a fault
+    ]
+    order = rng.permutation(len(candidates))
+    for j in order:
+        pat, rep = candidates[int(j)]
+        new, n = re.subn(pat, rep, source, count=1)
+        if n:
+            return new
+    # fallback: scale the return value
+    return source.replace("return out", "return out * 1.01")
+
+
+class SyntheticLLM(Proposer):
+    name = "synthetic"
+
+    def __init__(self, insight_store: Optional[InsightStore] = None):
+        self.insight_store = insight_store
+
+    # ------------------------------------------------------------------
+    def propose(
+        self,
+        task: KernelTask,
+        prompt: str,
+        bundle: InformationBundle,
+        guiding: GuidingConfig,
+        fault,
+        rng: np.random.Generator,
+    ) -> Proposal:
+        genome, knob, choice, parent_sid = self._pick_genome(
+            task, bundle, guiding, fault, rng
+        )
+        source = task.render(genome)
+        insight = (
+            f"set {knob}={choice}" if knob else f"try genome {genome}"
+        )
+
+        r = rng.random()
+        if r < fault.p_syntax:
+            source = _break_syntax(source, rng)
+            insight = "(response was malformed)"
+            genome = None
+        elif r < fault.p_syntax + fault.p_semantic:
+            source = _break_semantics(source, rng)
+            insight = f"set {knob}={choice} (subtly wrong)"
+            genome = None
+
+        return Proposal(
+            source=source,
+            genome=genome,
+            insight=insight,
+            knob=knob,
+            choice=choice,
+            parent_sid=parent_sid,
+            tokens_out=max(1, len(source) // 4 + len(insight) // 4),
+        )
+
+    # ------------------------------------------------------------------
+    def _pick_genome(self, task, bundle, guiding, fault, rng):
+        parents = [s for s in bundle.historical if s.genome]
+        explore = rng.random() < fault.explore or not parents
+
+        if explore or bundle.operator in ("e1", "convert"):
+            genome = task.random_genome(rng)
+            # insights bias even exploration (I3): prefer knob choices with
+            # positive measured gain
+            genome = self._apply_insight_bias(task, genome, guiding, rng)
+            return genome, None, None, None
+
+        # exploitation: move near a parent
+        if bundle.operator == "e2" and len(parents) >= 2:
+            # crossover: per-knob uniform pick between two parents
+            a, b = parents[0], parents[1]
+            genome = {
+                k: (a.genome if rng.random() < 0.5 else b.genome).get(
+                    k, task.naive_genome[k]
+                )
+                for k in task.genome_space
+            }
+            return genome, None, None, a.sid
+        parent = parents[int(rng.integers(len(parents)))]
+        base = {k: parent.genome.get(k, task.naive_genome[k]) for k in task.genome_space}
+        knob = self._pick_knob(task, guiding, rng)
+        genome, knob, choice = task.neighbor_genome(base, rng, knob=knob)
+        genome = self._apply_insight_bias(task, genome, guiding, rng, keep=knob)
+        return genome, knob, genome[knob], parent.sid
+
+    def _pick_knob(self, task, guiding, rng) -> Optional[str]:
+        """With insights, prefer knobs with the largest observed |gain|."""
+        if not (guiding.use_insights and self.insight_store):
+            return None
+        bias = self.insight_store.knob_bias()
+        knobs = [k for k in task.genome_space if k in bias]
+        if not knobs or rng.random() < 0.3:
+            return None
+        weights = np.array(
+            [max(abs(g) for g in bias[k].values()) + 1e-3 for k in knobs]
+        )
+        weights = weights / weights.sum()
+        return knobs[int(rng.choice(len(knobs), p=weights))]
+
+    def _apply_insight_bias(self, task, genome, guiding, rng, keep=None):
+        if not (guiding.use_insights and self.insight_store):
+            return genome
+        bias = self.insight_store.knob_bias()
+        g = dict(genome)
+        for knob, choices in bias.items():
+            if knob == keep or knob not in task.genome_space:
+                continue
+            best_choice, best_gain = max(choices.items(), key=lambda kv: kv[1])
+            if best_gain > 0 and rng.random() < 0.6:
+                # unhash tuples back to lists where needed
+                for cand in task.genome_space[knob]:
+                    if cand == best_choice or (
+                        isinstance(best_choice, tuple) and list(best_choice) == cand
+                    ):
+                        g[knob] = cand
+                        break
+        return g

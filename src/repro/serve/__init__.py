@@ -1,0 +1,5 @@
+"""Serving substrate: KV-cache engine, prefill/decode steps, batched loop."""
+
+from repro.serve.engine import ServeEngine, make_decode_step, make_prefill_step
+
+__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step"]

@@ -1,0 +1,128 @@
+"""Serving: prefill + decode step builders and a batched generation engine.
+
+``make_prefill_step`` returns logits for the last position plus a cache
+padded to the decode horizon; ``make_decode_step`` advances one token for the
+whole batch.  The decode cells of the dry-run lower exactly
+``make_decode_step``'s function (one new token against a seq_len cache), per
+the assignment.
+
+ServeEngine drives continuous batched generation (greedy or temperature
+sampling) with per-sequence stop handling — the minimal production loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as C
+from repro.models.transformer import decode_step, forward, init_cache
+
+
+def _pad_cache_to(cfg: C.ModelConfig, cache: Any, batch: int, max_len: int) -> Any:
+    """Pad a prefill cache out to the decode-horizon shapes.
+
+    Target shapes come from cache_specs(cfg, batch, max_len) so ring-buffer
+    local caches stay window-sized while global caches grow to max_len.
+    Padding appends at the end of the sequence axis, matching the decode
+    write position (pos continues from the prefill length).
+    """
+    from repro.models.transformer import cache_specs
+
+    specs = cache_specs(cfg, batch, max_len)
+
+    def pad(x, spec):
+        if tuple(x.shape) == tuple(spec.shape):
+            return x
+        widths = [(0, t - c) for c, t in zip(x.shape, spec.shape)]
+        assert all(w[1] >= 0 for w in widths), (x.shape, spec.shape)
+        return jnp.pad(x, widths)
+
+    return jax.tree.map(pad, cache, specs)
+
+
+def make_prefill_step(cfg: C.ModelConfig, *, max_len: Optional[int] = None):
+    """prefill(params, tokens[, image_embeds]) -> (last_logits, cache)."""
+
+    def prefill(params, tokens, image_embeds=None):
+        logits, _, cache = forward(
+            cfg, params, tokens, image_embeds=image_embeds, return_cache=True,
+            last_only=True,
+        )
+        last = logits[:, -1]
+        if max_len is not None:
+            cache = _pad_cache_to(cfg, cache, tokens.shape[0], max_len)
+        return last, cache
+
+    return prefill
+
+
+def make_decode_step(cfg: C.ModelConfig):
+    """decode(params, cache, tokens, pos) -> (logits, new_cache).
+
+    This is the ``serve_step`` lowered by the decode dry-run cells.
+    """
+
+    def step(params, cache, tokens, pos):
+        return decode_step(cfg, params, cache, tokens, pos)
+
+    return step
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Batched greedy/temperature generation over a fixed request batch."""
+
+    cfg: C.ModelConfig
+    params: Any
+    max_len: int
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg, max_len=self.max_len))
+        self._decode = jax.jit(make_decode_step(self.cfg))
+
+    def generate(
+        self,
+        tokens: jax.Array,
+        *,
+        steps: int,
+        key: Optional[jax.Array] = None,
+        image_embeds: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """tokens: (B, S0) prompt.  Returns (B, S0+steps) completed tokens."""
+        cfg = self.cfg
+        b, s0 = tokens.shape[0], tokens.shape[1]
+        if image_embeds is not None:
+            last, cache = self._prefill(self.params, tokens, image_embeds)
+        else:
+            last, cache = self._prefill(self.params, tokens)
+        pos0 = s0 + cfg.num_prefix_embeds
+        out = [tokens]
+        done = jnp.zeros((b,), bool)
+        cur = self._sample(last, key, 0)
+        for t in range(steps):
+            nt = cur[:, None] if cfg.num_codebooks == 1 else cur[:, None, :]
+            out.append(cur[:, None] if cfg.num_codebooks == 1 else cur[:, None, :])
+            logits, cache = self._decode(
+                self.params, cache, nt, jnp.int32(pos0 + t)
+            )
+            cur = self._sample(logits[:, 0], key, t + 1)
+            if self.eos_id is not None:
+                done = done | (cur == self.eos_id)
+                if bool(done.all()):
+                    break
+        return jnp.concatenate(out, axis=1)
+
+    def _sample(self, logits: jax.Array, key, t: int) -> jax.Array:
+        if logits.shape[-1] != self.cfg.vocab_size:  # mask padded vocab ids
+            valid = jnp.arange(logits.shape[-1]) < self.cfg.vocab_size
+            logits = jnp.where(valid, logits, -jnp.inf)
+        if self.temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, t)
+        return jax.random.categorical(k, logits / self.temperature).astype(jnp.int32)

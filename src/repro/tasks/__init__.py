@@ -1,0 +1,39 @@
+"""KernelBench-JAX: 91 kernel-optimization tasks in the paper's 6 categories.
+
+Category counts match the paper's Table 5 exactly:
+    Matrix Multiplication   18 (19.8%)
+    Convolution             28 (30.8%)
+    Activation & Pooling    21 (23.1%)
+    Normalization/Reduction 15 (16.5%)
+    Loss Functions           7 (7.7%)
+    Cumulative Operations    5 (5.5%)
+
+Each task carries: a pure-jnp reference oracle, seeded input generators, a
+deliberately-naive initial implementation (the optimization starting point,
+mirroring the paper's initial CUDA kernels), and a genome-parameterized
+implementation space that renders to real Python/JAX source text.
+"""
+
+from repro.tasks.base import KernelTask, TASK_REGISTRY, get_task, all_tasks
+from repro.tasks import catalog  # noqa: F401  (populates the registry)
+
+# The paper's Table 5 per-category counts (18/28/21/15/7/5) sum to 94 while
+# its headline says 91 kernels — an internal inconsistency of the paper
+# (the percentages are consistent with /91).  We implement all 94 and define
+# the 91-task benchmark set by excluding three supplementary tasks, keeping
+# category proportions as close to Table 5 as possible (DESIGN.md §7).
+SUPPLEMENTARY = ("conv1d_k7", "conv3d_asym", "act_softsign")
+
+
+def benchmark_tasks():
+    return [t for t in all_tasks() if t.name not in SUPPLEMENTARY]
+
+
+__all__ = [
+    "KernelTask",
+    "TASK_REGISTRY",
+    "SUPPLEMENTARY",
+    "all_tasks",
+    "benchmark_tasks",
+    "get_task",
+]

@@ -1,0 +1,93 @@
+"""Task definition + registry for KernelBench-JAX."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+CATEGORIES = (
+    "matmul",
+    "conv",
+    "act_pool",
+    "norm_reduce",
+    "loss",
+    "cumulative",
+)
+
+CATEGORY_LABELS = {
+    "matmul": "Matrix Multiplication",
+    "conv": "Convolution",
+    "act_pool": "Activation & Pooling",
+    "norm_reduce": "Normalization & Reduction",
+    "loss": "Loss Functions",
+    "cumulative": "Cumulative Operations",
+}
+
+
+@dataclasses.dataclass
+class KernelTask:
+    name: str
+    category: str
+    description: str
+    make_inputs: Callable[[int], Tuple[np.ndarray, ...]]
+    ref: Callable[..., Any]  # pure-jnp oracle
+    genome_space: Dict[str, List[Any]]
+    render: Callable[[Dict[str, Any]], str]  # genome -> python source
+    naive_genome: Dict[str, Any]  # the initial (deliberately slow) point
+    rtol: float = 2e-4
+    atol: float = 2e-4
+
+    @property
+    def initial_source(self) -> str:
+        return self.render(self.naive_genome)
+
+    def random_genome(self, rng: np.random.Generator) -> Dict[str, Any]:
+        return {k: v[int(rng.integers(len(v)))] for k, v in self.genome_space.items()}
+
+    def neighbor_genome(
+        self, genome: Dict[str, Any], rng: np.random.Generator, knob: Optional[str] = None
+    ) -> Tuple[Dict[str, Any], str, Any]:
+        """Mutate one knob; returns (new_genome, knob, new_choice)."""
+        knobs = list(self.genome_space)
+        knob = knob or knobs[int(rng.integers(len(knobs)))]
+        choices = [c for c in self.genome_space[knob] if c != genome.get(knob)]
+        if not choices:
+            return dict(genome), knob, genome.get(knob)
+        choice = choices[int(rng.integers(len(choices)))]
+        g = dict(genome)
+        g[knob] = choice
+        return g, knob, choice
+
+    def task_context(self) -> str:
+        """The I1 prompt section."""
+        shapes = [tuple(a.shape) for a in self.make_inputs(0)]
+        return (
+            f"Operation: {self.name} ({CATEGORY_LABELS[self.category]})\n"
+            f"{self.description}\n"
+            f"Input shapes: {shapes}\n"
+            "Target: single JAX function `kernel(*inputs)` matching the "
+            "reference within tolerance; minimize wall-clock runtime."
+        )
+
+
+TASK_REGISTRY: Dict[str, KernelTask] = {}
+
+
+def register(task: KernelTask) -> KernelTask:
+    if task.name in TASK_REGISTRY:
+        raise ValueError(f"duplicate task {task.name}")
+    TASK_REGISTRY[task.name] = task
+    return task
+
+
+def get_task(name: str) -> KernelTask:
+    return TASK_REGISTRY[name]
+
+
+def all_tasks(category: Optional[str] = None) -> List[KernelTask]:
+    ts = list(TASK_REGISTRY.values())
+    if category:
+        ts = [t for t in ts if t.category == category]
+    return ts

@@ -1,0 +1,166 @@
+"""The 91-task catalog — counts match the paper's Table 5 exactly.
+
+Sizes are tuned so the naive implementation runs in roughly 0.5–10 ms on the
+evaluation host: large enough to time reliably, small enough that a 45-trial
+x 6-method x 3-seed sweep is tractable.
+"""
+
+from repro.tasks.families import (
+    make_activation_task,
+    make_conv_task,
+    make_matmul_task,
+    make_pool_task,
+    make_softmax_task,
+)
+from repro.tasks.families2 import (
+    make_cumulative_task,
+    make_loss_task,
+    make_norm_task,
+    make_reduce_task,
+)
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Matrix multiplication — 18
+# ---------------------------------------------------------------------------
+make_matmul_task("mm_square_s", "Square matmul 128x128x128.", (128, 128), (128, 128))
+make_matmul_task("mm_square_m", "Square matmul 256x256x256.", (256, 256), (256, 256))
+make_matmul_task("mm_square_l", "Square matmul 384x384x384.", (384, 384), (384, 384))
+make_matmul_task("mm_tall", "Tall matmul 1024x128 @ 128x128.", (1024, 128), (128, 128))
+make_matmul_task("mm_wide", "Wide matmul 128x128 @ 128x1024.", (128, 128), (128, 1024))
+make_matmul_task("mm_small_k", "Inner-dim-poor matmul 512x32 @ 32x512.", (512, 32), (32, 512))
+make_matmul_task("mm_large_k", "Inner-dim-rich matmul 128x1024 @ 1024x128.", (128, 1024), (1024, 128))
+make_matmul_task("mm_at_b", "A^T B matmul.", (256, 192), (256, 160), ta=True)
+make_matmul_task("mm_a_bt", "A B^T matmul.", (192, 256), (160, 256), tb=True)
+make_matmul_task("mm_at_bt", "A^T B^T matmul.", (256, 192), (160, 256), ta=True, tb=True)
+make_matmul_task("mm_gemv", "Matrix-vector product (GEMV as 1-row GEMM).", (1, 768), (768, 768))
+make_matmul_task("mm_gevm", "Vector-matrix product.", (768, 768), (768, 1))
+make_matmul_task("mm_sym", "Symmetric product A A^T.", (256, 256), (256, 256), tb=True)
+make_matmul_task("mm_batched_s", "Batched matmul 8x(128^3).", (8, 128, 128), (8, 128, 128), batched=True)
+make_matmul_task("mm_batched_m", "Batched matmul 16x(96x96x160).", (16, 96, 96), (16, 96, 160), batched=True)
+make_matmul_task("mm_batched_heads", "Attention-shaped batched matmul 32 heads.", (32, 64, 64), (32, 64, 64), batched=True)
+make_matmul_task("mm_batched_bt", "Batched A B^T (score matmul).", (16, 128, 64), (16, 128, 64), tb=True, batched=True)
+make_matmul_task("mm_rect3", "Rectangular 320x256 @ 256x192.", (320, 256), (256, 192))
+
+# ---------------------------------------------------------------------------
+# Convolution — 28
+# ---------------------------------------------------------------------------
+# 1D (8)
+make_conv_task("conv1d_k3", "1D conv k=3.", (8, 32, 512), (64, 32, 3), stride=(1,), padding="SAME", dilation=(1,))
+make_conv_task("conv1d_k5", "1D conv k=5.", (8, 32, 512), (64, 32, 5), stride=(1,), padding="SAME", dilation=(1,))
+make_conv_task("conv1d_k7", "1D conv k=7.", (8, 32, 512), (64, 32, 7), stride=(1,), padding="SAME", dilation=(1,))
+make_conv_task("conv1d_stride2", "1D conv stride 2.", (8, 32, 512), (64, 32, 3), stride=(2,), padding="SAME", dilation=(1,))
+make_conv_task("conv1d_dilated", "1D conv dilation 2.", (8, 32, 512), (64, 32, 3), stride=(1,), padding="SAME", dilation=(2,))
+make_conv_task("conv1d_valid", "1D conv VALID padding.", (8, 32, 512), (64, 32, 5), stride=(1,), padding="VALID", dilation=(1,))
+make_conv_task("conv1d_depthwise", "1D depthwise conv.", (8, 64, 512), (64, 1, 3), stride=(1,), padding="SAME", dilation=(1,), groups=64)
+make_conv_task("conv1d_pointwise", "1D pointwise (1x1) conv.", (8, 64, 512), (128, 64, 1), stride=(1,), padding="VALID", dilation=(1,))
+# 2D (14)
+make_conv_task("conv2d_3x3", "2D conv 3x3.", (4, 16, 40, 40), (32, 16, 3, 3), stride=(1, 1), padding="SAME", dilation=(1, 1))
+make_conv_task("conv2d_5x5", "2D conv 5x5.", (4, 16, 40, 40), (32, 16, 5, 5), stride=(1, 1), padding="SAME", dilation=(1, 1))
+make_conv_task("conv2d_1x1", "2D pointwise conv.", (4, 64, 40, 40), (128, 64, 1, 1), stride=(1, 1), padding="VALID", dilation=(1, 1))
+make_conv_task("conv2d_stride2", "2D conv stride 2.", (4, 16, 40, 40), (32, 16, 3, 3), stride=(2, 2), padding="SAME", dilation=(1, 1))
+make_conv_task("conv2d_dilated2", "2D conv dilation 2.", (4, 16, 40, 40), (32, 16, 3, 3), stride=(1, 1), padding="SAME", dilation=(2, 2))
+make_conv_task("conv2d_dilated3", "2D conv dilation 3.", (4, 16, 40, 40), (32, 16, 3, 3), stride=(1, 1), padding="SAME", dilation=(3, 3))
+make_conv_task("conv2d_valid", "2D conv VALID.", (4, 16, 40, 40), (32, 16, 3, 3), stride=(1, 1), padding="VALID", dilation=(1, 1))
+make_conv_task("conv2d_asym_1x7", "2D conv asymmetric 1x7.", (4, 16, 40, 40), (32, 16, 1, 7), stride=(1, 1), padding="SAME", dilation=(1, 1))
+make_conv_task("conv2d_asym_7x1", "2D conv asymmetric 7x1.", (4, 16, 40, 40), (32, 16, 7, 1), stride=(1, 1), padding="SAME", dilation=(1, 1))
+make_conv_task("conv2d_depthwise", "2D depthwise conv.", (4, 32, 40, 40), (32, 1, 3, 3), stride=(1, 1), padding="SAME", dilation=(1, 1), groups=32)
+make_conv_task("conv2d_grouped4", "2D grouped conv (4 groups).", (4, 32, 40, 40), (64, 8, 3, 3), stride=(1, 1), padding="SAME", dilation=(1, 1), groups=4)
+make_conv_task("conv2d_stride2_5x5", "2D conv 5x5 stride 2.", (4, 16, 40, 40), (32, 16, 5, 5), stride=(2, 2), padding="SAME", dilation=(1, 1))
+make_conv_task("conv2d_transposed", "2D transposed conv (lhs dilation 2).", (4, 16, 24, 24), (32, 16, 3, 3), stride=(1, 1), padding=((1, 1), (1, 1)), dilation=(1, 1), lhs_dilation=(2, 2))
+make_conv_task("conv2d_wide_ch", "2D conv wide channels.", (4, 64, 20, 20), (128, 64, 3, 3), stride=(1, 1), padding="SAME", dilation=(1, 1))
+# 3D (6)
+make_conv_task("conv3d_3x3x3", "3D conv 3^3.", (2, 8, 16, 16, 16), (16, 8, 3, 3, 3), stride=(1, 1, 1), padding="SAME", dilation=(1, 1, 1))
+make_conv_task("conv3d_1x1x1", "3D pointwise conv.", (2, 16, 16, 16, 16), (32, 16, 1, 1, 1), stride=(1, 1, 1), padding="VALID", dilation=(1, 1, 1))
+make_conv_task("conv3d_stride2", "3D conv stride 2.", (2, 8, 16, 16, 16), (16, 8, 3, 3, 3), stride=(2, 2, 2), padding="SAME", dilation=(1, 1, 1))
+make_conv_task("conv3d_valid", "3D conv VALID.", (2, 8, 16, 16, 16), (16, 8, 3, 3, 3), stride=(1, 1, 1), padding="VALID", dilation=(1, 1, 1))
+make_conv_task("conv3d_asym", "3D conv asymmetric 3x1x1.", (2, 8, 16, 16, 16), (16, 8, 3, 1, 1), stride=(1, 1, 1), padding="SAME", dilation=(1, 1, 1))
+make_conv_task("conv3d_dilated", "3D conv dilation 2.", (2, 8, 16, 16, 16), (16, 8, 3, 3, 3), stride=(1, 1, 1), padding="SAME", dilation=(2, 2, 2))
+
+# ---------------------------------------------------------------------------
+# Activation & pooling — 21 (12 activations + 2 softmax + 7 pooling)
+# ---------------------------------------------------------------------------
+_ACT_SHAPE = (64, 4096)
+for _op in (
+    "relu", "leaky_relu", "elu", "selu", "gelu", "silu",
+    "mish", "sigmoid", "tanh", "hardtanh", "softplus", "softsign",
+):
+    make_activation_task(f"act_{_op}", _op, _ACT_SHAPE)
+make_softmax_task("act_softmax", (256, 1024))
+make_softmax_task("act_log_softmax", (256, 1024), log=True)
+make_pool_task("pool_max1d", "1D max-pool k=2 s=2.", (16, 32, 4096), k=(2,), s=(2,), op="max")
+make_pool_task("pool_avg1d", "1D avg-pool k=2 s=2.", (16, 32, 4096), k=(2,), s=(2,), op="avg")
+make_pool_task("pool_max2d", "2D max-pool 2x2.", (8, 32, 96, 96), k=(2, 2), s=(2, 2), op="max")
+make_pool_task("pool_avg2d", "2D avg-pool 2x2.", (8, 32, 96, 96), k=(2, 2), s=(2, 2), op="avg")
+make_pool_task("pool_max3d", "3D max-pool 2^3.", (4, 16, 24, 24, 24), k=(2, 2, 2), s=(2, 2, 2), op="max")
+make_pool_task("pool_avg3d", "3D avg-pool 2^3.", (4, 16, 24, 24, 24), k=(2, 2, 2), s=(2, 2, 2), op="avg")
+make_pool_task("pool_max2d_3x3", "2D max-pool 3x3 stride 2.", (8, 32, 96, 96), k=(3, 3), s=(2, 2), op="max")
+
+# ---------------------------------------------------------------------------
+# Normalization & reduction — 15 (6 norms + 9 reductions)
+# ---------------------------------------------------------------------------
+make_norm_task("norm_layer", "LayerNorm over last dim.", "layernorm", (128, 1024),
+               lambda x: (x - jnp.mean(x, -1, keepdims=True)) / jnp.sqrt(jnp.var(x, -1, keepdims=True) + 1e-5))
+make_norm_task("norm_rms", "RMSNorm over last dim.", "rmsnorm", (128, 1024),
+               lambda x: x / jnp.sqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-5))
+make_norm_task("norm_batch", "BatchNorm (training stats) NCHW.", "batchnorm", (16, 32, 16, 16),
+               lambda x: (x - jnp.mean(x, (0, 2, 3), keepdims=True)) / jnp.sqrt(jnp.var(x, (0, 2, 3), keepdims=True) + 1e-5))
+make_norm_task("norm_group", "GroupNorm (8 groups) NCHW.", "groupnorm", (8, 32, 16, 16),
+               lambda x: _groupnorm_ref(x, 8))
+make_norm_task("norm_instance", "InstanceNorm NCHW.", "instancenorm", (8, 16, 32, 32),
+               lambda x: (x - jnp.mean(x, (2, 3), keepdims=True)) / jnp.sqrt(jnp.var(x, (2, 3), keepdims=True) + 1e-5))
+make_norm_task("norm_l2", "L2 normalize rows.", "l2norm", (256, 1024),
+               lambda x: x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-5))
+
+
+def _groupnorm_ref(x, g):
+    x = jnp.asarray(x)
+    n, c = x.shape[0], x.shape[1]
+    xg = x.reshape(n, g, c // g, *x.shape[2:])
+    axes = tuple(range(2, xg.ndim))
+    m = jnp.mean(xg, axes, keepdims=True)
+    v = jnp.var(xg, axes, keepdims=True)
+    return ((xg - m) / jnp.sqrt(v + 1e-5)).reshape(x.shape)
+
+
+make_reduce_task("reduce_sum", "Row sums.", "sum", (512, 2048), lambda x: jnp.sum(x, -1))
+make_reduce_task("reduce_mean", "Row means.", "mean", (512, 2048), lambda x: jnp.mean(x, -1))
+make_reduce_task("reduce_max", "Row max.", "max", (512, 512), lambda x: jnp.max(x, -1))
+make_reduce_task("reduce_min", "Row min.", "min", (512, 512), lambda x: jnp.min(x, -1))
+make_reduce_task("reduce_prod", "Row product.", "prod", (256, 256), lambda x: jnp.prod(x, -1))
+make_reduce_task("reduce_std", "Row standard deviation.", "std", (512, 2048), lambda x: jnp.std(x, -1))
+make_reduce_task("reduce_frobenius", "Frobenius norm.", "frobenius", (512, 2048), lambda x: jnp.sqrt(jnp.sum(x * x)))
+make_reduce_task("reduce_logsumexp", "Row logsumexp.", "logsumexp", (512, 2048), lambda x: jax.nn.logsumexp(x, -1))
+make_reduce_task("reduce_argmax", "Row argmax.", "argmax", (512, 512), lambda x: jnp.argmax(x, -1))
+
+# ---------------------------------------------------------------------------
+# Loss functions — 7
+# ---------------------------------------------------------------------------
+make_loss_task("loss_mse", "Mean squared error.", "mse", (256, 1024),
+               lambda p, t: jnp.mean((p - t) ** 2))
+make_loss_task("loss_mae", "Mean absolute error.", "mae", (256, 1024),
+               lambda p, t: jnp.mean(jnp.abs(p - t)))
+make_loss_task("loss_huber", "Huber loss (delta=1).", "huber", (256, 1024),
+               lambda p, t: jnp.mean(jnp.where(jnp.abs(p - t) < 1.0, 0.5 * (p - t) ** 2, jnp.abs(p - t) - 0.5)))
+make_loss_task("loss_hinge", "Hinge loss.", "hinge", (256, 1024),
+               lambda p, t: jnp.mean(jnp.maximum(0.0, 1.0 - p * t)), target_kind="pm1")
+make_loss_task("loss_bce", "Binary cross-entropy with logits.", "bce", (256, 1024),
+               lambda p, t: -jnp.mean(t * jnp.log(jnp.clip(jax.nn.sigmoid(p), 1e-7, 1 - 1e-7)) + (1 - t) * jnp.log(jnp.clip(1 - jax.nn.sigmoid(p), 1e-7, 1 - 1e-7))),
+               target_kind="binary")
+make_loss_task("loss_ce", "Softmax cross-entropy (one-hot targets).", "ce", (256, 512),
+               lambda p, t: -jnp.mean(jnp.sum(t * jax.nn.log_softmax(p, -1), -1)),
+               target_kind="onehot")
+make_loss_task("loss_kl", "KL divergence between distributions.", "kl", (256, 512),
+               lambda p, t: jnp.mean(jnp.sum(t * (jnp.log(jnp.clip(t, 1e-9, None)) - jnp.log(jnp.clip(p, 1e-9, None))), -1)),
+               target_kind="simplex")
+
+# ---------------------------------------------------------------------------
+# Cumulative operations — 5
+# ---------------------------------------------------------------------------
+make_cumulative_task("cum_sum", "Inclusive cumulative sum.", (64, 1024))
+make_cumulative_task("cum_sum_rev", "Reverse cumulative sum.", (64, 1024), reverse=True)
+make_cumulative_task("cum_sum_excl", "Exclusive cumulative sum.", (64, 1024), exclusive=True)
+make_cumulative_task("cum_sum_masked", "Masked cumulative sum.", (64, 1024), masked=True)
+make_cumulative_task("cum_prod", "Cumulative product.", (64, 1024), op="cumprod")

@@ -1,0 +1,551 @@
+"""Task-family builders: genome spaces + source renderers per category.
+
+Every renderer emits a self-contained Python module defining
+``kernel(*inputs)``.  Genomes span REAL implementation choices with REAL
+wall-clock differences on the evaluation host (precision, algorithmic
+formulation, loop vs vectorized structure, library primitives), so measured
+speedups are genuine — the CPU analogue of the paper's CUDA optimization
+headroom.  The naive genome mirrors the paper's deliberately-unoptimized
+initial kernels.
+"""
+
+from __future__ import annotations
+
+import textwrap
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tasks.base import KernelTask, register
+
+_HEADER = "import jax\nimport jax.numpy as jnp\nfrom functools import partial\n\n"
+
+
+def _rng_inputs(shapes, seed, scale=1.0, positive=False, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    out = []
+    for sh in shapes:
+        a = rng.standard_normal(sh).astype(dtype) * scale
+        if positive:
+            a = np.abs(a) + 0.1
+        out.append(a)
+    return tuple(out)
+
+
+def _dtype_lines(genome) -> Tuple[str, str]:
+    """(pre-cast line, post-cast expr) for the precision knob."""
+    if genome.get("dtype", "float32") == "float64":
+        return (
+            "    args = [jnp.asarray(a, jnp.float64) for a in args]\n",
+            ".astype(jnp.float32)",
+        )
+    return ("", "")
+
+
+# ==========================================================================
+# 1. Matrix multiplication (18)
+# ==========================================================================
+def _mm_render(spec):
+    """Matmul source renderer.
+
+    loop_rows / blocked always materialize transposed copies (the naive
+    path); einsum / dot_general honor the pre_transpose knob (False folds
+    the transpose into contraction dims — no copy).
+    """
+
+    def render(genome: Dict[str, Any]) -> str:
+        pre, post = _dtype_lines(genome)
+        impl = genome["impl"]
+        ta, tb = spec["ta"], spec["tb"]
+        batched = bool(spec.get("batched"))
+        swap_a = "a = jnp.swapaxes(a, -1, -2)\n    " if ta else ""
+        swap_b = "b = jnp.swapaxes(b, -1, -2)\n    " if tb else ""
+        if impl == "loop_rows":
+            nch = genome.get("chunks", 8)
+            body = f"""
+    {swap_a}{swap_b}chunks = []
+    n = a.shape[{1 if batched else 0}]
+    step = max(1, n // {nch})
+    for i in range(0, n, step):
+        chunks.append(a[{':, ' if batched else ''}i:i+step] @ b)
+    out = jnp.concatenate(chunks, axis={1 if batched else 0})
+"""
+        elif impl == "blocked":
+            blk = genome.get("block", 64)
+            body = f"""
+    {swap_a}{swap_b}k = a.shape[-1]
+    acc = jnp.zeros(a.shape[:-1] + (b.shape[-1],), a.dtype)
+    for ks in range(0, k, {blk}):
+        acc = acc + a[..., ks:ks+{blk}] @ b[..., ks:ks+{blk}, :]
+    out = acc
+"""
+        elif impl == "einsum":
+            if genome.get("pre_transpose", True):
+                sub_a, sub_b = "ik", "kj"
+                prep = swap_a + swap_b
+            else:
+                sub_a = "ki" if ta else "ik"
+                sub_b = "jk" if tb else "kj"
+                prep = ""
+            bpre = "b" if batched else ""
+            body = f"    {prep}out = jnp.einsum('{bpre}{sub_a},{bpre}{sub_b}->{bpre}ij', a, b)\n"
+        else:  # dot_general
+            off = 1 if batched else 0
+            if genome.get("pre_transpose", True):
+                prep = swap_a + swap_b
+                ca, cb = 1 + off, 0 + off
+            else:
+                prep = ""
+                ca = (0 if ta else 1) + off
+                cb = (1 if tb else 0) + off
+            batch_dims = "((0,), (0,))" if batched else "((), ())"
+            body = (
+                f"    {prep}out = jax.lax.dot_general(a, b, "
+                f"((({ca},), ({cb},)), {batch_dims}))\n"
+            )
+        return _HEADER + f"def kernel(a, b):\n    args = [a, b]\n{pre}    a, b = args\n{body}    return out{post}\n"
+
+    return render
+
+
+def _mm_ref(spec):
+    def ref(a, b):
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if spec["ta"]:
+            a = jnp.swapaxes(a, -1, -2)
+        if spec["tb"]:
+            b = jnp.swapaxes(b, -1, -2)
+        return a @ b
+
+    return ref
+
+
+def make_matmul_task(name, desc, a_shape, b_shape, *, ta=False, tb=False, batched=False):
+    spec = {"ta": ta, "tb": tb, "batched": batched}
+    space = {
+        "impl": ["loop_rows", "blocked", "einsum", "dot_general"],
+        "dtype": ["float64", "float32"],
+        "block": [8, 16, 32, 64, 128],
+        "chunks": [4, 8, 16, 32, 64],
+        "pre_transpose": [True, False],
+    }
+    naive = {
+        "impl": "loop_rows",
+        "dtype": "float32",
+        "block": 8,
+        "chunks": 64,
+        "pre_transpose": True,
+    }
+    return register(
+        KernelTask(
+            name=name,
+            category="matmul",
+            description=desc,
+            make_inputs=lambda seed: _rng_inputs([a_shape, b_shape], seed, 0.5),
+            ref=_mm_ref(spec),
+            genome_space=space,
+            render=_mm_render(spec),
+            naive_genome=naive,
+            rtol=5e-3,
+            atol=5e-3,
+        )
+    )
+
+
+# ==========================================================================
+# 2. Convolution (28)
+# ==========================================================================
+def _conv_dim_numbers(nd):
+    return {1: ("NCH", "OIH", "NCH"), 2: ("NCHW", "OIHW", "NCHW"), 3: ("NCDHW", "OIDHW", "NCDHW")}[nd]
+
+
+def _conv_ref(spec):
+    nd = spec["nd"]
+    dn = _conv_dim_numbers(nd)
+
+    def ref(x, w):
+        return jax.lax.conv_general_dilated(
+            jnp.asarray(x),
+            jnp.asarray(w),
+            window_strides=spec["stride"],
+            padding=spec["padding"],
+            rhs_dilation=spec["dilation"],
+            lhs_dilation=spec.get("lhs_dilation", (1,) * nd),
+            feature_group_count=spec.get("groups", 1),
+            dimension_numbers=dn,
+        )
+
+    return ref
+
+
+def _conv_render(spec):
+    nd = spec["nd"]
+    dn = _conv_dim_numbers(nd)
+
+    def render(genome):
+        pre, post = _dtype_lines(genome)
+        impl = genome["impl"]
+        if impl == "lax_conv":
+            body = f"""
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides={spec['stride']}, padding={spec['padding']!r},
+        rhs_dilation={spec['dilation']}, lhs_dilation={spec.get('lhs_dilation', (1,)*nd)},
+        feature_group_count={spec.get('groups', 1)},
+        dimension_numbers={dn},
+    )
+"""
+        elif impl == "taps_loop":
+            body = f"""
+    out = _taps_conv(x, w, {spec['stride']}, {spec['padding']!r}, {spec['dilation']},
+                     {spec.get('lhs_dilation', (1,)*nd)}, {spec.get('groups', 1)})
+"""
+        else:  # im2col
+            body = f"""
+    out = _im2col_conv(x, w, {spec['stride']}, {spec['padding']!r},
+                       {spec['dilation']}, {spec.get('lhs_dilation', (1,)*nd)},
+                       {spec.get('groups', 1)})
+"""
+        single = f"def _single(x, w):\n{body}    return out\n"
+        if genome.get("batch_loop", False):
+            call = (
+                "    out = jnp.concatenate(\n"
+                "        [_single(x[i:i+1], w) for i in range(x.shape[0])], axis=0)\n"
+            )
+        else:
+            call = "    out = _single(x, w)\n"
+        return (
+            _HEADER
+            + _CONV_HELPERS
+            + single
+            + f"\ndef kernel(x, w):\n    args = [x, w]\n{pre}    x, w = args\n{call}    return out{post}\n"
+        )
+
+    return render
+
+
+_CONV_HELPERS = textwrap.dedent(
+    '''
+    def _dilate(x, lhs_dilation):
+        if all(d == 1 for d in lhs_dilation):
+            return x
+        sp = x.shape[2:]
+        new = tuple((s - 1) * d + 1 for s, d in zip(sp, lhs_dilation))
+        out = jnp.zeros(x.shape[:2] + new, x.dtype)
+        idx = (slice(None), slice(None)) + tuple(
+            slice(None, None, d) for d in lhs_dilation)
+        return out.at[idx].set(x)
+
+    def _pad_input(x, w, stride, padding, dilation):
+        nd = x.ndim - 2
+        if isinstance(padding, str):
+            eff_k = tuple((w.shape[2 + i] - 1) * dilation[i] + 1 for i in range(nd))
+            if padding == "SAME":
+                pads = []
+                for i in range(nd):
+                    out_sz = -(-x.shape[2 + i] // stride[i])
+                    total = max(0, (out_sz - 1) * stride[i] + eff_k[i] - x.shape[2 + i])
+                    pads.append((total // 2, total - total // 2))
+            else:
+                pads = [(0, 0)] * nd
+        else:
+            pads = list(padding)
+        cfg = [(0, 0), (0, 0)] + [(p[0], p[1]) for p in pads]
+        return jnp.pad(x, cfg)
+
+    def _taps_conv(x, w, stride, padding, dilation, lhs_dilation, groups):
+        x = _dilate(x, lhs_dilation)
+        xp = _pad_input(x, w, stride, padding if not isinstance(padding, str)
+                        else padding, dilation)
+        nd = x.ndim - 2
+        co, ci_g = w.shape[0], w.shape[1]
+        out = None
+        ksizes = w.shape[2:]
+        out_sp = tuple(
+            (xp.shape[2 + i] - ((ksizes[i] - 1) * dilation[i] + 1)) // stride[i] + 1
+            for i in range(nd))
+        for g in range(groups):
+            xg = xp[:, g * ci_g * groups // groups:, ...] if False else xp
+            cig0 = g * (xp.shape[1] // groups)
+            xg = xp[:, cig0:cig0 + xp.shape[1] // groups]
+            og = None
+            import itertools
+            for taps in itertools.product(*[range(k) for k in ksizes]):
+                sl = (slice(None), slice(None)) + tuple(
+                    slice(t * dilation[i],
+                          t * dilation[i] + out_sp[i] * stride[i], stride[i])
+                    for i, t in enumerate(taps))
+                patch = xg[sl]
+                wt = w[g * (co // groups):(g + 1) * (co // groups),
+                       (slice(None),) if False else slice(None)][
+                    :, :, *[slice(t, t + 1) for t in taps]]
+                wt = wt.reshape(co // groups, xp.shape[1] // groups)
+                contrib = jnp.tensordot(patch, wt, axes=((1,), (1,)))
+                contrib = jnp.moveaxis(contrib, -1, 1)
+                og = contrib if og is None else og + contrib
+            out = og if out is None else jnp.concatenate([out, og], axis=1)
+        return out
+
+    def _im2col_conv(x, w, stride, padding, dilation, lhs_dilation, groups):
+        x = _dilate(x, lhs_dilation)
+        nd = x.ndim - 2
+        pads = jax.lax.padtype_to_pads(x.shape[2:], tuple(
+            (w.shape[2 + i] - 1) * dilation[i] + 1 for i in range(nd)),
+            stride, padding) if isinstance(padding, str) else padding
+        dn = {1: ("NCH", "OIH", "NCH"), 2: ("NCHW", "OIHW", "NCHW"),
+              3: ("NCDHW", "OIDHW", "NCDHW")}[nd]
+        patches = jax.lax.conv_general_dilated_patches(
+            x, w.shape[2:], stride, pads, rhs_dilation=dilation,
+            dimension_numbers=dn)
+        n = x.shape[0]
+        co = w.shape[0]
+        wf = w.reshape(groups, co // groups, -1)
+        pf = patches.reshape(n, groups, wf.shape[-1], -1)
+        out = jnp.einsum('ngkp,ngok->ngop', pf, wf[None].repeat(n, 0)
+                         if False else jnp.broadcast_to(wf, (n,) + wf.shape))
+        return out.reshape((n, co) + patches.shape[2:])
+
+    '''
+)
+
+
+def make_conv_task(
+    name, desc, x_shape, w_shape, *, stride, padding, dilation,
+    lhs_dilation=None, groups=1,
+):
+    nd = len(x_shape) - 2
+    spec = {
+        "nd": nd,
+        "stride": stride,
+        "padding": padding,
+        "dilation": dilation,
+        "groups": groups,
+    }
+    if lhs_dilation:
+        spec["lhs_dilation"] = lhs_dilation
+    impls = ["taps_loop", "im2col", "lax_conv"] if nd <= 2 else ["taps_loop", "lax_conv"]
+    space = {
+        "impl": impls,
+        "dtype": ["float64", "float32"],
+        "batch_loop": [True, False],
+    }
+    naive = {"impl": "taps_loop", "dtype": "float32", "batch_loop": True}
+    return register(
+        KernelTask(
+            name=name,
+            category="conv",
+            description=desc,
+            make_inputs=lambda seed: _rng_inputs([x_shape, w_shape], seed, 0.3),
+            ref=_conv_ref(spec),
+            genome_space=space,
+            render=_conv_render(spec),
+            naive_genome=naive,
+            rtol=2e-3,
+            atol=2e-3,
+        )
+    )
+
+
+# ==========================================================================
+# 3. Activation & pooling (21)
+# ==========================================================================
+_ACT_EXPRS = {
+    "relu": "jnp.maximum(x, 0)",
+    "leaky_relu": "jnp.where(x >= 0, x, 0.01 * x)",
+    "elu": "jnp.where(x >= 0, x, jnp.exp(x) - 1.0)",
+    "selu": "1.0507 * jnp.where(x >= 0, x, 1.67326 * (jnp.exp(x) - 1.0))",
+    "gelu": "0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))",
+    "silu": "x * (1.0 / (1.0 + jnp.exp(-x)))",
+    "mish": "x * jnp.tanh(jnp.logaddexp(x, 0.0))",
+    "sigmoid": "1.0 / (1.0 + jnp.exp(-x))",
+    "tanh": "jnp.tanh(x)",
+    "hardtanh": "jnp.clip(x, -1.0, 1.0)",
+    "softplus": "jnp.logaddexp(x, 0.0)",
+    "softsign": "x / (1.0 + jnp.abs(x))",
+}
+
+
+def _act_render(op):
+    def render(genome):
+        pre, post = _dtype_lines(genome)
+        expr = _ACT_EXPRS[op]
+        if genome["impl"] == "chunked_loop":
+            nch = genome.get("chunks", 16)
+            body = f"""
+    flat = x.reshape(-1)
+    outs = []
+    step = max(1, flat.shape[0] // {nch})
+    for i in range(0, flat.shape[0], step):
+        x = flat[i:i+step]
+        outs.append({expr})
+    out = jnp.concatenate(outs).reshape(args[0].shape)
+"""
+        else:
+            body = f"    out = {expr}\n"
+        return _HEADER + f"def kernel(x):\n    args = [x]\n{pre}    x, = args\n{body}    return out{post}\n"
+
+    return render
+
+
+def make_activation_task(name, op, shape):
+    fns = {
+        "relu": lambda x: jax.nn.relu(x),
+        "leaky_relu": lambda x: jax.nn.leaky_relu(x, 0.01),
+        "elu": lambda x: jax.nn.elu(x),
+        "selu": lambda x: jax.nn.selu(x),
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": lambda x: jax.nn.silu(x),
+        "mish": lambda x: x * jnp.tanh(jax.nn.softplus(x)),
+        "sigmoid": lambda x: jax.nn.sigmoid(x),
+        "tanh": lambda x: jnp.tanh(x),
+        "hardtanh": lambda x: jnp.clip(x, -1.0, 1.0),
+        "softplus": lambda x: jax.nn.softplus(x),
+        "softsign": lambda x: jax.nn.soft_sign(x),
+    }
+    return register(
+        KernelTask(
+            name=name,
+            category="act_pool",
+            description=f"Elementwise {op} activation.",
+            make_inputs=lambda seed: _rng_inputs([shape], seed, 2.0),
+            ref=fns[op],
+            genome_space={
+                "impl": ["chunked_loop", "vectorized"],
+                "chunks": [8, 16, 32, 64],
+                "dtype": ["float64", "float32"],
+            },
+            render=_act_render(op),
+            naive_genome={"impl": "chunked_loop", "chunks": 64, "dtype": "float32"},
+        )
+    )
+
+
+def _softmax_render(log: bool):
+    def render(genome):
+        pre, post = _dtype_lines(genome)
+        if genome["impl"] == "unstable":
+            core = "e = jnp.exp(x); p = e / jnp.sum(e, axis=-1, keepdims=True)"
+        else:
+            core = (
+                "m = jnp.max(x, axis=-1, keepdims=True); e = jnp.exp(x - m); "
+                "p = e / jnp.sum(e, axis=-1, keepdims=True)"
+            )
+        out = "jnp.log(p)" if log else "p"
+        nch = genome.get("rowloop", 0)
+        if nch:
+            body = f"""
+    rows = []
+    full = x
+    step = max(1, full.shape[0] // {nch})
+    for i in range(0, full.shape[0], step):
+        x = full[i:i+step]
+        {core}
+        rows.append({out})
+    out = jnp.concatenate(rows, axis=0)
+"""
+        else:
+            body = f"    {core}\n    out = {out}\n"
+        return _HEADER + f"def kernel(x):\n    args = [x]\n{pre}    x, = args\n{body}    return out{post}\n"
+
+    return render
+
+
+def make_softmax_task(name, shape, log=False):
+    ref = (lambda x: jax.nn.log_softmax(x, axis=-1)) if log else (
+        lambda x: jax.nn.softmax(x, axis=-1)
+    )
+    return register(
+        KernelTask(
+            name=name,
+            category="act_pool",
+            description=("Log-softmax" if log else "Softmax") + " over the last axis.",
+            make_inputs=lambda seed: _rng_inputs([shape], seed, 2.0),
+            ref=ref,
+            genome_space={
+                "impl": ["unstable", "stable"],
+                "rowloop": [0, 16, 64],
+                "dtype": ["float64", "float32"],
+            },
+            render=_softmax_render(log),
+            naive_genome={"impl": "stable", "rowloop": 64, "dtype": "float32"},
+        )
+    )
+
+
+def _pool_render(spec):
+    nd, op = spec["nd"], spec["op"]
+
+    def render(genome):
+        pre, post = _dtype_lines(genome)
+        k, s = spec["k"], spec["s"]
+        init = "-jnp.inf" if op == "max" else "0.0"
+        comb = "jax.lax.max" if op == "max" else "jax.lax.add"
+        wdims = (1, 1) + tuple(k)
+        wstr = (1, 1) + tuple(s)
+        if genome["impl"] == "stack_slices":
+            body = f"""
+    import itertools
+    acc = None
+    sp = x.shape[2:]
+    out_sp = tuple((sp[i] - {k}[i]) // {s}[i] + 1 for i in range({nd}))
+    for taps in itertools.product(*[range(kk) for kk in {k}]):
+        sl = (slice(None), slice(None)) + tuple(
+            slice(t, t + out_sp[i] * {s}[i], {s}[i]) for i, t in enumerate(taps))
+        patch = x[sl]
+        acc = patch if acc is None else ({'jnp.maximum(acc, patch)' if op == 'max' else 'acc + patch'})
+    out = acc{' / ' + str(int(np.prod(k))) + '.0' if op == 'avg' else ''}
+"""
+        else:
+            div = f" / {int(np.prod(k))}.0" if op == "avg" else ""
+            body = f"""
+    out = jax.lax.reduce_window(x, {init}, {comb}, {wdims}, {wstr}, 'VALID'){div}
+"""
+        single = f"def _single(x):\n{body}    return out\n"
+        if genome.get("batch_loop", False):
+            call = (
+                "    out = jnp.concatenate(\n"
+                "        [_single(x[i:i+1]) for i in range(x.shape[0])], axis=0)\n"
+            )
+        else:
+            call = "    out = _single(x)\n"
+        return (
+            _HEADER
+            + single
+            + f"\ndef kernel(x):\n    args = [x]\n{pre}    x, = args\n{call}    return out{post}\n"
+        )
+
+    return render
+
+
+def make_pool_task(name, desc, shape, *, k, s, op):
+    nd = len(shape) - 2
+    spec = {"nd": nd, "k": k, "s": s, "op": op}
+
+    def ref(x):
+        init = -jnp.inf if op == "max" else 0.0
+        comb = jax.lax.max if op == "max" else jax.lax.add
+        out = jax.lax.reduce_window(
+            jnp.asarray(x), init, comb, (1, 1) + tuple(k), (1, 1) + tuple(s), "VALID"
+        )
+        if op == "avg":
+            out = out / float(np.prod(k))
+        return out
+
+    return register(
+        KernelTask(
+            name=name,
+            category="act_pool",
+            description=desc,
+            make_inputs=lambda seed: _rng_inputs([shape], seed, 1.0),
+            ref=ref,
+            genome_space={
+                "impl": ["stack_slices", "reduce_window"],
+                "batch_loop": [True, False],
+                "dtype": ["float64", "float32"],
+            },
+            render=_pool_render(spec),
+            naive_genome={"impl": "stack_slices", "batch_loop": True, "dtype": "float32"},
+        )
+    )

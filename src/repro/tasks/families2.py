@@ -1,0 +1,411 @@
+"""Task families (continued): normalization/reduction, loss, cumulative."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tasks.base import KernelTask, register
+from repro.tasks.families import _HEADER, _dtype_lines, _rng_inputs
+
+
+# ==========================================================================
+# 4. Normalization & reduction (15)
+# ==========================================================================
+def _norm_render(op, axis_repr="-1", eps=1e-5):
+    def render(genome):
+        pre, post = _dtype_lines(genome)
+        two_pass = genome.get("stats", "two_pass") == "two_pass"
+        if op in ("layernorm", "rmsnorm", "groupnorm", "instancenorm"):
+            if op == "rmsnorm":
+                core = f"ms = jnp.mean(x * x, axis={axis_repr}, keepdims=True)\n    out = x / jnp.sqrt(ms + {eps})"
+            elif two_pass:
+                core = (
+                    f"mean = jnp.mean(x, axis={axis_repr}, keepdims=True)\n"
+                    f"    var = jnp.mean((x - mean) ** 2, axis={axis_repr}, keepdims=True)\n"
+                    f"    out = (x - mean) / jnp.sqrt(var + {eps})"
+                )
+            else:
+                core = (
+                    f"mean = jnp.mean(x, axis={axis_repr}, keepdims=True)\n"
+                    f"    var = jnp.mean(x * x, axis={axis_repr}, keepdims=True) - mean * mean\n"
+                    f"    out = (x - mean) * jax.lax.rsqrt(var + {eps})"
+                )
+            if op == "groupnorm":
+                core = (
+                    "n, c = x.shape[0], x.shape[1]\n"
+                    "    xg = x.reshape(n, 8, c // 8, *x.shape[2:])\n    x = xg\n    "
+                    + core.replace(axis_repr, "tuple(range(2, x.ndim))")
+                    + "\n    out = out.reshape(n, c, *args[0].shape[2:])"
+                )
+            if op == "instancenorm":
+                core = core.replace(axis_repr, "(2, 3)")
+        elif op == "batchnorm":
+            core = (
+                "mean = jnp.mean(x, axis=(0, 2, 3), keepdims=True)\n"
+                "    var = jnp.var(x, axis=(0, 2, 3), keepdims=True)\n"
+                f"    out = (x - mean) / jnp.sqrt(var + {eps})"
+            )
+        elif op == "l2norm":
+            core = f"out = x / (jnp.linalg.norm(x, axis={axis_repr}, keepdims=True) + {eps})"
+        else:
+            raise ValueError(op)
+        nch = genome.get("rowloop", 0)
+        if nch:
+            body = f"""
+    rows = []
+    step = max(1, x.shape[0] // {nch})
+    full = x
+    for i in range(0, full.shape[0], step):
+        x = full[i:i+step]
+        {core.replace(chr(10) + '    ', chr(10) + '        ')}
+        rows.append(out)
+    out = jnp.concatenate(rows, axis=0)
+"""
+        else:
+            body = f"    {core}\n"
+        return _HEADER + f"def kernel(x):\n    args = [x]\n{pre}    x, = args\n{body}    return out{post}\n"
+
+    return render
+
+
+def make_norm_task(name, desc, op, shape, ref, axis_repr="-1"):
+    # batch-statistics norms must see the whole batch: row-chunking would
+    # change semantics, so the knob collapses for them
+    allow_rowloop = op not in ("batchnorm",)
+    return register(
+        KernelTask(
+            name=name,
+            category="norm_reduce",
+            description=desc,
+            make_inputs=lambda seed: _rng_inputs([shape], seed, 1.5),
+            ref=ref,
+            genome_space={
+                "stats": ["two_pass", "fused"],
+                "rowloop": [0, 16, 64] if allow_rowloop else [0],
+                "dtype": ["float64", "float32"],
+            },
+            render=_norm_render(op, axis_repr),
+            naive_genome={
+                "stats": "two_pass",
+                "rowloop": 64 if allow_rowloop else 0,
+                "dtype": "float32",
+            },
+            rtol=1e-3,
+            atol=1e-3,
+        )
+    )
+
+
+def _reduce_render(op, axis_repr):
+    expr = {
+        "sum": f"jnp.sum(x, axis={axis_repr})",
+        "mean": f"jnp.mean(x, axis={axis_repr})",
+        "max": f"jnp.max(x, axis={axis_repr})",
+        "min": f"jnp.min(x, axis={axis_repr})",
+        "prod": f"jnp.prod(x, axis={axis_repr})",
+        "std": f"jnp.std(x, axis={axis_repr})",
+        "frobenius": "jnp.sqrt(jnp.sum(x * x))",
+        "logsumexp": f"jax.nn.logsumexp(x, axis={axis_repr})",
+        "argmax": f"jnp.argmax(x, axis={axis_repr})",
+    }[op]
+    pair = {
+        "sum": ("a + b", "0.0"),
+        "max": ("jnp.maximum(a, b)", "-jnp.inf"),
+        "min": ("jnp.minimum(a, b)", "jnp.inf"),
+        "prod": ("a * b", "1.0"),
+    }
+
+    sort_expr = {
+        "max": "jnp.sort(x, axis=-1)[..., -1]",
+        "min": "jnp.sort(x, axis=-1)[..., 0]",
+        "argmax": "jnp.argsort(x, axis=-1)[..., -1]",
+        "sum": "jnp.sum(jnp.sort(x, axis=-1), axis=-1)",  # 'numerically careful' naive
+        "mean": "jnp.mean(jnp.sort(x, axis=-1), axis=-1)",
+        "logsumexp": "jax.nn.logsumexp(jnp.sort(x, axis=-1), axis=-1)",
+    }
+
+    def render(genome):
+        pre, post = _dtype_lines(genome)
+        if op == "argmax":
+            post = ""  # integer output
+        impl = genome["impl"]
+        if impl == "sort_based" and op in sort_expr:
+            body = f"    out = {sort_expr[op]}\n"
+        elif impl in ("chunk_loop", "sort_based") and op in pair:
+            comb, init = pair[op]
+            nch = genome.get("chunks", 16)
+            body = f"""
+    acc = None
+    step = max(1, x.shape[-1] // {nch})
+    for i in range(0, x.shape[-1], step):
+        part = x[..., i:i+step]
+        red = {expr.replace('(x', '(part')}
+        if acc is None:
+            acc = red
+        else:
+            a, b = acc, red
+            acc = {comb}
+    out = acc
+"""
+        else:
+            body = f"    out = {expr}\n"
+        return _HEADER + f"def kernel(x):\n    args = [x]\n{pre}    x, = args\n{body}    return out{post}\n"
+
+    return render
+
+
+def make_reduce_task(name, desc, op, shape, ref, axis_repr="-1"):
+    positive = op == "prod"
+    return register(
+        KernelTask(
+            name=name,
+            category="norm_reduce",
+            description=desc,
+            make_inputs=lambda seed: _rng_inputs(
+                [shape], seed, 0.05 if op == "prod" else 1.0, positive=positive
+            ),
+            ref=ref,
+            genome_space={
+                "impl": ["sort_based", "chunk_loop", "vectorized"],
+                "chunks": [16, 64],
+                "dtype": ["float64", "float32"],
+            },
+            render=_reduce_render(op, axis_repr),
+            naive_genome={
+                "impl": "sort_based" if op in ("max", "min", "argmax", "sum", "mean", "logsumexp") else "chunk_loop",
+                "chunks": 64,
+                "dtype": "float32",
+            },
+            rtol=1e-3,
+            atol=1e-3,
+        )
+    )
+
+
+# ==========================================================================
+# 5. Loss functions (7)
+# ==========================================================================
+_LOSS_CORES = {
+    "mse": "out = jnp.mean((pred - target) ** 2)",
+    "mae": "out = jnp.mean(jnp.abs(pred - target))",
+    "huber": (
+        "d = jnp.abs(pred - target)\n"
+        "    out = jnp.mean(jnp.where(d < 1.0, 0.5 * d * d, d - 0.5))"
+    ),
+    "hinge": "out = jnp.mean(jnp.maximum(0.0, 1.0 - pred * target))",
+    "bce": (
+        "p = jnp.clip(1.0 / (1.0 + jnp.exp(-pred)), 1e-7, 1 - 1e-7)\n"
+        "    out = -jnp.mean(target * jnp.log(p) + (1 - target) * jnp.log(1 - p))"
+    ),
+    "ce": (
+        "logp = pred - jax.nn.logsumexp(pred, axis=-1, keepdims=True)\n"
+        "    out = -jnp.mean(jnp.sum(target * logp, axis=-1))"
+    ),
+    "kl": (
+        "logp = jnp.log(jnp.clip(pred, 1e-9, None))\n"
+        "    logq = jnp.log(jnp.clip(target, 1e-9, None))\n"
+        "    out = jnp.mean(jnp.sum(target * (logq - logp), axis=-1))"
+    ),
+}
+
+
+def _loss_render(op):
+    def render(genome):
+        pre, post = _dtype_lines(genome)
+        core = _LOSS_CORES[op]
+        if genome.get("two_pass", False):
+            # materialize elementwise losses, reduce in a second pass
+            core = core.replace("jnp.mean(", "jnp.mean(jnp.asarray(", 1).replace(
+                ")", "))", 1
+            ) if False else core
+        nch = genome.get("rowloop", 0)
+        if nch:
+            body = f"""
+    total = 0.0
+    n = pred.shape[0]
+    step = max(1, n // {nch})
+    fullp, fullt = pred, target
+    for i in range(0, n, step):
+        pred, target = fullp[i:i+step], fullt[i:i+step]
+        {core.replace(chr(10) + '    ', chr(10) + '        ')}
+        total = total + out * pred.shape[0]
+    out = total / n
+"""
+        else:
+            body = f"    {core}\n"
+        return (
+            _HEADER
+            + f"def kernel(pred, target):\n    args = [pred, target]\n{pre}    pred, target = args\n{body}    return out{post}\n"
+        )
+
+    return render
+
+
+def make_loss_task(name, desc, op, shape, ref, *, target_kind="real"):
+    def make_inputs(seed):
+        rng = np.random.default_rng(seed)
+        pred = rng.standard_normal(shape).astype(np.float32)
+        if target_kind == "real":
+            target = rng.standard_normal(shape).astype(np.float32)
+        elif target_kind == "binary":
+            target = (rng.random(shape) > 0.5).astype(np.float32)
+        elif target_kind == "pm1":
+            target = np.sign(rng.standard_normal(shape)).astype(np.float32)
+        elif target_kind == "simplex":
+            t = np.abs(rng.standard_normal(shape)) + 1e-3
+            target = (t / t.sum(-1, keepdims=True)).astype(np.float32)
+            pred = np.abs(pred) + 1e-3
+            pred = (pred / pred.sum(-1, keepdims=True)).astype(np.float32)
+        elif target_kind == "onehot":
+            idx = rng.integers(0, shape[-1], shape[:-1])
+            target = np.eye(shape[-1], dtype=np.float32)[idx]
+        return pred, target
+
+    return register(
+        KernelTask(
+            name=name,
+            category="loss",
+            description=desc,
+            make_inputs=make_inputs,
+            ref=ref,
+            genome_space={
+                "rowloop": [0, 16, 64],
+                "dtype": ["float64", "float32"],
+            },
+            render=_loss_render(op),
+            naive_genome={"rowloop": 64, "dtype": "float32"},
+        )
+    )
+
+
+# ==========================================================================
+# 6. Cumulative operations (5)
+# ==========================================================================
+def _cum_render(spec):
+    op = spec["op"]
+
+    def render(genome):
+        pre, post = _dtype_lines(genome)
+        impl = genome["impl"]
+        if op == "cumsum":
+            mat = "jnp.tril(jnp.ones((n, n), x.dtype))"
+            if spec.get("exclusive"):
+                mat = "jnp.tril(jnp.ones((n, n), x.dtype), k=-1)"
+            if spec.get("reverse"):
+                mat = mat.replace("tril", "triu")
+                if spec.get("exclusive"):
+                    mat = mat.replace("k=-1", "k=1")
+            builtin = "jnp.cumsum(x, axis=-1)"
+            if spec.get("reverse"):
+                builtin = "jnp.flip(jnp.cumsum(jnp.flip(x, -1), axis=-1), -1)"
+            if spec.get("exclusive"):
+                builtin = (
+                    "jnp.concatenate([jnp.zeros_like(x[..., :1]), "
+                    "jnp.cumsum(x, axis=-1)[..., :-1]], axis=-1)"
+                    if not spec.get("reverse")
+                    else "jnp.concatenate([jnp.flip(jnp.cumsum(jnp.flip(x, -1), "
+                    "axis=-1), -1)[..., 1:], jnp.zeros_like(x[..., :1])], axis=-1)"
+                )
+            if spec.get("masked"):
+                prep = "    x = x * mask\n"
+            else:
+                prep = ""
+            if impl == "matmul_tri":
+                body = f"{prep}    n = x.shape[-1]\n    out = x @ {mat}.T\n"
+            elif impl == "assoc_scan":
+                core = "jax.lax.associative_scan(jnp.add, x, axis=-1)"
+                if spec.get("reverse"):
+                    core = "jnp.flip(jax.lax.associative_scan(jnp.add, jnp.flip(x, -1), axis=-1), -1)"
+                if spec.get("exclusive"):
+                    core = (
+                        "jnp.concatenate([jnp.zeros_like(x[..., :1]), ("
+                        + core
+                        + ")[..., :-1]], axis=-1)"
+                        if not spec.get("reverse")
+                        else "jnp.concatenate([(" + core + ")[..., 1:], jnp.zeros_like(x[..., :1])], axis=-1)"
+                    )
+                body = f"{prep}    out = {core}\n"
+            else:
+                body = f"{prep}    out = {builtin}\n"
+        else:  # cumprod
+            if impl == "chunk_loop":
+                body = """
+    n = x.shape[-1]
+    step = max(1, n // 16)
+    outs = []
+    carry = jnp.ones(x.shape[:-1] + (1,), x.dtype)
+    for i in range(0, n, step):
+        seg = jnp.cumprod(x[..., i:i+step], axis=-1) * carry
+        outs.append(seg)
+        carry = seg[..., -1:]
+    out = jnp.concatenate(outs, axis=-1)
+"""
+            elif impl == "assoc_scan":
+                body = "    out = jax.lax.associative_scan(jnp.multiply, x, axis=-1)\n"
+            else:
+                body = "    out = jnp.cumprod(x, axis=-1)\n"
+        sig = "x, mask" if spec.get("masked") else "x"
+        arglist = "[x, mask]" if spec.get("masked") else "[x]"
+        unpack = "x, mask = args" if spec.get("masked") else "x, = args"
+        return _HEADER + f"def kernel({sig}):\n    args = {arglist}\n{pre}    {unpack}\n{body}    return out{post}\n"
+
+    return render
+
+
+def make_cumulative_task(name, desc, shape, *, op="cumsum", **flags):
+    spec = {"op": op, **flags}
+
+    def ref(*arrays):
+        x = jnp.asarray(arrays[0])
+        if flags.get("masked"):
+            x = x * jnp.asarray(arrays[1])
+        if op == "cumprod":
+            return jnp.cumprod(x, axis=-1)
+        if flags.get("reverse"):
+            out = jnp.flip(jnp.cumsum(jnp.flip(x, -1), axis=-1), -1)
+        else:
+            out = jnp.cumsum(x, axis=-1)
+        if flags.get("exclusive"):
+            if flags.get("reverse"):
+                out = jnp.concatenate(
+                    [out[..., 1:], jnp.zeros_like(x[..., :1])], axis=-1
+                )
+            else:
+                out = jnp.concatenate(
+                    [jnp.zeros_like(x[..., :1]), out[..., :-1]], axis=-1
+                )
+        return out
+
+    def make_inputs(seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal(shape).astype(np.float32) * 0.1
+        if op == "cumprod":
+            x = 1.0 + x * 0.05
+        if flags.get("masked"):
+            mask = (rng.random(shape) > 0.3).astype(np.float32)
+            return x, mask
+        return (x,)
+
+    impls = (
+        ["matmul_tri", "assoc_scan", "builtin"]
+        if op == "cumsum"
+        else ["chunk_loop", "assoc_scan", "builtin"]
+    )
+    return register(
+        KernelTask(
+            name=name,
+            category="cumulative",
+            description=desc,
+            make_inputs=make_inputs,
+            ref=ref,
+            genome_space={"impl": impls, "dtype": ["float64", "float32"]},
+            render=_cum_render(spec),
+            naive_genome={"impl": impls[0], "dtype": "float32"},
+            rtol=1e-3,
+            atol=1e-3,
+        )
+    )

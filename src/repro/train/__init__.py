@@ -1,0 +1,14 @@
+"""Training substrate: optimizers, loss, data pipeline, checkpointing, steps."""
+
+from repro.train.optim import adafactor, adamw, sgd
+from repro.train.steps import make_eval_step, make_train_step
+from repro.train.loss import cross_entropy_loss
+
+__all__ = [
+    "adafactor",
+    "adamw",
+    "sgd",
+    "cross_entropy_loss",
+    "make_eval_step",
+    "make_train_step",
+]

@@ -1,0 +1,157 @@
+"""Checkpointing: atomic save/restore of arbitrary pytrees + retention.
+
+Format: one ``.npz`` holding the flattened leaves (keyed by index) plus a
+JSON sidecar with the treedef structure, dtypes and metadata.  Writes are
+atomic (tmp file + rename) so a crash mid-save never corrupts the latest
+checkpoint — the fault-tolerance contract is: restart always finds either
+the previous or the new complete checkpoint.
+
+Used by both the training loop (params / opt state / step / data offset)
+and the evolution engine (population / RNG / trial ledger).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^ckpt_(\d+)$")
+
+
+def _leaf_to_np(x):
+    if isinstance(x, (int, float, bool, str)):
+        return x
+    return np.asarray(x)
+
+
+def save(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Atomically write ``tree`` as checkpoint ``step``; prune old ones."""
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {}
+    scalars = {}
+    for i, leaf in enumerate(leaves):
+        v = _leaf_to_np(leaf)
+        if isinstance(v, np.ndarray):
+            arrays[f"leaf_{i}"] = v
+        else:
+            scalars[str(i)] = v
+    meta = {
+        "step": int(step),
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "scalars": scalars,
+        "structure": jax.tree_util.tree_structure(tree).num_leaves,
+    }
+
+    final = os.path.join(directory, f"ckpt_{step}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        with open(os.path.join(tmp, "leaves.npz"), "wb") as f:
+            np.savez(f, **arrays)
+        # serialize treedef via example pytree of leaf indices
+        idx_tree = jax.tree_util.tree_unflatten(treedef, list(range(len(leaves))))
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({**meta, "index_tree": _to_jsonable(idx_tree)}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _prune(directory, keep)
+    return final
+
+
+def _to_jsonable(tree):
+    if isinstance(tree, dict):
+        return {"__dict__": {k: _to_jsonable(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        tag = "__list__" if isinstance(tree, list) else "__tuple__"
+        return {tag: [_to_jsonable(v) for v in tree]}
+    if hasattr(tree, "_fields"):  # namedtuple
+        return {
+            "__namedtuple__": type(tree).__name__,
+            "fields": {k: _to_jsonable(v) for k, v in tree._asdict().items()},
+        }
+    return tree  # leaf index (int)
+
+
+def _prune(directory: str, keep: int) -> None:
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"ckpt_{s}"), ignore_errors=True)
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, "meta.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: Optional[int] = None, *, template: Any = None) -> Tuple[Any, int]:
+    """Load checkpoint ``step`` (default latest).  Returns (tree, step).
+
+    With ``template`` given, leaves are restored into the template's pytree
+    structure (and cast to template dtypes) — the safe path when the code's
+    pytree classes (NamedTuples) are not reconstructible from JSON alone.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"ckpt_{step}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    with np.load(os.path.join(path, "leaves.npz"), allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    scalars = meta.get("scalars", {})
+    leaves = []
+    for i in range(meta["n_leaves"]):
+        if f"leaf_{i}" in arrays:
+            leaves.append(arrays[f"leaf_{i}"])
+        else:
+            leaves.append(scalars[str(i)])
+    if template is not None:
+        t_leaves, treedef = jax.tree_util.tree_flatten(template)
+        if len(t_leaves) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves; template has {len(t_leaves)}"
+            )
+        cast = [
+            np.asarray(l).astype(t.dtype) if hasattr(t, "dtype") else l
+            for l, t in zip(leaves, t_leaves)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, cast), step
+    tree = _from_jsonable(meta["index_tree"], leaves)
+    return tree, step
+
+
+def _from_jsonable(node, leaves):
+    if isinstance(node, dict):
+        if "__dict__" in node:
+            return {k: _from_jsonable(v, leaves) for k, v in node["__dict__"].items()}
+        if "__list__" in node:
+            return [_from_jsonable(v, leaves) for v in node["__list__"]]
+        if "__tuple__" in node:
+            return tuple(_from_jsonable(v, leaves) for v in node["__tuple__"])
+        if "__namedtuple__" in node:
+            return {k: _from_jsonable(v, leaves) for k, v in node["fields"].items()}
+    return leaves[node]

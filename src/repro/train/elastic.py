@@ -1,0 +1,129 @@
+"""Elastic scaling: re-mesh a training run onto a different device count.
+
+The fault-tolerance story for node loss at fleet scale: checkpoints are
+device-layout-agnostic (train/checkpoint.py stores plain host arrays), so a
+job restarted on a smaller or larger slice rebuilds its mesh from whatever
+``jax.devices()`` reports and reshards the restored state.  Two invariants
+make this sound:
+
+  * the GLOBAL batch is part of the run config, not the mesh — a restart on
+    half the chips doubles per-device batch (or raises grad-accum
+    microbatches via the same escalation ladder as the dry-run), so the
+    optimization trajectory (in units of steps) is unchanged;
+  * the data pipeline is (seed, step, process)-deterministic, and host
+    sharding re-partitions the same global batch over the new process set.
+
+``plan_elastic_config`` computes the new mesh + microbatching; ``reshard``
+places a restored host-side state onto it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    microbatches: int
+    per_device_batch: int
+    note: str
+
+
+def plan_elastic_config(
+    global_batch: int,
+    *,
+    devices: Optional[int] = None,
+    model_parallel: int = 1,
+    prev_microbatches: int = 1,
+) -> ElasticPlan:
+    """Choose (data, model) mesh + microbatching for the available devices.
+
+    Keeps the model-parallel degree (weights layout) and resizes the data
+    axis; if per-device batch would exceed what the previous configuration
+    implied, scales microbatches so the activation footprint stays bounded.
+    """
+    n = devices if devices is not None else jax.device_count()
+    if n % model_parallel != 0:
+        # degrade model parallelism to the largest divisor that fits
+        mp = model_parallel
+        while mp > 1 and n % mp != 0:
+            mp //= 2
+        note = f"model_parallel {model_parallel} -> {mp} (devices={n})"
+        model_parallel = mp
+    else:
+        note = ""
+    data = n // model_parallel
+    if global_batch % data != 0:
+        # shrink the data axis to a divisor of the global batch
+        d = data
+        while d > 1 and global_batch % d != 0:
+            d -= 1
+        note += f" data {data} -> {d} (global_batch {global_batch})"
+        data = d
+    per_device = global_batch // data
+    # keep the per-microbatch slice no larger than before the resize
+    micro = prev_microbatches
+    while per_device // micro > max(1, per_device // prev_microbatches // 2) * 2:
+        micro *= 2
+    micro = min(micro, per_device)
+    while per_device % micro:
+        micro -= 1
+    return ElasticPlan(
+        mesh_shape=(data, model_parallel),
+        axis_names=("data", "model"),
+        microbatches=max(1, micro),
+        per_device_batch=per_device,
+        note=note.strip() or "clean fit",
+    )
+
+
+def build_mesh(plan: ElasticPlan) -> Mesh:
+    n = int(np.prod(plan.mesh_shape))
+    devs = np.array(jax.devices()[:n]).reshape(plan.mesh_shape)
+    return Mesh(devs, plan.axis_names)
+
+
+def reshard(tree: Any, mesh: Mesh, specs: Any) -> Any:
+    """Place a host-side (restored) pytree onto the mesh per the specs."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        put, tree, specs, is_leaf=lambda x: not isinstance(x, (dict, list, tuple))
+    )
+
+
+def resume_elastic(
+    ckpt_dir: str,
+    template: Any,
+    param_spec_fn,
+    *,
+    global_batch: int,
+    model_parallel: int = 1,
+    prev_microbatches: int = 1,
+) -> Tuple[Any, int, Mesh, ElasticPlan]:
+    """Restore the latest checkpoint and re-mesh it onto current devices.
+
+    param_spec_fn(mesh) -> PartitionSpec pytree for the state.
+    Returns (state_on_mesh, step, mesh, plan).
+    """
+    from repro.train import checkpoint as ckpt
+
+    plan = plan_elastic_config(
+        global_batch,
+        model_parallel=model_parallel,
+        prev_microbatches=prev_microbatches,
+    )
+    mesh = build_mesh(plan)
+    state, step = ckpt.restore(ckpt_dir, template=template)
+    specs = param_spec_fn(mesh)
+    return reshard(state, mesh, specs), step, mesh, plan

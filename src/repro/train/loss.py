@@ -1,0 +1,44 @@
+"""Cross-entropy loss, computed without materializing full log-softmax.
+
+loss = logsumexp(logits) - logit[target], masked where target < 0.
+Handles multi-codebook logits (B, S, C, V) with targets (B, S, C).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_loss(
+    logits: jax.Array,
+    targets: jax.Array,
+    *,
+    z_loss: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (mean_loss, n_valid_tokens).  targets < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (targets >= 0).astype(jnp.float32)
+    safe_targets = jnp.maximum(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    target_logit = jnp.take_along_axis(
+        logits, safe_targets[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - target_logit) * mask
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(lse) * mask
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / n, n
+
+
+def shift_labels(tokens: jax.Array, pad: int = -1) -> jax.Array:
+    """Next-token targets: labels[t] = tokens[t+1]; last position masked."""
+    if tokens.ndim == 2:
+        return jnp.concatenate(
+            [tokens[:, 1:], jnp.full_like(tokens[:, :1], pad)], axis=1
+        )
+    return jnp.concatenate(
+        [tokens[:, 1:, :], jnp.full_like(tokens[:, :1, :], pad)], axis=1
+    )

@@ -1,0 +1,172 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+Built in-house (no optax dependency): AdamW (moment pytrees shaped like the
+params, so they inherit param sharding), Adafactor (factored second moment —
+the memory-lean option for the biggest models), and SGD+momentum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _tree_zeros_like(tree):
+    return jax.tree.map(lambda p: jnp.zeros_like(p), tree)
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {"mu": _tree_zeros_like(params), "nu": _tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        if grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip_norm / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1**step_f
+        bc2 = 1.0 - b2**step_f
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu_n = b1 * mu + (1 - b1) * g
+            nu_n = b2 * nu + (1 - b2) * jnp.square(g)
+            mu_hat = mu_n / bc1
+            nu_hat = nu_n / bc2
+            delta = mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * p
+            return (p - lr_t * delta).astype(p.dtype), mu_n, nu_n
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moments for >=2D params)
+# --------------------------------------------------------------------------
+def adafactor(
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-2,
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - step_f**-decay
+        lr_t = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                u = g / jnp.sqrt(jnp.maximum(r * vc[..., None, :], eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            new_p = p - lr_t * (u + weight_decay * p)
+            return new_p.astype(p.dtype), new_s
+
+        leaves_is = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(upd, params, grads, state, is_leaf=None)
+        new_params = jax.tree.map(
+            lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_state = jax.tree.map(
+            lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# SGD (+momentum)
+# --------------------------------------------------------------------------
+def sgd(lr: float = 1e-2, *, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": _tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        del step
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new_params, state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state["m"], grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+        return new_params, {"m": new_m}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Schedules & utilities
+# --------------------------------------------------------------------------
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )

@@ -1,0 +1,131 @@
+"""Train / eval step builders.
+
+``make_train_step`` closes over (cfg, optimizer) and returns a pure function
+``step(state, batch) -> (state, metrics)`` suitable for jit with explicit
+shardings.  Supports gradient-accumulation microbatching (scan over
+microbatches — per-microbatch grads are accumulated in fp32) and optional
+int8 gradient compression on the data axis (parallel/compress.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as C
+from repro.models.transformer import forward
+from repro.train.loss import cross_entropy_loss
+from repro.train.optim import Optimizer, global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(params: Any, optimizer: Optimizer) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _cast_params(cfg: C.ModelConfig, params):
+    """Mixed precision: fp32 master weights are cast to the compute dtype at
+    the step boundary, so weight all-gathers (ZeRO-3) and their
+    reduce-scatter transposes move 2-byte payloads.  Norm scales and other
+    small vectors stay fp32 (numerics)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if dtype == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if p.ndim >= 2 and p.dtype == jnp.float32 else p,
+        params,
+    )
+
+
+def _loss_fn(cfg: C.ModelConfig, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux, _ = forward(
+        cfg, _cast_params(cfg, params), batch["tokens"], image_embeds=batch.get("image_embeds")
+    )
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask the padding ids out of the softmax support
+        valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    targets = batch["targets"]
+    if cfg.num_prefix_embeds > 0:
+        # prefix positions carry no next-token loss; mask by prepending -1s
+        b = targets.shape[0]
+        pre = jnp.full((b, cfg.num_prefix_embeds) + targets.shape[2:], -1, targets.dtype)
+        targets = jnp.concatenate([pre, targets], axis=1)
+    ce, n_tok = cross_entropy_loss(logits, targets)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "n_tok": n_tok}
+
+
+def make_train_step(
+    cfg: C.ModelConfig,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+):
+    """Returns step(state, batch) -> (new_state, metrics)."""
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: _loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            loss, metrics, grads = single_grads(state.params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def acc_fn(carry, mb):
+                loss_a, grads_a = carry
+                loss, metrics, grads = single_grads(state.params, mb)
+                grads_a = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_a, grads
+                )
+                return (loss_a + loss, grads_a), metrics
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (loss_sum, grads), metrics = jax.lax.scan(
+                acc_fn, (jnp.zeros(()), zero_grads), micro
+            )
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = global_norm(grads)
+        new_state = TrainState(new_params, new_opt, state.step + 1)
+        return new_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: C.ModelConfig):
+    def step(params, batch):
+        loss, metrics = _loss_fn(cfg, params, batch)
+        return {"loss": loss, **metrics}
+
+    return step

@@ -1,0 +1,7 @@
+import warnings
+
+warnings.filterwarnings("ignore")
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real single device; only launch/dryrun.py forces
+# 512 placeholder devices (and only in its own process).

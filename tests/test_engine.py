@@ -1,0 +1,161 @@
+"""Evolution-engine invariants: unit + hypothesis property tests +
+checkpoint/resume determinism (the fault-tolerance contract)."""
+
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import EvolutionEngine
+from repro.core.methods import DISPLAY_ORDER, get_method
+from repro.core.population import ElitePopulation, IslandPopulation, SingleBestPopulation
+from repro.core.solution import Solution
+from repro.core.traverse import GuidingConfig, build_bundle, render_prompt
+from repro.evaluation import EvalConfig, Evaluator
+from repro.tasks import get_task
+
+FAST_EVAL = EvalConfig(n_correctness=2, timing_runs=3, warmup_runs=1)
+
+
+def _sol(sid, fit, valid=True):
+    s = Solution(source=f"src_{sid}", genome={"impl": sid})
+    s.compile_ok = valid
+    s.correct = valid
+    s.runtime_us = fit if valid else None
+    return s
+
+
+# ---------------------------------------------------------------------------
+# population properties
+# ---------------------------------------------------------------------------
+@given(st.lists(st.tuples(st.floats(1.0, 1e6), st.booleans()), min_size=1, max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_single_best_keeps_minimum(items):
+    pop = SingleBestPopulation()
+    best_valid = None
+    for i, (fit, valid) in enumerate(items):
+        pop.tell(_sol(f"s{i}", fit, valid))
+        if valid and (best_valid is None or fit < best_valid):
+            best_valid = fit
+    if best_valid is None:
+        assert pop.best is None
+    else:
+        assert pop.best.runtime_us == best_valid
+
+
+@given(
+    st.integers(1, 6),
+    st.lists(st.floats(1.0, 1e6), min_size=1, max_size=60),
+)
+@settings(max_examples=40, deadline=None)
+def test_elite_is_sorted_topk(k, fits):
+    pop = ElitePopulation(k=k)
+    for i, fit in enumerate(fits):
+        pop.tell(_sol(f"s{i}", fit))
+    elite = pop._elite
+    assert len(elite) <= k
+    assert elite == sorted(elite, key=lambda s: s.fitness)
+    assert pop.best.runtime_us == min(fits)
+
+
+@given(st.lists(st.floats(1.0, 1e6), min_size=5, max_size=80))
+@settings(max_examples=30, deadline=None)
+def test_islands_best_is_global_min(fits):
+    pop = IslandPopulation(n_islands=3, per_island=2, reset_period=10)
+    rng = np.random.default_rng(0)
+    for i, fit in enumerate(fits):
+        pop.sample(rng, 2)  # selects the island that tell() will fill
+        pop.tell(_sol(f"s{i}", fit))
+    assert pop.best is not None
+    assert pop.best.runtime_us <= min(fits) + 1e-9 or pop.best.runtime_us in fits
+
+
+def test_population_state_roundtrip():
+    for pop in (SingleBestPopulation(), ElitePopulation(3), IslandPopulation(2, 2)):
+        rng = np.random.default_rng(0)
+        for i in range(7):
+            pop.sample(rng, 2)
+            pop.tell(_sol(f"s{i}", 100.0 - i))
+        fresh = type(pop)() if not isinstance(pop, (ElitePopulation, IslandPopulation)) else (
+            ElitePopulation(3) if isinstance(pop, ElitePopulation) else IslandPopulation(2, 2)
+        )
+        fresh.load_state_dict(pop.state_dict())
+        assert fresh.best.sid == pop.best.sid
+
+
+# ---------------------------------------------------------------------------
+# traverse layers
+# ---------------------------------------------------------------------------
+def test_guiding_layer_information_selection():
+    parents = [_sol(f"p{i}", 10.0 + i) for i in range(5)]
+    insights = [f"insight {i}" for i in range(10)]
+    for n_hist, use_ins in [(0, False), (2, False), (0, True), (3, True)]:
+        g = GuidingConfig(n_historical=n_hist, use_insights=use_ins)
+        b = build_bundle(g, "ctx", parents, insights, "propose")
+        assert len(b.historical) == n_hist
+        assert (len(b.insights) > 0) == use_ins
+        prompt = render_prompt(b, g)
+        assert ("High-quality solutions" in prompt) == (n_hist > 0)
+        assert ("Optimization insights" in prompt) == use_ins
+
+
+def test_prompt_overhead_charges_tokens():
+    g1 = GuidingConfig()
+    g2 = GuidingConfig(prompt_overhead=2.0)
+    b = build_bundle(g1, "ctx" * 100, [], [], "propose")
+    assert len(render_prompt(b, g2)) > 1.5 * len(render_prompt(b, g1))
+
+
+# ---------------------------------------------------------------------------
+# engine behaviour
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mkey", DISPLAY_ORDER)
+def test_engine_runs_and_respects_budget(mkey):
+    task = get_task("act_relu")
+    eng = EvolutionEngine(task, get_method(mkey), evaluator=Evaluator(FAST_EVAL), seed=0)
+    res = eng.run(max_trials=12)
+    assert len(res.history) == 12
+    assert res.best_speedup >= 1.0
+    assert res.ledger.calls == 12
+    assert res.ledger.total > 0
+
+
+def test_engine_deterministic_given_seed():
+    task = get_task("reduce_sum")
+    r1 = EvolutionEngine(task, get_method("evoengineer-free"), evaluator=Evaluator(FAST_EVAL), seed=5).run(max_trials=10)
+    r2 = EvolutionEngine(task, get_method("evoengineer-free"), evaluator=Evaluator(FAST_EVAL), seed=5).run(max_trials=10)
+    assert [s.sid for s in r1.history] == [s.sid for s in r2.history]
+
+
+def test_engine_checkpoint_resume_identical_trajectory():
+    task = get_task("cum_sum")
+    method = get_method("evoengineer-full")
+    ev = Evaluator(FAST_EVAL)
+    with tempfile.TemporaryDirectory() as d:
+        # uninterrupted run
+        full = EvolutionEngine(task, method, evaluator=ev, seed=3).run(max_trials=14)
+        # interrupted at 7, resumed
+        e1 = EvolutionEngine(task, method, evaluator=ev, seed=3, checkpoint_dir=d)
+        e1.run(max_trials=7, checkpoint_every=1)
+        e2 = EvolutionEngine(task, method, evaluator=ev, seed=3, checkpoint_dir=d)
+        assert e2.resume()
+        assert e2.trial == 7
+        resumed = e2.run(max_trials=14, checkpoint_every=5)
+        assert [s.sid for s in resumed.history] == [s.sid for s in full.history]
+        assert resumed.best_speedup == full.best_speedup
+
+
+def test_validity_ordering_full_vs_free():
+    """The paper's core claim: more closed-world info -> higher validity."""
+    task = get_task("mm_square_s")
+    ev = Evaluator(FAST_EVAL)
+    vals = {}
+    for mkey in ("evoengineer-free", "evoengineer-full"):
+        rates = []
+        for seed in range(3):
+            res = EvolutionEngine(task, get_method(mkey), evaluator=ev, seed=seed).run(max_trials=30)
+            rates.append(res.validity_rate)
+        vals[mkey] = float(np.mean(rates))
+    assert vals["evoengineer-full"] > vals["evoengineer-free"]

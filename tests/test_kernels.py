@@ -1,0 +1,119 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.blocked_matmul import vmem_bytes
+
+KEY = jax.random.key(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,h,kv,d", [(128, 4, 4, 32), (256, 4, 2, 64), (512, 8, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("cap", [None, 30.0])
+def test_flash_attention_sweep(s, h, kv, d, dtype, cap):
+    b = 2
+    q = jax.random.normal(KEY, (b, s, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kv, d), dtype)
+    got = ops.flash_attention(q, k, v, logit_cap=cap, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, logit_cap=cap)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 64), (64, 32), (128, 128)])
+def test_flash_attention_block_shapes(bq, bk):
+    b, s, h, d = 1, 256, 2, 32
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, h, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, h, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# blocked matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 192, 320), (64, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), dtype)
+    got = ops.matmul(a, b, block_m=64, block_n=64, block_k=64)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 2e-4,
+        atol=3e-1 if dtype == jnp.bfloat16 else 2e-3,
+    )
+
+
+def test_matmul_vmem_model():
+    assert vmem_bytes(256, 256, 256) == (256 * 256 * 2) * 2 + 256 * 256 * 4
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(64, 256), (8, 16, 128), (3, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    scale = jax.random.normal(jax.random.fold_in(KEY, 1), (shape[-1],)) * 0.1
+    got = ops.rmsnorm(x, scale, block_rows=32)
+    want = ref.rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,h,kd,chunk", [(64, 2, 16, 16), (128, 4, 32, 32), (256, 1, 16, 64)])
+def test_wkv6_sweep(s, h, kd, chunk):
+    b = 2
+    mk = lambda i, sc=0.5: jax.random.normal(jax.random.fold_in(KEY, i), (b, s, h, kd)) * sc
+    r, k, v = mk(1), mk(2), mk(3)
+    lw = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, h, kd)) - 4.0)
+    u = jax.random.normal(jax.random.fold_in(KEY, 5), (h, kd)) * 0.1
+    got = ops.wkv6(r, k, v, lw, u, chunk=chunk)
+    want = ref.wkv6_ref(r, k, v, lw, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_matches_sequential_recurrence():
+    b, s, h, kd = 1, 48, 2, 8
+    mk = lambda i: jax.random.normal(jax.random.fold_in(KEY, i), (b, s, h, kd)) * 0.5
+    r, k, v = mk(1), mk(2), mk(3)
+    lw = -jnp.exp(mk(4) - 3.0)
+    u = jax.random.normal(jax.random.fold_in(KEY, 5), (h, kd)) * 0.1
+    got = ops.wkv6(r, k, v, lw, u, chunk=16)
+    want = ref.wkv6_sequential_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rglru
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,w,chunk", [(64, 32, 16), (128, 64, 64), (256, 16, 32)])
+def test_rglru_sweep(s, w, chunk):
+    b = 2
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (b, s, w)))
+    bb = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, w)) * 0.3
+    got = ops.rglru(a, bb, chunk=chunk)
+    want = ref.rglru_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,191 @@
+"""Architecture smoke + consistency tests (deliverable f).
+
+Every assigned architecture: reduced-config forward + train step on CPU with
+shape and NaN assertions; sequential decode vs parallel forward equivalence
+(the strongest cache/decode correctness check); flash-vs-full attention
+forward AND gradient agreement.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import config as C
+from repro.models.attention import full_attention, local_attention
+from repro.models.flash import flash_attention
+from repro.models.transformer import decode_step, forward, init_cache, init_params
+from repro.train.loss import shift_labels
+from repro.train.optim import adamw
+from repro.train.steps import init_train_state, make_train_step
+
+KEY = jax.random.key(0)
+
+
+def _batch(cfg, b=2, s=16, seed=1):
+    key = jax.random.key(seed)
+    shape = (b, s) if cfg.num_codebooks == 1 else (b, s, cfg.num_codebooks)
+    tokens = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "targets": shift_labels(tokens)}
+    if cfg.num_prefix_embeds:
+        batch["image_embeds"] = 0.1 * jax.random.normal(
+            key, (b, cfg.num_prefix_embeds, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg)
+    logits, aux, _ = forward(
+        cfg, params, batch["tokens"], image_embeds=batch.get("image_embeds")
+    )
+    s_total = batch["tokens"].shape[1] + cfg.num_prefix_embeds
+    expect = (2, s_total, cfg.padded_vocab)
+    if cfg.num_codebooks > 1:
+        expect = (2, s_total, cfg.num_codebooks, cfg.padded_vocab)
+    assert logits.shape == expect
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(KEY, cfg)
+    opt = adamw(1e-3)
+    state = init_train_state(params, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    state2, metrics = step(state, _batch(cfg))
+    assert float(metrics["loss"]) > 0 and np.isfinite(float(metrics["loss"]))
+    assert int(state2.step) == 1
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda acc, pq: acc + float(jnp.sum(jnp.abs(pq))),
+        jax.tree.map(lambda a, b: (a - b).astype(jnp.float32), state.params, state2.params),
+        0.0,
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCHS if get_config(a, smoke=True).num_prefix_embeds == 0]
+)
+def test_decode_matches_parallel(arch):
+    cfg = dataclasses.replace(get_config(arch, smoke=True), compute_dtype="float32")
+    if cfg.moe is not None:  # capacity drops are batch-context dependent
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    params = init_params(jax.random.key(42), cfg)
+    b, s = 2, 16
+    shape = (b, s) if cfg.num_codebooks == 1 else (b, s, cfg.num_codebooks)
+    toks = jax.random.randint(jax.random.key(7), shape, 0, cfg.vocab_size)
+    full_logits, _, _ = forward(cfg, params, toks)
+    cache = init_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        nt = toks[:, t : t + 1] if cfg.num_codebooks == 1 else toks[:, t : t + 1, :]
+        lg, cache = decode_step(cfg, params, cache, nt, jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full_logits), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_prefill_cache_continues_decode():
+    """Prefill s0 tokens -> decode continues identically to full decode."""
+    cfg = dataclasses.replace(get_config("gemma3_27b", smoke=True), compute_dtype="float32")
+    params = init_params(jax.random.key(3), cfg)
+    b, s0, s1 = 2, 8, 4
+    toks = jax.random.randint(jax.random.key(9), (b, s0 + s1), 0, cfg.vocab_size)
+    from repro.serve.engine import make_prefill_step
+
+    prefill = make_prefill_step(cfg, max_len=s0 + s1)
+    last, cache = prefill(params, toks[:, :s0])
+    # continue decoding
+    dec_logits = [last]
+    for t in range(s0, s0 + s1):
+        lg, cache = decode_step(cfg, params, cache, toks[:, t : t + 1], jnp.int32(t))
+        dec_logits.append(lg[:, 0])
+    # reference: full forward
+    full_logits, _, _ = forward(cfg, params, toks)
+    got = jnp.stack(dec_logits[:-1], axis=1)
+    want = full_logits[:, s0 - 1 : s0 + s1 - 1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_matches_full_forward_and_grad():
+    b, s, h, d = 2, 256, 4, 32
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, 2, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, 2, d), jnp.float32)
+
+    def f_flash(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(q, k, v, q_chunk=64, kv_chunk=64)))
+
+    def f_full(q, k, v):
+        return jnp.sum(jnp.sin(full_attention(q, k, v, causal=True)))
+
+    np.testing.assert_allclose(f_flash(q, k, v), f_full(q, k, v), rtol=1e-4)
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_full, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=5e-3, atol=5e-4)
+
+
+def test_flash_softcap_grad():
+    b, s, h, d = 1, 128, 2, 16
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, h, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, h, d), jnp.float32)
+
+    def f(impl):
+        def fn(q):
+            o = impl(q)
+            return jnp.sum(o * o)
+        return fn
+
+    flash_fn = f(lambda q: flash_attention(q, k, v, logit_cap=20.0, q_chunk=32, kv_chunk=32))
+    full_fn = f(lambda q: full_attention(q, k, v, causal=True, logit_cap=20.0))
+    np.testing.assert_allclose(flash_fn(q), full_fn(q), rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(flash_fn)(q)), np.asarray(jax.grad(full_fn)(q)),
+        rtol=5e-3, atol=5e-4,
+    )
+
+
+def test_local_attention_matches_masked_full():
+    b, s, h, d, w = 2, 128, 4, 16, 32
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, 2, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, 2, d), jnp.float32)
+    got = local_attention(q, k, v, window=w)
+    want = full_attention(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_long_500k_applicability_flags():
+    sub_quadratic = {a: get_config(a).is_sub_quadratic() for a in ARCHS}
+    assert sub_quadratic["recurrentgemma_9b"]
+    assert sub_quadratic["rwkv6_1b6"]
+    assert sum(sub_quadratic.values()) == 2  # exactly the two assigned
+
+
+def test_assigned_configs_match_assignment():
+    cfg = get_config("gemma3_27b")
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads) == (62, 5376, 32, 16)
+    assert cfg.d_ff == 21504 and cfg.vocab_size == 262_144
+    cfg = get_config("deepseek_67b")
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads) == (95, 8192, 64, 8)
+    cfg = get_config("deepseek_v2_lite_16b")
+    assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 6
+    assert cfg.mla.kv_lora_rank == 512
+    cfg = get_config("rwkv6_1b6")
+    assert cfg.num_layers == 24 and cfg.d_model == 2048 and cfg.vocab_size == 65_536
+    cfg = get_config("musicgen_large")
+    assert cfg.num_codebooks == 4 and cfg.vocab_size == 2048

@@ -1,0 +1,96 @@
+"""SyntheticLLM fault model + information-regime behavior."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.insights import InsightRecord, InsightStore
+from repro.core.methods import FaultRegime, get_method
+from repro.core.solution import Solution
+from repro.core.traverse import GuidingConfig, build_bundle
+from repro.proposers.synthetic import SyntheticLLM, _break_semantics, _break_syntax
+from repro.tasks import get_task
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=40, deadline=None)
+def test_break_syntax_produces_invalid_or_changed_source(seed):
+    task = get_task("act_relu")
+    rng = np.random.default_rng(seed)
+    broken = _break_syntax(task.initial_source, rng)
+    assert broken != task.initial_source
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=40, deadline=None)
+def test_break_semantics_changes_source(seed):
+    task = get_task("norm_layer")
+    rng = np.random.default_rng(seed)
+    broken = _break_semantics(task.initial_source, rng)
+    assert broken != task.initial_source
+
+
+def test_fault_rates_respected_statistically():
+    task = get_task("mm_square_s")
+    prop = SyntheticLLM()
+    guiding = GuidingConfig()
+    fault = FaultRegime(p_syntax=0.5, p_semantic=0.0, explore=1.0)
+    rng = np.random.default_rng(0)
+    bundle = build_bundle(guiding, task.task_context(), [], [], "propose")
+    broken = 0
+    for _ in range(200):
+        p = prop.propose(task, "", bundle, guiding, fault, rng)
+        if p.genome is None:
+            broken += 1
+    assert 0.4 < broken / 200 < 0.6
+
+
+def test_insight_bias_steers_choices():
+    """With strong positive insight on a knob choice, exploitation proposals
+    should overwhelmingly pick it."""
+    task = get_task("mm_square_s")
+    store = InsightStore()
+    for _ in range(10):
+        store.add(InsightRecord(text="impl=dot_general", knob="impl", choice="dot_general", gain=3.0))
+    prop = SyntheticLLM(store)
+    guiding = GuidingConfig(task_context=True, n_historical=2, use_insights=True)
+    fault = FaultRegime(p_syntax=0.0, p_semantic=0.0, explore=0.0)
+    parent = Solution(source="x", genome=dict(task.naive_genome))
+    parent.compile_ok = parent.correct = True
+    parent.runtime_us = 100.0
+    rng = np.random.default_rng(1)
+    bundle = build_bundle(guiding, task.task_context(), [parent], store.texts(), "m1")
+    hits = 0
+    for _ in range(100):
+        p = prop.propose(task, "", bundle, guiding, fault, rng)
+        if p.genome and p.genome.get("impl") == "dot_general":
+            hits += 1
+    assert hits > 40  # bias applies at 0.6 prob when not the mutated knob
+
+
+def test_proposal_renders_valid_python_when_unfaulted():
+    import ast
+
+    task = get_task("conv2d_3x3")
+    prop = SyntheticLLM()
+    guiding = GuidingConfig()
+    fault = FaultRegime(p_syntax=0.0, p_semantic=0.0, explore=1.0)
+    rng = np.random.default_rng(2)
+    bundle = build_bundle(guiding, task.task_context(), [], [], "propose")
+    for _ in range(10):
+        p = prop.propose(task, "", bundle, guiding, fault, rng)
+        ast.parse(p.source)  # must be syntactically valid
+        assert p.genome is not None
+
+
+def test_methods_schedule_operator_sequences():
+    eoh = get_method("eoh")
+    ops = [eoh.schedule(t) for t in range(13)]
+    assert ops[:5] == ["e1"] * 5
+    assert ops[5:9] == ["e1", "e2", "m1", "m2"]
+    aice = get_method("aice")
+    assert aice.schedule(0) == "convert"
+    assert aice.schedule(1) == "translate"
+    assert aice.schedule(20) == "optimize"
+    assert aice.schedule(44) == "compose"
