@@ -1,0 +1,119 @@
+"""Evaluation-throughput bench: serial vs parallel candidates/sec.
+
+Renders a population of distinct candidate sources for one benchmark task
+(every genome in the task's space, uniquified), evaluates the identical
+batch through the serial `Evaluator` and the `ParallelEvaluator`, and
+writes ``BENCH_eval_throughput.json`` so the perf trajectory of the
+evaluation hot path is tracked from PR to PR.  The pool is warmed (one
+throwaway evaluation) before timing so worker startup (~seconds of JAX
+import) is reported separately, not mixed into steady-state throughput.
+
+  PYTHONPATH=src python -m benchmarks.eval_throughput --workers 4 --candidates 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import numpy as np
+
+from repro.evaluation import EvalConfig, Evaluator, ParallelEvaluator
+from repro.tasks import get_task
+
+
+def _candidate_sources(task, n: int):
+    """n distinct sources, comment-uniquified so each costs a full
+    evaluation, like n distinct LLM proposals would.  Calibration tasks use
+    the naive genome uniformly (a fixed, known per-candidate cost); real
+    tasks sample the genome space."""
+    if task.category == "calibration":
+        src = task.render({"sleep_ms": 100})  # isolation-cost-dominated profile
+        return [src + f"\n# candidate {i}\n" for i in range(n)]
+    rng = np.random.default_rng(0)
+    return [
+        task.render(task.random_genome(rng)) + f"\n# candidate {i}\n"
+        for i in range(n)
+    ]
+
+
+def run(args) -> dict:
+    task = get_task(args.task)
+    cfg = EvalConfig(
+        n_correctness=3, timing_runs=args.timing_runs, warmup_runs=1,
+        timing_mode="simulated",  # timing stage removed: measures eval pipeline
+    )
+    sources = _candidate_sources(task, args.candidates)
+
+    serial = Evaluator(cfg)
+    serial.evaluate(task, task.initial_source)  # parity with pool warmup
+    t0 = time.perf_counter()
+    r_serial = serial.evaluate_batch(task, sources)
+    t_serial = time.perf_counter() - t0
+
+    pool = ParallelEvaluator(cfg, workers=args.workers)
+    t0 = time.perf_counter()
+    pool.evaluate(task, task.initial_source)  # spawns + warms the workers
+    t_startup = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_parallel = pool.evaluate_batch(task, sources)
+    t_parallel = time.perf_counter() - t0
+    stats = pool.stats_snapshot()
+    pool.close()
+
+    identical = [
+        (a.compile_ok, a.correct, a.runtime_us) for a in r_serial
+    ] == [(b.compile_ok, b.correct, b.runtime_us) for b in r_parallel]
+    s_stats = serial.stats_snapshot()
+    oracle_total = s_stats["oracle_hits"] + s_stats["oracle_misses"]
+    rec = {
+        "task": args.task,
+        "candidates": args.candidates,
+        "workers": args.workers,
+        "serial_s": round(t_serial, 3),
+        "parallel_s": round(t_parallel, 3),
+        "pool_startup_s": round(t_startup, 3),
+        "speedup": round(t_serial / max(t_parallel, 1e-9), 3),
+        "serial_cand_per_s": round(args.candidates / max(t_serial, 1e-9), 3),
+        "parallel_cand_per_s": round(args.candidates / max(t_parallel, 1e-9), 3),
+        "oracle_hit_rate_serial": round(
+            s_stats["oracle_hits"] / max(oracle_total, 1), 3
+        ),
+        "eval_stats_parallel": stats,
+        "results_identical": identical,
+    }
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(
+        f"eval throughput: serial {rec['serial_cand_per_s']:.2f} cand/s, "
+        f"parallel({args.workers}) {rec['parallel_cand_per_s']:.2f} cand/s "
+        f"-> {rec['speedup']:.2f}x (startup {rec['pool_startup_s']:.1f}s, "
+        f"identical={identical}) -> {args.out}"
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="cal_sleep",
+                    help="cal_sleep = known-cost calibration workload; any "
+                         "benchmark task name works (e.g. act_relu)")
+    ap.add_argument("--candidates", type=int, default=16)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="pool size (default: one per CPU core)")
+    ap.add_argument("--timing-runs", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_eval_throughput.json")
+    args = ap.parse_args()
+    import os
+
+    args.workers = args.workers or os.cpu_count() or 4
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

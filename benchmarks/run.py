@@ -26,7 +26,16 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--table4", default="results/table4.jsonl")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--workers", type=int, default=0,
+                    help=">1 runs candidate evaluation in a worker-process pool")
+    ap.add_argument("--batch-size", type=int, default=0,
+                    help="proposals per generation (default: 2x workers when "
+                         "parallel, else 1)")
+    ap.add_argument("--bench-eval-throughput", action="store_true",
+                    help="also measure serial-vs-parallel evaluation "
+                         "throughput and write BENCH_eval_throughput.json")
     args = ap.parse_args()
+    batch_size = args.batch_size or (2 * args.workers if args.workers > 1 else 1)
 
     from benchmarks import (
         fig1_frontier,
@@ -37,10 +46,23 @@ def main():
         table8_aice,
     )
 
+    if args.bench_eval_throughput:
+        from benchmarks import eval_throughput
+
+        print("\n### Evaluation throughput (serial vs parallel) ###")
+        eval_throughput.run(
+            argparse.Namespace(
+                task="cal_sleep", candidates=16,
+                workers=args.workers or os.cpu_count() or 4, timing_runs=3,
+                out="BENCH_eval_throughput.json",
+            )
+        )
+
     if args.full or not os.path.exists(args.table4):
         ns = argparse.Namespace(
             mode="full" if args.full else "quick",
             seeds=3, trials=45, timing_runs=11,
+            workers=args.workers, batch_size=batch_size,
             out=args.table4, summarize_only=False,
         )
         table4_overall.run(ns)

@@ -13,6 +13,14 @@ engine run (whose own checkpoints make even that resumable).
 Usage:
   PYTHONPATH=src python -m benchmarks.table4_overall --mode quick   # 12 tasks, 1 seed
   PYTHONPATH=src python -m benchmarks.table4_overall --mode full    # 91 tasks, 3 seeds
+
+`--workers N` pipelines candidate evaluation through a worker-process
+pool.  Caveat for wall-clock timing: candidates are then timed while up
+to N-1 other candidates run concurrently, so absolute runtimes carry CPU
+contention and speedups skew low relative to a serial sweep — use
+parallel sweeps for validity/compile-rate studies and throughput, and a
+serial (`--workers 0`) pass when the speedup numbers themselves are the
+result.
 """
 
 from __future__ import annotations
@@ -30,7 +38,7 @@ warnings.filterwarnings("ignore")
 
 from repro.core.engine import EvolutionEngine
 from repro.core.methods import DISPLAY_ORDER, get_method
-from repro.evaluation import EvalConfig, Evaluator
+from repro.evaluation import EvalConfig, Evaluator, ParallelEvaluator
 from repro.tasks import benchmark_tasks
 from repro.tasks.base import CATEGORIES
 
@@ -68,38 +76,52 @@ def run(args):
     # tasks (stands in for the cross-kernel archive retrieval)
     rag_pool = [(t.name, t.initial_source) for t in tasks[:8]]
 
+    workers = getattr(args, "workers", 0) or 0
+    batch_size = getattr(args, "batch_size", 1) or 1
+    cfg = EvalConfig(timing_runs=args.timing_runs)
+    cache_dir = os.path.join(os.path.dirname(args.out) or ".", "eval_cache")
+    if workers > 1:
+        evaluator = ParallelEvaluator(cfg, workers=workers, cache_dir=cache_dir)
+    else:
+        evaluator = Evaluator(cfg, cache_dir=cache_dir)
+
     total = len(tasks) * len(DISPLAY_ORDER) * seeds
     n = len(done)
     t_start = time.time()
-    for task in tasks:
-        evaluator = Evaluator(EvalConfig(timing_runs=args.timing_runs))
-        for seed in range(seeds):
-            for mkey in DISPLAY_ORDER:
-                method = get_method(mkey)
-                if (task.name, method.name, seed) in done:
-                    continue
-                eng = EvolutionEngine(
-                    task, method, evaluator=evaluator, seed=seed,
-                    rag_pool=[r for r in rag_pool if r[0] != task.name],
-                )
-                res = eng.run(max_trials=args.trials)
-                rec = res.to_dict()
-                rec["category"] = task.category
-                rec["speedups_all"] = [
-                    s.speedup for s in res.history if s.valid and s.speedup
-                ]
-                with open(args.out, "a") as f:
-                    f.write(json.dumps(rec) + "\n")
-                n += 1
-                if n % 10 == 0:
-                    el = time.time() - t_start
-                    print(
-                        f"[{n}/{total}] {task.name} {method.name} "
-                        f"spd={res.best_speedup:.2f} val={res.validity_rate:.2f} "
-                        f"({el:.0f}s)",
-                        flush=True,
+    try:
+        for task in tasks:
+            for seed in range(seeds):
+                for mkey in DISPLAY_ORDER:
+                    method = get_method(mkey)
+                    if (task.name, method.name, seed) in done:
+                        continue
+                    eng = EvolutionEngine(
+                        task, method, evaluator=evaluator, seed=seed,
+                        rag_pool=[r for r in rag_pool if r[0] != task.name],
+                        batch_size=batch_size,
                     )
-    print(f"table4 sweep complete: {n} records in {args.out}")
+                    res = eng.run(max_trials=args.trials)
+                    rec = res.to_dict()
+                    rec["category"] = task.category
+                    rec["speedups_all"] = [
+                        s.speedup for s in res.history if s.valid and s.speedup
+                    ]
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                    n += 1
+                    if n % 10 == 0:
+                        el = time.time() - t_start
+                        print(
+                            f"[{n}/{total}] {task.name} {method.name} "
+                            f"spd={res.best_speedup:.2f} val={res.validity_rate:.2f} "
+                            f"({el:.0f}s)",
+                            flush=True,
+                        )
+    finally:
+        if isinstance(evaluator, ParallelEvaluator):
+            evaluator.close()
+    print(f"table4 sweep complete: {n} records in {args.out} "
+          f"(eval stats: {evaluator.stats_snapshot()})")
 
 
 def summarize(path: str) -> str:
@@ -144,6 +166,12 @@ def main():
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--trials", type=int, default=45)
     ap.add_argument("--timing-runs", type=int, default=11)
+    ap.add_argument("--workers", type=int, default=0,
+                    help=">1 evaluates candidate batches in a worker-process "
+                         "pool (wall-clock timings then include pool "
+                         "contention; see module docstring)")
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help="proposals drawn per generation (see EvolutionEngine)")
     ap.add_argument("--out", default="results/table4.jsonl")
     ap.add_argument("--summarize-only", action="store_true")
     args = ap.parse_args()

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, tuned
 from repro.launch.autotune import tune
 
 
@@ -27,6 +27,10 @@ def main():
             f"modeled {res['best_modeled_us']:.1f}us "
             f"(valid proposals: {res['valid_rate']:.0%})"
         )
+
+    # the registry round-trip: what ops.py would use as defaults right now
+    print(f"registry defaults: flash={tuned.get_tuned('flash')} "
+          f"(file: {tuned.genomes_path()})")
 
     # numerically validate the tuned flash genome in interpret mode
     res = tune("flash", trials=40)

@@ -2,15 +2,25 @@
 proposer and evaluator into the paper's three-step loop (configure ->
 generate -> evaluate), with exact checkpoint/resume.
 
+Generation is batched: each generation draws ``batch_size`` proposals from
+the seeded RNG first (all against the population/insight state at the
+batch start), evaluates them — concurrently when the evaluator is a
+`ParallelEvaluator` — and then ``tell()``s them in submission order, so a
+run is bit-identical to a serial-evaluator run with the same schedule.
+``batch_size=1`` reproduces the original strictly-serial loop exactly.
+
 Fault tolerance contract: engine state (population, insight store, RNG
 state, trial count, token ledger, history) serializes after every trial
 batch; `EvolutionEngine.resume()` continues a killed run to the identical
-trajectory (tested in tests/test_engine.py).
+trajectory (tested in tests/test_engine.py).  Checkpoints land on batch
+boundaries, so a resumed run with the same ``batch_size`` replays the
+uninterrupted trajectory.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import time
@@ -27,6 +37,10 @@ from repro.tasks.base import KernelTask
 
 if False:  # typing only — imported lazily in __init__ to avoid an import
     from repro.proposers.base import Proposer  # noqa: F401  (cycle)
+
+
+def _stable_hash(name: str) -> int:
+    return int(hashlib.sha1(name.encode()).hexdigest()[:8], 16)
 
 
 @dataclasses.dataclass
@@ -86,26 +100,34 @@ class EvolutionEngine:
         seed: int = 0,
         checkpoint_dir: Optional[str] = None,
         rag_pool: Optional[List[Tuple[str, str]]] = None,
+        batch_size: int = 1,
     ):
         from repro.proposers.synthetic import SyntheticLLM  # lazy: cycle
 
         self.task = task
         self.method = method
         self.evaluator = evaluator or Evaluator()
+        self.batch_size = max(1, batch_size)
         self.insights = InsightStore()
         self.proposer = proposer or SyntheticLLM(self.insights)
         if isinstance(self.proposer, SyntheticLLM):
             self.proposer.insight_store = self.insights
         self.seed = seed
         self.checkpoint_dir = checkpoint_dir
+        if checkpoint_dir and getattr(self.evaluator, "cache_dir", None) is None:
+            # persist oracle outputs + baseline timings beside the checkpoints
+            self.evaluator.set_cache_dir(os.path.join(checkpoint_dir, "eval_cache"))
         self.rag_pool = rag_pool or []
 
         self.population = method.make_population()
         self.ledger = TokenLedger()
         self.history: List[Solution] = []
         self.trial = 0
+        # stable string hashes: builtin hash() is PYTHONHASHSEED-randomized
+        # per process, which would make a "seeded" run irreproducible across
+        # processes/restarts
         self.rng = np.random.default_rng(
-            (seed, hash(task.name) % 2**31, hash(method.name) % 2**31)
+            (seed, _stable_hash(task.name), _stable_hash(method.name))
         )
 
     # ------------------------------------------------------------------
@@ -122,38 +144,24 @@ class EvolutionEngine:
             self.population.tell(init)
 
         while self.trial < max_trials:
-            op = self.method.schedule(self.trial)
-            parents = self.population.sample(self.rng, self.method.guiding.n_historical or 2)
-            bundle = build_bundle(
-                self.method.guiding,
-                self.task.task_context(),
-                parents,
-                self.insights.texts(),
-                op,
-                rag=self.rag_pool,
+            # --- generate: draw the whole batch against the population /
+            # insight state at the batch start (RNG order = trial order) ---
+            n = min(self.batch_size, max_trials - self.trial)
+            staged = [self._propose_one(self.trial + j) for j in range(n)]
+            # --- evaluate (concurrently under a ParallelEvaluator) ---------
+            batch_results = self.evaluator.evaluate_batch(
+                self.task, [sol.source for sol, _ in staged]
             )
-            prompt = render_prompt(bundle, self.method.guiding)
-            proposal = self.proposer.propose(
-                self.task, prompt, bundle, self.method.guiding, self.method.fault, self.rng
-            )
-            sol = Solution(
-                source=proposal.source,
-                genome=proposal.genome,
-                insight=proposal.insight,
-                trial=self.trial,
-                operator=op,
-                parents=(proposal.parent_sid,) if proposal.parent_sid else (),
-            )
-            sol.tokens_in = count_tokens(prompt)
-            sol.tokens_out = proposal.tokens_out
-            self.ledger.charge(sol.tokens_in, sol.tokens_out)
-
-            sol = self._evaluate(sol, baseline_us)
-            self.history.append(sol)
-            self.population.tell(sol)
-            self._record_insight(sol, proposal)
-            self.trial += 1
-            if self.checkpoint_dir and self.trial % checkpoint_every == 0:
+            # --- tell in submission order: checkpoints stay bit-identical
+            # to a serial-evaluator run with the same schedule --------------
+            prev_epoch = self.trial // checkpoint_every
+            for (sol, proposal), res in zip(staged, batch_results):
+                self._apply_result(sol, res, baseline_us)
+                self.history.append(sol)
+                self.population.tell(sol)
+                self._record_insight(sol, proposal)
+                self.trial += 1
+            if self.checkpoint_dir and self.trial // checkpoint_every > prev_epoch:
                 self.save_checkpoint()
 
         if self.checkpoint_dir:
@@ -172,8 +180,36 @@ class EvolutionEngine:
     def _make_solution(self, source, genome, op, trial) -> Solution:
         return Solution(source=source, genome=genome, operator=op, trial=trial)
 
-    def _evaluate(self, sol: Solution, baseline_us: float) -> Solution:
-        res = self.evaluator.evaluate(self.task, sol.source)
+    def _propose_one(self, trial: int):
+        """Draw one proposal for `trial` (consumes RNG; does not evaluate)."""
+        op = self.method.schedule(trial)
+        parents = self.population.sample(self.rng, self.method.guiding.n_historical or 2)
+        bundle = build_bundle(
+            self.method.guiding,
+            self.task.task_context(),
+            parents,
+            self.insights.texts(),
+            op,
+            rag=self.rag_pool,
+        )
+        prompt = render_prompt(bundle, self.method.guiding)
+        proposal = self.proposer.propose(
+            self.task, prompt, bundle, self.method.guiding, self.method.fault, self.rng
+        )
+        sol = Solution(
+            source=proposal.source,
+            genome=proposal.genome,
+            insight=proposal.insight,
+            trial=trial,
+            operator=op,
+            parents=(proposal.parent_sid,) if proposal.parent_sid else (),
+        )
+        sol.tokens_in = count_tokens(prompt)
+        sol.tokens_out = proposal.tokens_out
+        self.ledger.charge(sol.tokens_in, sol.tokens_out)
+        return sol, proposal
+
+    def _apply_result(self, sol: Solution, res, baseline_us: float) -> Solution:
         sol.compile_ok = res.compile_ok
         sol.correct = res.correct
         sol.runtime_us = res.runtime_us
@@ -181,6 +217,11 @@ class EvolutionEngine:
         if res.valid and res.runtime_us:
             sol.speedup = baseline_us / res.runtime_us
         return sol
+
+    def _evaluate(self, sol: Solution, baseline_us: float) -> Solution:
+        return self._apply_result(
+            sol, self.evaluator.evaluate(self.task, sol.source), baseline_us
+        )
 
     def _record_insight(self, sol: Solution, proposal) -> None:
         """Solution-insight pairs with MEASURED outcome (confirmed/refuted)."""

@@ -1,5 +1,14 @@
-"""Two-stage evaluation: compile check -> functional test -> performance."""
+"""Two-stage evaluation: compile check -> functional test -> performance.
 
-from repro.evaluation.evaluator import EvalConfig, EvalResult, Evaluator
+`Evaluator` runs candidates in-process and serially; `ParallelEvaluator`
+keeps the same interface but pipelines population batches through a pool
+of spawned worker processes with hard per-candidate timeouts (see
+repro/evaluation/parallel.py for the worker protocol and cache keys).
+Both share the source-hash result cache format, the `(task, seed)`
+oracle-output cache and the on-disk baseline/oracle layer.
+"""
 
-__all__ = ["EvalConfig", "EvalResult", "Evaluator"]
+from repro.evaluation.evaluator import EvalConfig, EvalResult, Evaluator, source_key
+from repro.evaluation.parallel import ParallelEvaluator
+
+__all__ = ["EvalConfig", "EvalResult", "Evaluator", "ParallelEvaluator", "source_key"]

@@ -1,0 +1,393 @@
+"""Process-parallel candidate evaluation: the pipelined population engine.
+
+The serial evaluator is wall-clock-bound by the slowest candidate and its
+SIGALRM deadline only arms on the main thread.  `ParallelEvaluator` keeps
+the exact `Evaluator` interface (``evaluate`` / ``evaluate_batch`` /
+``baseline_us`` / ``speedup``) but fans each batch out to a pool of
+spawned worker processes, giving real per-candidate isolation: a candidate
+that hangs in native code is killed with its worker, not waited on.
+
+Worker protocol
+---------------
+Each worker is a fresh interpreter launched via ``subprocess`` — spawn
+semantics (no forked JAX state) without re-importing the parent's
+``__main__``, so the pool works from scripts, pytest and the REPL alike.
+The parent passes one end of a ``multiprocessing.Pipe`` as an inherited
+file descriptor (``REPRO_EVAL_WORKER_FD``) and sends
+``("init", eval_config, cache_dir, extra_task_modules)`` as the first
+message.  The worker then imports ``repro.tasks`` (populating the task
+registry, plus any ``extra_task_modules``), builds a process-local
+`Evaluator`, and sends ``("ready",)``.  Then, in a loop:
+
+    parent -> worker   ("eval", job_id, task_name, source)
+    worker -> parent   ("result", job_id, eval_result_dict, stats_dict)
+    parent -> worker   None                      # shutdown request
+
+Timeouts are layered.  Inside the worker the per-candidate SIGALRM
+deadline (``EvalConfig.timeout_s``) fires on the worker's main thread —
+which, unlike the engine's old in-process evaluation, is guaranteed to BE
+a main thread.  Hard hangs that never return to the Python interpreter
+are handled by the parent: after ``worker_deadline_s`` the worker is
+SIGKILLed and respawned, and the candidate fails with stage ``timeout``.
+
+Cache keys
+----------
+* results: ``(task_name, sha1(source))`` held in the parent and shared
+  across workers — a source evaluated once anywhere is never resubmitted,
+  and duplicate sources within one batch collapse to a single job.
+* oracle outputs: ``(task_name, input_seed)`` in each worker's memory;
+  with ``cache_dir`` they are shared across workers/processes/runs via
+  ``<cache_dir>/oracle/<task>_<seed>.npy`` (atomic-rename writes).
+* baselines: ``<cache_dir>/baseline_us.json`` keyed by task + timing
+  config (see `Evaluator.baseline_us`).
+
+Determinism: compile and correctness outcomes are pure functions of the
+source, so parallel evaluation returns bit-identical `EvalResult`s to the
+serial evaluator; with ``timing_mode="simulated"`` the runtimes are too
+(tested in tests/test_parallel_eval.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+import time
+from multiprocessing import Pipe, connection
+from typing import Dict, List, Optional, Tuple
+
+from repro.evaluation.evaluator import (
+    EvalConfig,
+    EvalResult,
+    Evaluator,
+    _errmsg,
+    source_key,
+)
+from repro.tasks.base import KernelTask
+
+_WORKER_CMD = "from repro.evaluation.parallel import _worker_entry; _worker_entry()"
+
+
+def _worker_entry():
+    """Subprocess entry: rebuild the pipe from the inherited fd, read the
+    init message, serve jobs (see module docstring for the protocol)."""
+    from multiprocessing.connection import Connection
+
+    conn = Connection(int(os.environ["REPRO_EVAL_WORKER_FD"]))
+    _, config, cache_dir, extra_task_modules = conn.recv()
+    _worker_main(conn, config, cache_dir, extra_task_modules)
+
+
+def _worker_main(conn, config: EvalConfig, cache_dir: Optional[str], extra_task_modules):
+    import importlib
+    import warnings
+
+    warnings.filterwarnings("ignore")
+    import repro.tasks as tasks_mod
+
+    for mod in extra_task_modules or ():
+        importlib.import_module(mod)
+    ev = Evaluator(config, cache_dir=cache_dir)
+    conn.send(("ready",))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):  # parent went away
+            break
+        if msg is None:
+            break
+        _, job_id, task_name, source = msg
+        try:
+            task = tasks_mod.get_task(task_name)
+            payload = dataclasses.asdict(ev.evaluate(task, source))
+        except BaseException as e:  # noqa: BLE001 — a worker never dies on a job
+            payload = dataclasses.asdict(
+                EvalResult(error=_errmsg(e), stage="unexpected")
+            )
+        conn.send(("result", job_id, payload, ev.stats_snapshot()))
+    conn.close()
+
+
+class _Worker:
+    __slots__ = ("proc", "conn", "state", "job_id", "started", "uid")
+
+    def __init__(self, proc, conn, uid: int):
+        self.proc = proc
+        self.conn = conn
+        self.uid = uid
+        self.state = "starting"  # starting -> idle <-> busy
+        self.job_id: Optional[str] = None
+        self.started = 0.0
+
+
+class ParallelEvaluator(Evaluator):
+    """Drop-in `Evaluator` that evaluates population batches in a pool of
+    spawned worker processes.
+
+    Workers start lazily on the first evaluation and persist across
+    batches (their jit caches stay warm).  Use as a context manager or
+    call ``close()`` to reap them.
+    """
+
+    def __init__(
+        self,
+        config: Optional[EvalConfig] = None,
+        workers: Optional[int] = None,
+        cache_dir: Optional[str] = None,
+        worker_deadline_s: Optional[float] = None,
+        extra_task_modules: Tuple[str, ...] = (),
+    ):
+        super().__init__(config, cache_dir=cache_dir)
+        self.workers = max(1, workers or min(4, os.cpu_count() or 1))
+        if worker_deadline_s is None and self.config.timeout_s:
+            # grace over the in-worker SIGALRM: only hard (native) hangs
+            # should ever reach the kill path
+            worker_deadline_s = self.config.timeout_s * 1.5 + 30.0
+        self.worker_deadline_s = worker_deadline_s
+        self.extra_task_modules = tuple(extra_task_modules)
+        self.workers_killed = 0
+        self._pool: List[_Worker] = []
+        self._uid_seq = 0
+        self._worker_stats: Dict[int, Dict[str, int]] = {}
+
+    # ------------------------------------------------------------------
+    def set_cache_dir(self, cache_dir: str) -> None:
+        # workers receive cache_dir at spawn; changing it under a live pool
+        # would desynchronize parent and workers, so it only applies before
+        # the first evaluation
+        if getattr(self, "_pool", None):  # guard: also called from super().__init__
+            import warnings
+
+            warnings.warn(
+                f"ParallelEvaluator.set_cache_dir({cache_dir!r}) ignored: the "
+                "worker pool is already running with "
+                f"cache_dir={self.cache_dir!r}; construct the evaluator with "
+                "cache_dir (or set it before the first evaluation) to persist "
+                "oracle/baseline caches",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return
+        super().set_cache_dir(cache_dir)
+
+    # ------------------------------------------------------------------
+    # pool management
+    # ------------------------------------------------------------------
+    def _spawn(self) -> _Worker:
+        parent_conn, child_conn = Pipe()
+        env = dict(os.environ)
+        src_root = os.path.dirname(
+            os.path.dirname(os.path.abspath(sys.modules["repro"].__file__))
+        )
+        prev = env.get("PYTHONPATH")
+        env["PYTHONPATH"] = src_root + (os.pathsep + prev if prev else "")
+        env["REPRO_EVAL_WORKER_FD"] = str(child_conn.fileno())
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _WORKER_CMD],
+            env=env,
+            pass_fds=(child_conn.fileno(),),
+            close_fds=True,
+            stdout=subprocess.DEVNULL,  # candidate prints are not results
+            stderr=subprocess.DEVNULL,
+        )
+        child_conn.close()
+        parent_conn.send(("init", self.config, self.cache_dir, self.extra_task_modules))
+        self._uid_seq += 1
+        w = _Worker(proc, parent_conn, self._uid_seq)
+        self._pool.append(w)
+        return w
+
+    def _ensure_pool(self, n: int) -> None:
+        while len(self._pool) < min(n, self.workers):
+            self._spawn()
+
+    def _reap(self, w: _Worker, kill: bool = False) -> None:
+        if kill and w.proc.poll() is None:
+            w.proc.kill()
+            self.workers_killed += 1
+        try:
+            w.proc.wait(timeout=5.0)
+        except subprocess.TimeoutExpired:
+            w.proc.kill()
+            try:
+                w.proc.wait(timeout=2.0)
+            except subprocess.TimeoutExpired:
+                pass
+        try:
+            w.conn.close()
+        except OSError:
+            pass
+        if w in self._pool:
+            self._pool.remove(w)
+
+    def close(self) -> None:
+        """Shut the pool down; idle workers exit cleanly, stuck ones are reaped."""
+        for w in self._pool:
+            try:
+                w.conn.send(None)
+            except (OSError, ValueError, BrokenPipeError):
+                pass
+        for w in list(self._pool):
+            self._reap(w)
+        self._pool.clear()
+
+    def __enter__(self) -> "ParallelEvaluator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # best-effort; close() is the real API
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001
+            pass
+
+    # ------------------------------------------------------------------
+    # evaluation
+    # ------------------------------------------------------------------
+    def evaluate(self, task: KernelTask, source: str) -> EvalResult:
+        return self.evaluate_batch(task, [source])[0]
+
+    def evaluate_batch(self, task: KernelTask, sources: List[str]) -> List[EvalResult]:
+        results: List[Optional[EvalResult]] = [None] * len(sources)
+        pending: Dict[Tuple[str, str], List[int]] = {}
+        queue: List[Tuple[str, str]] = []  # (sha, source), submission order
+        for i, src in enumerate(sources):
+            key = source_key(task.name, src)
+            if key in self._cache:
+                self.cache_hits += 1
+                results[i] = self._cache[key]
+            elif key in pending:
+                pending[key].append(i)
+            else:
+                pending[key] = [i]
+                queue.append((key[1], src))
+        if pending:
+            # spawn the full pool up front: workers warm (JAX import, ~s)
+            # concurrently instead of trickling in behind the first batch
+            self._ensure_pool(self.workers)
+            self._run_jobs(task, queue, pending, results)
+        return results  # type: ignore[return-value]
+
+    def _finish(
+        self,
+        task_name: str,
+        sha: str,
+        res: EvalResult,
+        pending: Dict[Tuple[str, str], List[int]],
+        results: List[Optional[EvalResult]],
+    ) -> None:
+        key = (task_name, sha)
+        self._cache[key] = res
+        for i in pending.pop(key):
+            results[i] = res
+
+    def _run_jobs(self, task, queue, pending, results) -> None:
+        todo = list(reversed(queue))  # pop() from the end = submission order
+        sources = {sha: src for sha, src in queue}
+        n_outstanding = len(todo)
+        retried: set = set()
+        consecutive_crashes = 0
+        while n_outstanding:
+            if consecutive_crashes > max(4, 2 * self.workers):
+                raise RuntimeError(
+                    "evaluation workers keep dying before serving a job — "
+                    "the spawned interpreter cannot re-import the parent "
+                    "__main__/environment (see repro/evaluation/parallel.py)"
+                )
+            # dispatch to idle workers
+            for w in self._pool:
+                if not todo:
+                    break
+                if w.state == "idle":
+                    sha, src = todo.pop()
+                    w.conn.send(("eval", sha, task.name, src))
+                    w.state = "busy"
+                    w.job_id = sha
+                    w.started = time.monotonic()
+            # collect results / readiness; wait() wakes immediately on any
+            # message, so the timeout only bounds how late a hard-deadline
+            # kill can fire — no busy-polling between events
+            wait_s = 0.2
+            if self.worker_deadline_s:
+                now = time.monotonic()
+                for w in self._pool:
+                    if w.state == "busy":
+                        remaining = w.started + self.worker_deadline_s - now
+                        wait_s = max(0.0, min(wait_s, remaining))
+            ready = connection.wait([w.conn for w in self._pool], timeout=wait_s)
+            for c in ready:
+                w = next((x for x in self._pool if x.conn is c), None)
+                if w is None:  # reaped earlier in this iteration
+                    continue
+                try:
+                    msg = c.recv()
+                except (EOFError, OSError):
+                    # worker died underneath us (e.g. OOM-killed); retry its
+                    # job once on another worker before failing it, so a
+                    # transient kill can't change an otherwise-deterministic
+                    # batch result
+                    consecutive_crashes += 1
+                    if w.state == "busy":
+                        if w.job_id not in retried:
+                            retried.add(w.job_id)
+                            todo.append((w.job_id, sources[w.job_id]))
+                        else:
+                            self._finish(
+                                task.name, w.job_id,
+                                EvalResult(error="evaluation worker crashed", stage="unexpected"),
+                                pending, results,
+                            )
+                            n_outstanding -= 1
+                    self._reap(w)
+                    continue
+                if msg[0] == "ready":
+                    w.state = "idle"
+                    consecutive_crashes = 0
+                elif msg[0] == "result":
+                    _, job_id, payload, stats = msg
+                    self._worker_stats[w.uid] = stats
+                    self._finish(task.name, job_id, EvalResult(**payload), pending, results)
+                    n_outstanding -= 1
+                    w.state = "idle"
+                    w.job_id = None
+            # hard-deadline kills (stuck in native code; SIGALRM never fired)
+            if self.worker_deadline_s:
+                now = time.monotonic()
+                for w in list(self._pool):
+                    if w.state == "busy" and now - w.started > self.worker_deadline_s:
+                        self._finish(
+                            task.name, w.job_id,
+                            EvalResult(
+                                error=(
+                                    f"candidate exceeded {self.worker_deadline_s}s "
+                                    "hard deadline; worker killed"
+                                ),
+                                stage="timeout",
+                            ),
+                            pending, results,
+                        )
+                        n_outstanding -= 1
+                        self._reap(w, kill=True)
+            # keep the pool at strength for remaining work
+            deficit = min(self.workers, len(todo) + sum(
+                1 for w in self._pool if w.state == "busy"
+            )) - len(self._pool)
+            for _ in range(max(0, deficit)):
+                self._spawn()
+
+    # ------------------------------------------------------------------
+    def stats_snapshot(self) -> Dict[str, int]:
+        agg = {
+            "cache_hits": self.cache_hits,
+            "oracle_hits": 0,
+            "oracle_misses": 0,
+            "evaluated": len(self._cache),
+            "workers_killed": self.workers_killed,
+        }
+        for s in self._worker_stats.values():
+            agg["oracle_hits"] += s.get("oracle_hits", 0)
+            agg["oracle_misses"] += s.get("oracle_misses", 0)
+        return agg

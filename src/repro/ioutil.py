@@ -1,0 +1,43 @@
+"""Small shared I/O helpers: atomic writes for caches and registries.
+
+Writers across the repo (oracle .npy cache, baseline_us.json, the tuned
+genome registry) all need crash/concurrency-safe file updates: write to a
+pid-suffixed temp file, then `os.replace` — readers see either the old or
+the new content, never a torn write.  Concurrent updaters last-write-win
+per whole file, which is acceptable for these append-mostly caches.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, Optional
+
+
+def atomic_write(path: str, write_fn: Callable[[Any], None], mode: str = "wb") -> None:
+    """Write via `write_fn(file_object)` to a temp file, then rename over `path`."""
+    tmp = f"{path}.tmp{os.getpid()}"
+    with open(tmp, mode) as f:
+        write_fn(f)
+    os.replace(tmp, path)
+
+
+def read_json(path: str) -> Dict[str, Any]:
+    """Best-effort JSON read: {} on missing/corrupt file."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def update_json(path: str, updates: Dict[str, Any]) -> Dict[str, Any]:
+    """Read-merge-atomically-rewrite a JSON object file; returns the merge."""
+    data = read_json(path)
+    data.update(updates)
+    atomic_write(
+        path,
+        lambda f: (json.dump(data, f, indent=2, sort_keys=True), f.write("\n")),
+        mode="w",
+    )
+    return data

@@ -8,7 +8,8 @@ Each kernel ships as a triple:
 Block shapes are genome knobs: launch/autotune.py drives the EvoEngineer
 engine over them with the TPU v5e cost model as f(p) (see DESIGN.md §3 —
 the paper's own future-work item, "co-evolving kernels with their
-compilation parameters").
+compilation parameters").  Winners persist in tuned.py's registry
+(tuned_genomes.json) and become the ops-layer dispatch defaults.
 """
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "tuned"]

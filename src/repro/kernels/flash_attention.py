@@ -6,8 +6,15 @@ lives in VMEM scratch and persists across kv steps of one q tile (the
 standard TPU flash structure; HBM->VMEM streaming of K/V tiles is expressed
 by the BlockSpecs, MXU work by the two dots per step).
 
+GQA is zero-copy: K/V stay at their natural (B*KV, S, D) layout and the
+K/V BlockSpec index_maps send every q head of a group to the SAME kv-head
+tiles (``bh // group``).  Nothing materializes a per-q-head repeated copy —
+the old ``jnp.repeat`` pre-pass cost G× the K/V HBM footprint and traffic
+(tests assert the repeat-free jaxpr).
+
 Block shapes (bq, bk) are the kernel genome — multiples of 128 keep the MXU
-systolic array full; the autotuner searches them against the v5e cost model.
+systolic array full; the autotuner searches them against the v5e cost model
+and `repro.kernels.tuned` persists the winners as dispatch defaults.
 """
 
 from __future__ import annotations
@@ -78,27 +85,32 @@ def flash_attention_pallas(
     b, s, h, d = q.shape
     kvh = k.shape[2]
     dv = v.shape[-1]
+    assert h % kvh == 0, (h, kvh)
     g = h // kvh
     bq = min(block_q, s)
     bk = min(block_k, s)
     assert s % bq == 0 and s % bk == 0, (s, bq, bk)
     nq, nk = s // bq, s // bk
 
-    # flatten (B, KV, G) into one parallel grid axis; kv tiles broadcast over G
+    # Query heads flatten to (B*H, S, D) with head h belonging to kv head
+    # h // g (the reference's grouping).  K/V are NOT repeated: they keep
+    # their (B*KV, S, D) layout and the index_maps below stream the same
+    # kv tile to all g query heads of a group — zero-copy GQA.
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, d)
-    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, dv)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, s, dv)
 
     kernel = functools.partial(
         _flash_kernel, bq=bq, bk=bk, scale=d**-0.5, cap=logit_cap, nk=nk
     )
+    # bh = b_idx * h + h_idx and h = kvh * g, so bh // g = b_idx * kvh + kv
     out = pl.pallas_call(
         kernel,
         grid=(b * h, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, bk, dv), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, dv), lambda bh, qi, ki: (bh // g, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, dv), lambda bh, qi, ki: (bh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, s, dv), q.dtype),

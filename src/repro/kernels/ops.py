@@ -4,6 +4,12 @@ backend="pallas_interpret" executes the kernel bodies in Python on CPU
 (correctness); on a real TPU the same code path runs with interpret=False.
 backend="xla" falls back to the pure-jnp reference — the path the dry-run
 and CPU smoke tests compile.
+
+Block/chunk arguments left as ``None`` resolve through the tuned-genome
+registry (`repro.kernels.tuned`), i.e. the `launch/autotune.py --save`
+winners are the live defaults; explicit arguments always override.
+Resolution happens at trace time — the values are static, so each
+(shape, genome) signature compiles once.
 """
 
 from __future__ import annotations
@@ -14,6 +20,7 @@ from typing import Optional
 import jax
 
 from repro.kernels import ref as _ref
+from repro.kernels import tuned as _tuned
 from repro.kernels.blocked_matmul import matmul_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rglru import rglru_pallas
@@ -29,8 +36,26 @@ def _dispatch(backend: str):
     return backend != "xla"
 
 
+def _fit(kernel, knob, value, fallback, dim):
+    """Resolve a block knob against the actual dimension: explicit `value`
+    is honored verbatim (the caller owns divisibility, as before); a tuned
+    registry value that does not tile `dim` degrades to the builtin
+    default, so autotuned genomes — modeled at one benchmark shape — never
+    break shapes the stock defaults handled."""
+    if value is not None:
+        return value
+    for cand in (_tuned.resolve(kernel, knob, None, fallback), fallback):
+        c = min(cand, dim)
+        if dim % c == 0:
+            return c
+    return dim
+
+
 @functools.partial(jax.jit, static_argnames=("logit_cap", "block_q", "block_k", "backend"))
-def flash_attention(q, k, v, *, logit_cap=None, block_q=128, block_k=128, backend="pallas_interpret"):
+def flash_attention(q, k, v, *, logit_cap=None, block_q=None, block_k=None, backend="pallas_interpret"):
+    s = q.shape[1]
+    block_q = _fit("flash", "block_q", block_q, 128, s)
+    block_k = _fit("flash", "block_k", block_k, 128, s)
     if _dispatch(backend):
         return flash_attention_pallas(
             q, k, v, logit_cap=logit_cap, block_q=block_q, block_k=block_k,
@@ -40,7 +65,10 @@ def flash_attention(q, k, v, *, logit_cap=None, block_q=128, block_k=128, backen
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "backend"))
-def matmul(a, b, *, block_m=256, block_n=256, block_k=256, backend="pallas_interpret"):
+def matmul(a, b, *, block_m=None, block_n=None, block_k=None, backend="pallas_interpret"):
+    block_m = _fit("matmul", "block_m", block_m, 256, a.shape[0])
+    block_n = _fit("matmul", "block_n", block_n, 256, b.shape[1])
+    block_k = _fit("matmul", "block_k", block_k, 256, a.shape[1])
     if _dispatch(backend):
         return matmul_pallas(
             a, b, block_m=block_m, block_n=block_n, block_k=block_k,
@@ -50,7 +78,9 @@ def matmul(a, b, *, block_m=256, block_n=256, block_k=256, backend="pallas_inter
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "backend"))
-def rmsnorm(x, scale, *, eps=1e-6, block_rows=128, backend="pallas_interpret"):
+def rmsnorm(x, scale, *, eps=1e-6, block_rows=None, backend="pallas_interpret"):
+    # rmsnorm_pallas halves block_rows itself until it tiles the row count
+    block_rows = _tuned.resolve("rmsnorm", "block_rows", block_rows, 128)
     if _dispatch(backend):
         return rmsnorm_pallas(
             x, scale, eps=eps, block_rows=block_rows, interpret=_INTERPRET
@@ -59,14 +89,16 @@ def rmsnorm(x, scale, *, eps=1e-6, block_rows=128, backend="pallas_interpret"):
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "backend"))
-def wkv6(r, k, v, log_w, u, *, chunk=64, backend="pallas_interpret"):
+def wkv6(r, k, v, log_w, u, *, chunk=None, backend="pallas_interpret"):
+    chunk = _fit("wkv6", "chunk", chunk, 64, r.shape[1])
     if _dispatch(backend):
         return wkv6_pallas(r, k, v, log_w, u, chunk=chunk, interpret=_INTERPRET)
     return _ref.wkv6_ref(r, k, v, log_w, u, chunk=chunk)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "backend"))
-def rglru(a, b, *, chunk=64, backend="pallas_interpret"):
+def rglru(a, b, *, chunk=None, backend="pallas_interpret"):
+    chunk = _fit("rglru", "chunk", chunk, 64, a.shape[1])
     if _dispatch(backend):
         return rglru_pallas(a, b, chunk=chunk, interpret=_INTERPRET)
     return _ref.rglru_ref(a, b)

@@ -1,0 +1,91 @@
+"""Tuned-genome registry: autotuner winners become dispatch defaults.
+
+`launch/autotune.py --save` persists each kernel's best genome here
+(``tuned_genomes.json`` beside this module, overridable with the
+``REPRO_TUNED_GENOMES`` env var), and the `ops.py` wrappers resolve any
+block/chunk argument left as ``None`` through `get_tuned` — so an
+autotune run upgrades every caller's defaults instead of ending life as
+print-only JSON.  Passing explicit block sizes always wins.
+
+Entries merge over `_BUILTIN` (the safe hand-picked fallbacks), so a
+partial file or an unknown kernel never breaks dispatch.  ``_meta`` keys
+inside an entry record provenance (modeled time, trials, seed) and are
+ignored by `get_tuned`.
+
+Note: the jit'd dispatch wrappers resolve tuned defaults at trace time;
+a registry update during a process's lifetime only affects call
+signatures not yet traced (``jax.clear_caches()`` forces re-resolution).
+"""
+
+from __future__ import annotations
+
+import copy
+import os
+from typing import Any, Dict, Optional
+
+from repro.ioutil import read_json, update_json
+
+ENV_VAR = "REPRO_TUNED_GENOMES"
+_DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "tuned_genomes.json")
+
+_BUILTIN: Dict[str, Dict[str, Any]] = {
+    "flash": {"block_q": 128, "block_k": 128},
+    "matmul": {"block_m": 256, "block_n": 256, "block_k": 256},
+    "wkv6": {"chunk": 64},
+    "rmsnorm": {"block_rows": 128},
+    "rglru": {"chunk": 64},
+}
+
+_loaded: Optional[Dict[str, Dict[str, Any]]] = None
+
+
+def genomes_path() -> str:
+    return os.environ.get(ENV_VAR, _DEFAULT_PATH)
+
+
+def invalidate() -> None:
+    """Drop the in-memory registry; next access re-reads the file."""
+    global _loaded
+    _loaded = None
+
+
+def _load() -> Dict[str, Dict[str, Any]]:
+    global _loaded
+    if _loaded is None:
+        _loaded = copy.deepcopy(_BUILTIN)
+        path = genomes_path()
+        if os.path.exists(path):
+            for kernel, genome in read_json(path).items():
+                if isinstance(genome, dict):
+                    _loaded.setdefault(kernel, {}).update(
+                        {k: v for k, v in genome.items() if not k.startswith("_")}
+                    )
+    return _loaded
+
+
+def get_tuned(kernel: str) -> Dict[str, Any]:
+    """The tuned genome for `kernel` (builtin fallbacks merged under file)."""
+    return dict(_load().get(kernel, {}))
+
+
+def resolve(kernel: str, knob: str, value: Any, fallback: Any) -> Any:
+    """Dispatch helper: explicit `value` wins, else tuned, else `fallback`."""
+    if value is not None:
+        return value
+    return _load().get(kernel, {}).get(knob, fallback)
+
+
+def save_tuned(
+    kernel: str,
+    genome: Dict[str, Any],
+    meta: Optional[Dict[str, Any]] = None,
+    path: Optional[str] = None,
+) -> str:
+    """Persist `genome` as the tuned default for `kernel` (atomic write)."""
+    path = path or genomes_path()
+    entry = dict(genome)
+    if meta:
+        entry["_meta"] = meta
+    update_json(path, {kernel: entry})
+    invalidate()
+    return path

@@ -8,6 +8,10 @@ so f(p) here is the modeled kernel time (compute term vs HBM term with a
 VMEM-fit constraint as g(p)).
 
     PYTHONPATH=src python -m repro.launch.autotune --kernel flash --trials 40
+
+``--save`` persists the winning genome into the `repro.kernels.tuned`
+registry, where the ops-layer dispatch wrappers pick it up as the default
+block/chunk configuration (no more print-only JSON).
 """
 
 from __future__ import annotations
@@ -125,6 +129,14 @@ def main():
     ap.add_argument("--trials", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--save", action="store_true",
+        help="persist the best genome into the repro.kernels.tuned registry",
+    )
+    ap.add_argument(
+        "--save-path", default=None,
+        help="registry file to write (default: the active tuned_genomes.json)",
+    )
     args = ap.parse_args()
     res = tune(args.kernel, args.trials, args.seed)
     print(f"kernel={res['kernel']} best={res['best_genome']} "
@@ -132,6 +144,21 @@ def main():
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f, indent=2)
+    if args.save:
+        from repro.kernels import tuned
+
+        path = tuned.save_tuned(
+            args.kernel,
+            res["best_genome"],
+            meta={
+                "modeled_us": round(res["best_modeled_us"], 1),
+                "trials": args.trials,
+                "seed": args.seed,
+                "source": "repro.launch.autotune (v5e roofline model)",
+            },
+            path=args.save_path,
+        )
+        print(f"saved tuned genome -> {path}")
 
 
 if __name__ == "__main__":

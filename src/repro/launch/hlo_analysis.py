@@ -306,7 +306,10 @@ class Cost:
 
 class HloAnalyzer:
     def __init__(self, hlo_text: str, n_devices: int):
-        from jax._src.lib import _jax as _jaxlib
+        try:  # jaxlib >= 0.5 renamed the extension module
+            from jax._src.lib import _jax as _jaxlib
+        except ImportError:
+            from jax._src.lib import xla_extension as _jaxlib
 
         import jax
 
@@ -395,6 +398,8 @@ def analyze_compiled(compiled, n_devices: int) -> Dict[str, float]:
     analyzer = HloAnalyzer(txt, n_devices)
     cost = analyzer.total_cost()
     raw = compiled.cost_analysis()
+    if isinstance(raw, (list, tuple)):  # jax < 0.5 returns one dict per program
+        raw = raw[0] if raw else {}
     return {
         "flops": cost.flops,
         "bytes_accessed": cost.bytes_accessed,

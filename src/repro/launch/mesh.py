@@ -9,7 +9,15 @@ while smoke tests and benchmarks must see the real single device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 names explicit/auto axis types; older versions have none
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover — version-dependent
+    AxisType = None
+
+
+def _axis_types(n: int):
+    return {"axis_types": (AxisType.Auto,) * n} if AxisType is not None else {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,7 +25,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips across 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def make_host_mesh(model_axis: int = 1):
@@ -26,8 +34,7 @@ def make_host_mesh(model_axis: int = 1):
     n = jax.device_count()
     assert n % model_axis == 0, (n, model_axis)
     return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+        (n // model_axis, model_axis), ("data", "model"), **_axis_types(2)
     )
 
 

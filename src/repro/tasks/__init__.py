@@ -16,6 +16,7 @@ implementation space that renders to real Python/JAX source text.
 
 from repro.tasks.base import KernelTask, TASK_REGISTRY, get_task, all_tasks
 from repro.tasks import catalog  # noqa: F401  (populates the registry)
+from repro.tasks import calibration  # noqa: F401  (eval-subsystem tasks)
 
 # The paper's Table 5 per-category counts (18/28/21/15/7/5) sum to 94 while
 # its headline says 91 kernels — an internal inconsistency of the paper

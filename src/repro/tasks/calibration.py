@@ -1,0 +1,53 @@
+"""Calibration tasks for the evaluation subsystem itself.
+
+These are NOT benchmark tasks (they are excluded from `all_tasks()` /
+`benchmark_tasks()`): they exist so the parallel-evaluation pool, the
+timeout kill path and the throughput benches can be exercised against a
+workload with a *known* cost profile.  ``cal_sleep``'s rendered source
+sleeps at module scope, so every evaluation of a distinct source costs
+the genome's ``sleep_ms`` during the stage-1 exec — pure, GIL-releasing
+wait, which makes pool speedups measurable even on tiny CI hosts.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.tasks.base import KernelTask, register
+
+
+def _cal_inputs(seed: int):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(64).astype(np.float32),)
+
+
+def _cal_ref(x):
+    return x * 2.0 + 1.0
+
+
+def _render_sleep(genome):
+    ms = genome.get("sleep_ms", 50)
+    return (
+        "import time\n"
+        "import jax.numpy as jnp\n\n"
+        f"time.sleep({ms} / 1000.0)  # simulated compile cost\n\n\n"
+        "def kernel(x):\n"
+        "    return x * 2.0 + 1.0\n"
+    )
+
+
+register(
+    KernelTask(
+        name="cal_sleep",
+        category="calibration",
+        description=(
+            "Calibration: trivial kernel whose source sleeps sleep_ms at "
+            "import — a deterministic per-candidate evaluation cost."
+        ),
+        make_inputs=_cal_inputs,
+        ref=_cal_ref,
+        genome_space={"sleep_ms": [10, 25, 50, 100]},
+        render=_render_sleep,
+        naive_genome={"sleep_ms": 50},
+    )
+)

@@ -280,7 +280,7 @@ _CONV_HELPERS = textwrap.dedent(
                 patch = xg[sl]
                 wt = w[g * (co // groups):(g + 1) * (co // groups),
                        (slice(None),) if False else slice(None)][
-                    :, :, *[slice(t, t + 1) for t in taps]]
+                    (slice(None), slice(None)) + tuple(slice(t, t + 1) for t in taps)]
                 wt = wt.reshape(co // groups, xp.shape[1] // groups)
                 contrib = jnp.tensordot(patch, wt, axes=((1,), (1,)))
                 contrib = jnp.moveaxis(contrib, -1, 1)

@@ -1,0 +1,92 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The seed environment has no `hypothesis`, which used to kill collection of
+five test modules outright.  Importing this module instead (see the
+``try/except ImportError`` in those files) keeps the property tests
+*running*: each ``@given`` test executes against ``max_examples`` samples
+drawn from a seeded RNG (seeded from the test name, so failures
+reproduce).  This is intentionally minimal — no shrinking, no edge-case
+search, only the strategy combinators this suite uses.  With hypothesis
+installed the real library is used and this module is inert.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+st = _Strategies()
+
+
+def settings(**kwargs):
+    """Accepts and records max_examples; other knobs are no-ops here."""
+
+    def deco(fn):
+        fn._stub_max_examples = kwargs.get("max_examples", 25)
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (
+                getattr(wrapper, "_stub_max_examples", None)
+                or getattr(fn, "_stub_max_examples", None)
+                or 25
+            )
+            seed = int(hashlib.sha1(fn.__qualname__.encode()).hexdigest()[:8], 16)
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                fn(*args, *(s.example(rng) for s in strategies), **kwargs)
+
+        # pytest must see the wrapper's own (*args, **kwargs) signature, not
+        # the wrapped test's parameters (it would treat them as fixtures)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

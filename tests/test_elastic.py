@@ -6,8 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # seed env: run properties via the deterministic stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.train.elastic import ElasticPlan, build_mesh, plan_elastic_config, reshard
 

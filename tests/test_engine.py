@@ -5,8 +5,11 @@ import tempfile
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # seed env: run properties via the deterministic stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.engine import EvolutionEngine
 from repro.core.methods import DISPLAY_ORDER, get_method

@@ -1,4 +1,9 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle.
+
+The large parametrized sweeps carry @pytest.mark.slow and are deselected
+by the default profile (pytest.ini: -m "not slow"); each kernel keeps an
+unmarked fast smoke case so the tier-1 gate still exercises every path.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +23,7 @@ def _tol(dtype):
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("s,h,kv,d", [(128, 4, 4, 32), (256, 4, 2, 64), (512, 8, 1, 32)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("cap", [None, 30.0])
@@ -31,6 +37,40 @@ def test_flash_attention_sweep(s, h, kv, d, dtype, cap):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
     )
+
+
+@pytest.mark.parametrize("g", [1, 2, 4])
+def test_flash_attention_gqa_zero_copy(g):
+    """The GQA fast path: correct for every group size AND repeat-free —
+    K/V enter the pallas_call at (B*KV, S, D), never expanded to per-q-head
+    copies (no gather, no rank-5 broadcast anywhere in the jaxpr)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    b, s, kvh, d = 2, 256, 2, 32
+    h = kvh * g
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kvh, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kvh, d), jnp.float32)
+
+    fn = lambda q, k, v: flash_attention_pallas(
+        q, k, v, block_q=64, block_k=64, interpret=True
+    )
+    got = fn(q, k, v)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    jaxpr = jax.make_jaxpr(fn)(q, k, v).jaxpr
+    pallas_in_shapes = [
+        tuple(x.aval.shape)
+        for e in jaxpr.eqns
+        if e.primitive.name == "pallas_call"
+        for x in e.invars
+    ]
+    assert (b * kvh, s, d) in pallas_in_shapes  # K/V streamed unrepeated
+    prim_names = {e.primitive.name for e in jaxpr.eqns}
+    assert "gather" not in prim_names  # jnp.repeat's lowering
+    max_rank = max(len(o.aval.shape) for e in jaxpr.eqns for o in e.outvars)
+    assert max_rank <= 4  # no (B, KV, G, S, D) broadcast anywhere
 
 
 @pytest.mark.parametrize("bq,bk", [(32, 64), (64, 32), (128, 128)])
@@ -47,6 +87,7 @@ def test_flash_attention_block_shapes(bq, bk):
 # ---------------------------------------------------------------------------
 # blocked matmul
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 192, 320), (64, 512, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_matmul_sweep(m, k, n, dtype):
@@ -68,6 +109,7 @@ def test_matmul_vmem_model():
 # ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("shape", [(64, 256), (8, 16, 128), (3, 384)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rmsnorm_sweep(shape, dtype):
@@ -83,6 +125,7 @@ def test_rmsnorm_sweep(shape, dtype):
 # ---------------------------------------------------------------------------
 # wkv6
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("s,h,kd,chunk", [(64, 2, 16, 16), (128, 4, 32, 32), (256, 1, 16, 64)])
 def test_wkv6_sweep(s, h, kd, chunk):
     b = 2
@@ -109,6 +152,30 @@ def test_wkv6_matches_sequential_recurrence():
 # ---------------------------------------------------------------------------
 # rglru
 # ---------------------------------------------------------------------------
+def test_kernel_smoke_fast_profile():
+    """One small case per kernel so the fast profile (-m "not slow") keeps
+    touching every Pallas path the slow sweeps cover in breadth."""
+    a = jax.random.normal(KEY, (128, 64), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 128), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.matmul(a, b, block_m=64, block_n=64, block_k=64)),
+        np.asarray(ref.matmul_ref(a, b)), rtol=2e-4, atol=2e-3,
+    )
+    x = jax.random.normal(KEY, (32, 128), jnp.float32)
+    scale = jax.random.normal(jax.random.fold_in(KEY, 1), (128,)) * 0.1
+    np.testing.assert_allclose(
+        np.asarray(ops.rmsnorm(x, scale, block_rows=32)),
+        np.asarray(ref.rmsnorm_ref(x, scale)), rtol=2e-5, atol=2e-5,
+    )
+    ga = jax.nn.sigmoid(jax.random.normal(KEY, (1, 64, 16)))
+    gb = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 64, 16)) * 0.3
+    np.testing.assert_allclose(
+        np.asarray(ops.rglru(ga, gb, chunk=16)),
+        np.asarray(ref.rglru_ref(ga, gb)), rtol=2e-4, atol=2e-4,
+    )
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("s,w,chunk", [(64, 32, 16), (128, 64, 64), (256, 16, 32)])
 def test_rglru_sweep(s, w, chunk):
     b = 2

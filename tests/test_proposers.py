@@ -2,8 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # seed env: run properties via the deterministic stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.insights import InsightRecord, InsightStore
 from repro.core.methods import FaultRegime, get_method

@@ -2,8 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # seed env: run properties via the deterministic stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.evaluation import EvalConfig, Evaluator
 from repro.proposers.synthetic import _break_semantics, _break_syntax
