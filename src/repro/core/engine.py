@@ -9,6 +9,40 @@ batch start), evaluates them — concurrently when the evaluator is a
 run is bit-identical to a serial-evaluator run with the same schedule.
 ``batch_size=1`` reproduces the original strictly-serial loop exactly.
 
+Batch staging goes through ``Proposer.propose_batch``: the engine prepares
+one `ProposalRequest` per trial (all RNG draws on the engine thread, in
+trial order) and batchable proposers (the `LLMClient`-backed ones, which
+draw nothing from the engine RNG) complete them with K concurrent
+transport calls, returning in submission order.
+
+``pipeline=True`` additionally overlaps generation with evaluation: the
+batch is staged in chunks (default: the proposer's concurrency), each
+chunk's evaluation is submitted to a single background worker, and the
+next chunk is staged while the previous one evaluates — proposing chunk
+K+1 overlaps evaluating chunk K.  RNG draws stay on the engine thread in
+trial order, evaluation chunks run in submission order on the one worker,
+and tells happen at batch end in submission order, so a pipelined run is
+bit-identical to a non-pipelined run with the same batch schedule
+(tested in tests/test_engine.py; see EXPERIMENTS.md §Proposer batching).
+
+Two documented scope limits on the pipelined mode:
+
+* Token-budget backpressure near exhaustion: a `TokenBudgetGate` admits
+  requests against worst-case reservations at issuance time, and the
+  pipelined schedule issues per chunk (after earlier chunks' cheaper
+  actuals have settled) where the non-pipelined schedule reserves a whole
+  batch up-front — so WHICH trials degrade to the budget fallback can
+  differ between pipeline on and off.  Any fixed configuration remains
+  fully deterministic (admission is submission-order, never a thread
+  race); bit-identity across pipeline settings is only guaranteed for
+  runs that don't hit the budget ceiling.
+* Straggler mitigation: the serial `Evaluator`'s SIGALRM per-candidate
+  deadline only arms on a main thread, and the pipelined mode evaluates
+  on a background worker — a candidate that hangs in native code will
+  hang the run.  Pair ``pipeline=True`` with `ParallelEvaluator` when
+  candidates are untrusted: its workers carry their own in-process
+  deadlines plus a parent-side process-kill deadline, thread-independent.
+
 Fault tolerance contract: engine state (population, insight store, RNG
 state, trial count, token ledger, history) serializes after every trial
 batch; `EvolutionEngine.resume()` continues a killed run to the identical
@@ -24,6 +58,7 @@ import hashlib
 import json
 import os
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -62,7 +97,9 @@ class RunResult:
 
     @property
     def any_speedup(self) -> bool:
-        return self.best is not None and self.baseline_us / self.best.runtime_us > 1.0
+        if self.best is None or not self.best.valid or not self.best.runtime_us:
+            return False
+        return self.baseline_us / self.best.runtime_us > 1.0
 
     @property
     def compile_rate(self) -> float:
@@ -101,6 +138,9 @@ class EvolutionEngine:
         checkpoint_dir: Optional[str] = None,
         rag_pool: Optional[List[Tuple[str, str]]] = None,
         batch_size: int = 1,
+        pipeline: bool = False,
+        pipeline_chunk: Optional[int] = None,
+        ledger: Optional[TokenLedger] = None,
     ):
         from repro.proposers.synthetic import SyntheticLLM  # lazy: cycle
 
@@ -108,6 +148,11 @@ class EvolutionEngine:
         self.method = method
         self.evaluator = evaluator or Evaluator()
         self.batch_size = max(1, batch_size)
+        # pipeline=True overlaps staging chunk K+1 with evaluating chunk K
+        # inside each batch; chunk size defaults to full transport/eval
+        # width (see _effective_chunk) and overlap needs batch_size > chunk.
+        self.pipeline = pipeline
+        self.pipeline_chunk = pipeline_chunk
         self.insights = InsightStore()
         self.proposer = proposer or SyntheticLLM(self.insights)
         if isinstance(self.proposer, SyntheticLLM):
@@ -120,8 +165,13 @@ class EvolutionEngine:
         self.rag_pool = rag_pool or []
 
         self.population = method.make_population()
-        self.ledger = TokenLedger()
+        # accept a caller-built ledger so a TokenBudgetGate can share the
+        # same object the engine charges (budget backpressure wiring)
+        self.ledger = ledger if ledger is not None else TokenLedger()
         self.history: List[Solution] = []
+        # sid -> first Solution with that sid, maintained on history append
+        # so per-trial parent lookups are O(1), not a scan of the whole run
+        self._sid_index: Dict[str, Solution] = {}
         self.trial = 0
         # stable string hashes: builtin hash() is PYTHONHASHSEED-randomized
         # per process, which would make a "seeded" run irreproducible across
@@ -147,19 +197,31 @@ class EvolutionEngine:
             # --- generate: draw the whole batch against the population /
             # insight state at the batch start (RNG order = trial order) ---
             n = min(self.batch_size, max_trials - self.trial)
-            staged = [self._propose_one(self.trial + j) for j in range(n)]
-            # --- evaluate (concurrently under a ParallelEvaluator) ---------
-            batch_results = self.evaluator.evaluate_batch(
-                self.task, [sol.source for sol, _ in staged]
-            )
+            trials = list(range(self.trial, self.trial + n))
+            chunk = self._effective_chunk()
+            # a batch that fits one chunk has nothing to overlap: run the
+            # plain schedule (identical results, minus the thread hop)
+            # rather than splitting generation below full transport width
+            if self.pipeline and n > chunk:
+                staged, batch_results = self._run_pipelined(trials, chunk)
+            else:
+                staged = self._stage_batch(trials)
+                # --- evaluate (concurrently under a ParallelEvaluator) ----
+                batch_results = self.evaluator.evaluate_batch(
+                    self.task, [sol.source for sol, _ in staged]
+                )
             # --- tell in submission order: checkpoints stay bit-identical
             # to a serial-evaluator run with the same schedule --------------
             prev_epoch = self.trial // checkpoint_every
             for (sol, proposal), res in zip(staged, batch_results):
                 self._apply_result(sol, res, baseline_us)
                 self.history.append(sol)
+                self._sid_index.setdefault(sol.sid, sol)
                 self.population.tell(sol)
-                self._record_insight(sol, proposal)
+                if proposal.issued:
+                    # degraded fallbacks carry marker insights, not model
+                    # reasoning — keep them out of future prompts
+                    self._record_insight(sol, proposal)
                 self.trial += 1
             if self.checkpoint_dir and self.trial // checkpoint_every > prev_epoch:
                 self.save_checkpoint()
@@ -180,8 +242,12 @@ class EvolutionEngine:
     def _make_solution(self, source, genome, op, trial) -> Solution:
         return Solution(source=source, genome=genome, operator=op, trial=trial)
 
-    def _propose_one(self, trial: int):
-        """Draw one proposal for `trial` (consumes RNG; does not evaluate)."""
+    def _prepare_request(self, trial: int):
+        """RNG-consuming half of a proposal: schedule the operator, sample
+        parents, build the bundle and render the prompt.  Always runs on
+        the engine thread, in trial order."""
+        from repro.proposers.base import ProposalRequest  # lazy: cycle
+
         op = self.method.schedule(trial)
         parents = self.population.sample(self.rng, self.method.guiding.n_historical or 2)
         bundle = build_bundle(
@@ -193,21 +259,89 @@ class EvolutionEngine:
             rag=self.rag_pool,
         )
         prompt = render_prompt(bundle, self.method.guiding)
-        proposal = self.proposer.propose(
-            self.task, prompt, bundle, self.method.guiding, self.method.fault, self.rng
+        return op, ProposalRequest(
+            task=self.task,
+            prompt=prompt,
+            bundle=bundle,
+            guiding=self.method.guiding,
+            fault=self.method.fault,
+            trial=trial,
         )
+
+    def _finish_proposal(self, op: str, request, proposal):
+        """Bookkeeping half: wrap the Proposal in a Solution and charge the
+        ledger.  Called in trial order."""
         sol = Solution(
             source=proposal.source,
             genome=proposal.genome,
             insight=proposal.insight,
-            trial=trial,
+            trial=request.trial,
             operator=op,
             parents=(proposal.parent_sid,) if proposal.parent_sid else (),
         )
-        sol.tokens_in = count_tokens(prompt)
-        sol.tokens_out = proposal.tokens_out
-        self.ledger.charge(sol.tokens_in, sol.tokens_out)
+        if proposal.issued:
+            # provider-reported usage when available, estimate otherwise
+            sol.tokens_in = proposal.tokens_in or count_tokens(request.prompt)
+            sol.tokens_out = proposal.tokens_out
+            self.ledger.charge(sol.tokens_in, sol.tokens_out)
         return sol, proposal
+
+    def _propose_one(self, trial: int):
+        """Draw one proposal for `trial` (consumes RNG; does not evaluate)."""
+        op, req = self._prepare_request(trial)
+        proposal = self.proposer.propose(
+            req.task, req.prompt, req.bundle, req.guiding, req.fault, self.rng
+        )
+        return self._finish_proposal(op, req, proposal)
+
+    def _stage_batch(self, trials: List[int]):
+        """Stage proposals for `trials`.  Batchable proposers (transport
+        draws nothing from the engine RNG) get all requests up-front and
+        complete them concurrently via ``propose_batch``; RNG-consuming
+        proposers keep the exact serial prepare/propose interleaving."""
+        if getattr(self.proposer, "batchable", False):
+            prepared = [self._prepare_request(t) for t in trials]
+            proposals = self.proposer.propose_batch(
+                [req for _, req in prepared], self.rng
+            )
+            return [
+                self._finish_proposal(op, req, prop)
+                for (op, req), prop in zip(prepared, proposals)
+            ]
+        return [self._propose_one(t) for t in trials]
+
+    def _effective_chunk(self) -> int:
+        """Pipeline chunk size: the explicit override, or a default that
+        keeps BOTH sides of the overlap at full width — the proposer's
+        transport concurrency and the evaluator's worker pool (splitting
+        below either would throttle generation waves or serialize a
+        ParallelEvaluator).  Overlap therefore requires
+        ``batch_size > chunk``; a batch that fits one chunk runs the plain
+        schedule."""
+        return self.pipeline_chunk or max(
+            getattr(self.proposer, "concurrency", 1) or 1,
+            getattr(self.evaluator, "workers", 1) or 1,
+        )
+
+    def _run_pipelined(self, trials: List[int], chunk: int):
+        """Stage the batch in chunks, overlapping generation of chunk K+1
+        with evaluation of chunk K.  The single background worker keeps
+        evaluation chunks in submission order (and keeps the evaluator
+        single-threaded); all RNG draws stay on this thread."""
+        staged_all, futures = [], []
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            for i in range(0, len(trials), chunk):
+                staged = self._stage_batch(trials[i : i + chunk])
+                futures.append(
+                    pool.submit(
+                        self.evaluator.evaluate_batch,
+                        self.task,
+                        [sol.source for sol, _ in staged],
+                    )
+                )
+                staged_all.extend(staged)
+            results = [res for f in futures for res in f.result()]
+        return staged_all, results
 
     def _apply_result(self, sol: Solution, res, baseline_us: float) -> Solution:
         sol.compile_ok = res.compile_ok
@@ -227,9 +361,7 @@ class EvolutionEngine:
         """Solution-insight pairs with MEASURED outcome (confirmed/refuted)."""
         gain = 0.0
         if sol.valid and sol.parents:
-            parent = next(
-                (h for h in self.history if h.sid == sol.parents[0]), None
-            )
+            parent = self._sid_index.get(sol.parents[0])
             if parent and parent.speedup and sol.speedup:
                 gain = sol.speedup - parent.speedup
         elif sol.valid and sol.speedup:
@@ -285,6 +417,16 @@ class EvolutionEngine:
         self.rng.bit_generator.state = state["rng_state"]
         self.population.load_state_dict(state["population"]["state"])
         self.insights.load_state_dict(state["insights"])
-        self.ledger = TokenLedger(**state["ledger"])
+        # restore the ledger IN PLACE: a TokenBudgetGate may hold a
+        # reference to this object, and rebinding would detach it (the gate
+        # would stop seeing post-resume spend and could overshoot budget)
+        led = state["ledger"]
+        self.ledger.tokens_in = led["tokens_in"]
+        self.ledger.tokens_out = led["tokens_out"]
+        self.ledger.calls = led["calls"]
+        self.ledger.budget = led.get("budget", self.ledger.budget)
         self.history = [Solution.from_dict(d) for d in state["history"]]
+        self._sid_index = {}
+        for s in self.history:
+            self._sid_index.setdefault(s.sid, s)
         return True

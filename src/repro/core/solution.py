@@ -66,11 +66,20 @@ class Solution:
 
 @dataclasses.dataclass
 class TokenLedger:
-    """Per-run token accounting (paper Fig. 4 reproduces from this)."""
+    """Per-run token accounting (paper Fig. 4 reproduces from this).
+
+    ``budget`` is the run's total-token ceiling (None = unlimited).  The
+    ledger itself only records; enforcement is the transport layer's job —
+    `repro.proposers.client.TokenBudgetGate` reserves against this budget
+    before issuing a request and refuses requests that would overshoot it
+    (backpressure), counting in-flight reservations so concurrent batched
+    generation cannot collectively exceed the ceiling.
+    """
 
     tokens_in: int = 0
     tokens_out: int = 0
     calls: int = 0
+    budget: Optional[int] = None
 
     def charge(self, tin: int, tout: int) -> None:
         self.tokens_in += tin

@@ -1,13 +1,42 @@
-"""Solution generation: synthetic mutation engine + real-LLM HTTP clients."""
+"""Solution generation: synthetic mutation engine + real-LLM proposers
+over the provider-agnostic `LLMClient` transport."""
 
-from repro.proposers.base import Proposal, Proposer
+from repro.proposers.base import Proposal, ProposalRequest, Proposer
+from repro.proposers.client import (
+    AnthropicClient,
+    Completion,
+    CompletionRequest,
+    LLMClient,
+    MockClient,
+    OpenAIClient,
+    RateLimiter,
+    RetryPolicy,
+    SimulatedLatencyClient,
+    TokenBudgetExceeded,
+    TokenBudgetGate,
+    TransportError,
+)
+from repro.proposers.llm import AnthropicProposer, LLMProposer, OpenAIProposer
 from repro.proposers.synthetic import SyntheticLLM
-from repro.proposers.llm import AnthropicProposer, OpenAIProposer
 
 __all__ = [
+    "AnthropicClient",
     "AnthropicProposer",
+    "Completion",
+    "CompletionRequest",
+    "LLMClient",
+    "LLMProposer",
+    "MockClient",
+    "OpenAIClient",
     "OpenAIProposer",
     "Proposal",
+    "ProposalRequest",
     "Proposer",
+    "RateLimiter",
+    "RetryPolicy",
+    "SimulatedLatencyClient",
     "SyntheticLLM",
+    "TokenBudgetExceeded",
+    "TokenBudgetGate",
+    "TransportError",
 ]

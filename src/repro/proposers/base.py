@@ -1,9 +1,19 @@
-"""Proposer interface: prompt (+ structured bundle) -> candidate source."""
+"""Proposer interface: prompt (+ structured bundle) -> candidate source.
+
+``propose_batch`` is the engine-facing primary interface: the engine
+prepares one `ProposalRequest` per trial (consuming its seeded RNG in
+trial order) and hands the whole batch over.  The base implementation
+simply loops ``propose`` in submission order — so `SyntheticLLM`, whose
+``propose`` draws from the engine RNG, keeps the exact serial draw order.
+Proposers whose transport consumes *no* engine RNG (the `LLMClient`-backed
+ones) set ``batchable = True`` and override ``propose_batch`` to issue the
+requests concurrently, returning results in submission order.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -21,7 +31,27 @@ class Proposal:
     knob: Optional[str] = None
     choice: Any = None
     parent_sid: Optional[str] = None
+    # actual prompt tokens from the provider's usage field when available
+    # (0 = unknown; the engine falls back to the count_tokens estimate)
+    tokens_in: int = 0
     tokens_out: int = 0
+    # False for degraded fallbacks whose request never went to the wire
+    # (budget-exhausted / transport-failed) — the engine charges the token
+    # ledger only for issued proposals
+    issued: bool = True
+
+
+@dataclasses.dataclass
+class ProposalRequest:
+    """One trial's fully-rendered generation request, prepared by the
+    engine against the population/insight state at the batch start."""
+
+    task: KernelTask
+    prompt: str
+    bundle: InformationBundle
+    guiding: GuidingConfig
+    fault: Any
+    trial: int = -1
 
 
 class Proposer:
@@ -29,6 +59,12 @@ class Proposer:
     the synthetic engine additionally reads the structured bundle."""
 
     name = "base"
+    # True iff ``propose`` never draws from the engine RNG, making it safe
+    # for the engine to prepare a whole batch of requests up-front and for
+    # the proposer to complete them concurrently.  RNG-consuming proposers
+    # (SyntheticLLM) must leave this False: their draw order is part of the
+    # seeded-run contract.
+    batchable = False
 
     def propose(
         self,
@@ -40,3 +76,13 @@ class Proposer:
         rng: np.random.Generator,
     ) -> Proposal:
         raise NotImplementedError
+
+    def propose_batch(
+        self, requests: Sequence[ProposalRequest], rng: np.random.Generator
+    ) -> List[Proposal]:
+        """Complete a batch of prepared requests; results align with
+        ``requests`` by index (submission order)."""
+        return [
+            self.propose(r.task, r.prompt, r.bundle, r.guiding, r.fault, rng)
+            for r in requests
+        ]

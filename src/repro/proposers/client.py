@@ -1,0 +1,466 @@
+"""Provider-agnostic LLM transport: the batched proposer API's bottom layer.
+
+The proposal stack is split in two.  `LLMClient` owns *transport* — one
+``complete(CompletionRequest) -> Completion`` call per generation, with
+retry/backoff, rate limiting and token-budget backpressure handled here —
+while `repro.proposers.llm.LLMProposer` owns *protocol* (prompt in, kernel
+source + insight out).  Swapping providers, or swapping the network away
+entirely for offline tests and benchmarks, changes only the client.
+
+Concurrency contract: ``complete`` is thread-safe and is called from up to
+``LLMProposer.concurrency`` worker threads at once.  Everything stochastic
+is derived from ``(seed, request_id, attempt)`` — never from a shared RNG
+cursor — so retry jitter is bit-identical no matter how threads interleave,
+which is what keeps pipelined engine runs reproducible (see
+EXPERIMENTS.md §Proposer batching).
+
+Backpressure: a `TokenBudgetGate` wraps the run's `TokenLedger`.  Before a
+request is issued the gate *reserves* its worst-case token cost
+(prompt estimate + ``max_tokens``); a request that cannot reserve raises
+`TokenBudgetExceeded` instead of going to the wire, and the reservation is
+released once the call settles (the engine then charges actuals to the
+ledger).  In-flight requests therefore count against the budget, so K
+concurrent workers cannot collectively overshoot it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+import urllib.error
+import urllib.request
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.solution import TokenLedger, count_tokens
+
+
+# ---------------------------------------------------------------------------
+# request / response records
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CompletionRequest:
+    prompt: str
+    max_tokens: int = 4096
+    temperature: float = 0.8
+    # submission index within the run — drives deterministic retry jitter
+    # and lets tests assert ordering; assigned by the proposer.
+    request_id: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    text: str
+    tokens_in: int = 0
+    tokens_out: int = 0
+    model: str = ""
+    latency_s: float = 0.0
+    attempts: int = 1
+
+
+class TransportError(RuntimeError):
+    """Retryable transport fault (network error, 429, 5xx)."""
+
+
+class TokenBudgetExceeded(RuntimeError):
+    """The TokenLedger budget cannot cover this request; it was not issued."""
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RetryPolicy:
+    """Exponential backoff with jitter derived from a seeded RNG.
+
+    The jitter for attempt ``a`` of request ``r`` comes from
+    ``default_rng((seed, r, a))`` — a pure function of the coordinates, so
+    the delay schedule is reproducible across runs and independent of
+    thread interleaving (a shared RNG cursor would not be).
+    """
+
+    max_attempts: int = 4
+    base_delay_s: float = 0.5
+    max_delay_s: float = 30.0
+    jitter: float = 0.5  # uniform [0, jitter) * backoff added on top
+    seed: int = 0
+
+    def delay_s(self, request_id: int, attempt: int) -> float:
+        """Sleep before retry number ``attempt`` (1-based) of a request."""
+        backoff = min(self.max_delay_s, self.base_delay_s * (2.0 ** (attempt - 1)))
+        rng = np.random.default_rng((self.seed, request_id, attempt))
+        return backoff * (1.0 + self.jitter * float(rng.random()))
+
+
+class RateLimiter:
+    """Thread-safe request-start spacing: at most ``requests_per_s`` starts
+    per second, enforced as a minimum interval between consecutive starts
+    (shared across all threads using this client)."""
+
+    def __init__(self, requests_per_s: float):
+        if requests_per_s <= 0:
+            raise ValueError("requests_per_s must be positive")
+        self.interval_s = 1.0 / requests_per_s
+        self._lock = threading.Lock()
+        self._next_start = 0.0
+        self.waited_s = 0.0  # cumulative, for stats/tests
+
+    def acquire(self) -> float:
+        """Block until a request may start; returns the time waited."""
+        with self._lock:
+            now = time.monotonic()
+            wait = max(0.0, self._next_start - now)
+            self._next_start = max(now, self._next_start) + self.interval_s
+            self.waited_s += wait
+        if wait > 0:
+            time.sleep(wait)
+        return wait
+
+
+class TokenBudgetGate:
+    """Backpressure between a `TokenLedger` budget and in-flight requests.
+
+    ``reserve(est)`` succeeds only while ``used + reserved + est`` fits the
+    budget, where ``used`` is the larger of the ledger's charged total and
+    the gate's own running total of *settled* request costs.  The second
+    term matters because the engine charges the ledger only after a whole
+    batch returns: between a request settling and that charge landing, the
+    settled cost would otherwise be invisible and a sequential burst could
+    overshoot the budget.  `LLMClient.complete` calls ``settle`` when the
+    call finishes (success or failure), swapping the worst-case
+    reservation for the actual cost.  A ``budget`` of None (on both gate
+    and ledger) means unlimited.
+    """
+
+    def __init__(self, ledger: TokenLedger, budget: Optional[int] = None):
+        self.ledger = ledger
+        self._budget_override = budget
+        self._lock = threading.Lock()
+        self._reserved = 0
+        self._settled = 0
+        self.denied = 0  # requests refused at the gate, for stats/tests
+
+    @property
+    def budget(self) -> Optional[int]:
+        """Read the ledger's budget live (unless explicitly overridden):
+        `EvolutionEngine.resume()` restores ``ledger.budget`` from the
+        checkpoint, and a gate built before that must enforce the restored
+        value, not a constructor-time snapshot."""
+        if self._budget_override is not None:
+            return self._budget_override
+        return self.ledger.budget
+
+    def _used(self) -> int:
+        # lock held by caller
+        return max(self.ledger.total, self._settled)
+
+    def remaining(self) -> Optional[int]:
+        if self.budget is None:
+            return None
+        with self._lock:
+            return max(0, self.budget - self._used() - self._reserved)
+
+    def reserve(self, est_tokens: int) -> bool:
+        if self.budget is None:
+            return True
+        with self._lock:
+            if self._used() + self._reserved + est_tokens > self.budget:
+                self.denied += 1
+                return False
+            self._reserved += est_tokens
+            return True
+
+    def settle(self, est_tokens: int, actual_tokens: int) -> None:
+        """Replace a reservation with the request's actual token cost
+        (0 for a request that ultimately failed)."""
+        if self.budget is None:
+            return
+        with self._lock:
+            self._reserved = max(0, self._reserved - est_tokens)
+            self._settled += actual_tokens
+
+
+# ---------------------------------------------------------------------------
+# client base
+# ---------------------------------------------------------------------------
+class LLMClient:
+    """Transport base: budget gate -> rate limit -> retrying ``_send``."""
+
+    name = "base"
+
+    def __init__(
+        self,
+        retry: Optional[RetryPolicy] = None,
+        rate_limiter: Optional[RateLimiter] = None,
+        budget_gate: Optional[TokenBudgetGate] = None,
+    ):
+        self.retry = retry or RetryPolicy()
+        self.rate_limiter = rate_limiter
+        self.budget_gate = budget_gate
+
+    # -- overridden by concrete transports --------------------------------
+    def _send(self, request: CompletionRequest) -> Completion:
+        raise NotImplementedError
+
+    # ---------------------------------------------------------------------
+    def _estimate_cost(self, request: CompletionRequest) -> int:
+        """Worst-case token cost reserved at the gate: the prompt estimate
+        plus the full response allowance."""
+        return count_tokens(request.prompt) + request.max_tokens
+
+    def reserve(self, request: CompletionRequest) -> bool:
+        """Reserve the request's worst-case budget cost without sending it;
+        True when admitted (always, if no gate is configured).  Callers
+        that reserve up-front MUST then issue the request with
+        ``complete(request, pre_reserved=True)`` so the reservation is
+        settled — `LLMProposer.propose_batch` uses this to decide batch
+        admission in submission order before any worker thread starts."""
+        if self.budget_gate is None:
+            return True
+        return self.budget_gate.reserve(self._estimate_cost(request))
+
+    def complete(self, request: CompletionRequest, pre_reserved: bool = False) -> Completion:
+        """Run the request through gate -> rate limit -> retrying _send.
+
+        ``pre_reserved=True`` means the caller already holds this request's
+        budget reservation (``budget_gate.reserve(_estimate_cost(req))``) —
+        `LLMProposer.propose_batch` reserves for a whole batch up-front in
+        submission order, so which requests are admitted near budget
+        exhaustion is deterministic rather than a thread race.  The
+        reservation is settled here either way."""
+        est = self._estimate_cost(request)
+        if (
+            not pre_reserved
+            and self.budget_gate is not None
+            and not self.budget_gate.reserve(est)
+        ):
+            raise TokenBudgetExceeded(
+                f"request {request.request_id} needs ~{est} tokens; "
+                f"budget remaining {self.budget_gate.remaining()}"
+            )
+        comp: Optional[Completion] = None
+        try:
+            comp = self._complete_with_retry(request)
+            return comp
+        finally:
+            if self.budget_gate is not None:
+                # settle with what the engine will charge for this request
+                # (prompt estimate + response tokens); 0 if it failed
+                actual = (
+                    count_tokens(request.prompt) + comp.tokens_out if comp else 0
+                )
+                self.budget_gate.settle(est, actual)
+
+    def _complete_with_retry(self, request: CompletionRequest) -> Completion:
+        t0 = time.monotonic()
+        last: Optional[TransportError] = None
+        for attempt in range(1, self.retry.max_attempts + 1):
+            if self.rate_limiter is not None:
+                self.rate_limiter.acquire()
+            try:
+                comp = self._send(request)
+            except TransportError as e:
+                last = e
+                if attempt < self.retry.max_attempts:
+                    time.sleep(self.retry.delay_s(request.request_id, attempt))
+                continue
+            if not comp.tokens_in:
+                comp.tokens_in = count_tokens(request.prompt)
+            if not comp.tokens_out:
+                comp.tokens_out = count_tokens(comp.text)
+            comp.latency_s = time.monotonic() - t0
+            comp.attempts = attempt
+            return comp
+        raise TransportError(
+            f"request {request.request_id} failed after "
+            f"{self.retry.max_attempts} attempts: {last}"
+        )
+
+    def close(self) -> None:  # symmetric with ParallelEvaluator.close()
+        pass
+
+
+# ---------------------------------------------------------------------------
+# concrete transports
+# ---------------------------------------------------------------------------
+class AnthropicClient(LLMClient):
+    name = "anthropic"
+    url = "https://api.anthropic.com/v1/messages"
+
+    def __init__(self, model: str = "claude-sonnet-4-20250514",
+                 api_key: Optional[str] = None, timeout_s: float = 120.0, **kw):
+        super().__init__(**kw)
+        self.model = model
+        self.api_key = api_key or os.environ.get("ANTHROPIC_API_KEY", "")
+        self.timeout_s = timeout_s
+
+    def _send(self, request: CompletionRequest) -> Completion:
+        req = urllib.request.Request(
+            self.url,
+            data=json.dumps(
+                {
+                    "model": self.model,
+                    "max_tokens": request.max_tokens,
+                    "temperature": request.temperature,
+                    "messages": [{"role": "user", "content": request.prompt}],
+                }
+            ).encode(),
+            headers={
+                "x-api-key": self.api_key,
+                "anthropic-version": "2023-06-01",
+                "content-type": "application/json",
+            },
+        )
+        body = _http_json(req, self.timeout_s)
+        text = "".join(
+            b.get("text", "") for b in body.get("content", []) if b.get("type") == "text"
+        )
+        usage = body.get("usage", {})
+        return Completion(
+            text=text,
+            tokens_in=int(usage.get("input_tokens", 0)),
+            tokens_out=int(usage.get("output_tokens", 0)),
+            model=body.get("model", self.model),
+        )
+
+
+class OpenAIClient(LLMClient):
+    name = "openai"
+    url = "https://api.openai.com/v1/chat/completions"
+
+    def __init__(self, model: str = "gpt-4.1-2025-04-14",
+                 api_key: Optional[str] = None, timeout_s: float = 120.0, **kw):
+        super().__init__(**kw)
+        self.model = model
+        self.api_key = api_key or os.environ.get("OPENAI_API_KEY", "")
+        self.timeout_s = timeout_s
+
+    def _send(self, request: CompletionRequest) -> Completion:
+        req = urllib.request.Request(
+            self.url,
+            data=json.dumps(
+                {
+                    "model": self.model,
+                    "max_tokens": request.max_tokens,
+                    "temperature": request.temperature,
+                    "messages": [{"role": "user", "content": request.prompt}],
+                }
+            ).encode(),
+            headers={
+                "Authorization": f"Bearer {self.api_key}",
+                "content-type": "application/json",
+            },
+        )
+        body = _http_json(req, self.timeout_s)
+        text = body["choices"][0]["message"]["content"]
+        usage = body.get("usage", {})
+        return Completion(
+            text=text,
+            tokens_in=int(usage.get("prompt_tokens", 0)),
+            tokens_out=int(usage.get("completion_tokens", 0)),
+            model=body.get("model", self.model),
+        )
+
+
+_RETRYABLE_HTTP = {408, 409, 429, 500, 502, 503, 504, 529}
+
+
+def _http_json(req: urllib.request.Request, timeout_s: float) -> Dict[str, Any]:
+    """POST and decode, mapping transient failures to `TransportError`."""
+    try:
+        with urllib.request.urlopen(req, timeout=timeout_s) as resp:
+            return json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        if e.code in _RETRYABLE_HTTP:
+            raise TransportError(f"HTTP {e.code}") from e
+        raise
+    except (urllib.error.URLError, TimeoutError, OSError) as e:
+        raise TransportError(str(e)) from e
+
+
+# ---------------------------------------------------------------------------
+# offline transports (tests + benchmarks)
+# ---------------------------------------------------------------------------
+_DEFAULT_REPLY = (
+    "Insight: mock completion\n"
+    "```python\n"
+    "def kernel(x):\n"
+    "    return x\n"
+    "```\n"
+)
+
+
+class MockClient(LLMClient):
+    """In-memory transport.  ``reply`` is the response text, a list cycled
+    by request_id, or ``callable(request) -> str``.  ``failures`` maps
+    request_id -> number of leading `TransportError`s before success, so
+    retry behavior is scriptable per request.  Every wire-level attempt is
+    recorded in ``calls`` as ``(request_id, attempt, monotonic_time)``.
+    """
+
+    name = "mock"
+
+    def __init__(
+        self,
+        reply: Union[str, List[str], Callable[[CompletionRequest], str]] = _DEFAULT_REPLY,
+        failures: Optional[Dict[int, int]] = None,
+        latency_s: float = 0.0,
+        **kw,
+    ):
+        super().__init__(**kw)
+        self.reply = reply
+        self.failures = dict(failures or {})
+        self.latency_s = latency_s
+        self.calls: List[Any] = []
+        self._attempts: Dict[int, int] = {}
+        self._lock = threading.Lock()
+
+    def _latency_for(self, request: CompletionRequest) -> float:
+        return self.latency_s
+
+    def _send(self, request: CompletionRequest) -> Completion:
+        with self._lock:
+            attempt = self._attempts.get(request.request_id, 0) + 1
+            self._attempts[request.request_id] = attempt
+            self.calls.append((request.request_id, attempt, time.monotonic()))
+            must_fail = attempt <= self.failures.get(request.request_id, 0)
+        lat = self._latency_for(request)
+        if lat > 0:
+            time.sleep(lat)
+        if must_fail:
+            raise TransportError(
+                f"scripted failure {attempt} for request {request.request_id}"
+            )
+        if callable(self.reply):
+            text = self.reply(request)
+        elif isinstance(self.reply, list):
+            text = self.reply[request.request_id % len(self.reply)]
+        else:
+            text = self.reply
+        return Completion(text=text, model=self.name)
+
+
+class SimulatedLatencyClient(MockClient):
+    """MockClient with a per-request service time — the offline stand-in
+    for real API latency that the throughput benchmark measures against.
+    ``latency_jitter`` adds a deterministic per-request component drawn
+    from ``default_rng((seed, request_id))``, modelling provider variance
+    without breaking reproducibility."""
+
+    name = "simulated"
+
+    def __init__(self, latency_s: float = 0.05, latency_jitter: float = 0.0,
+                 seed: int = 0, **kw):
+        super().__init__(latency_s=latency_s, **kw)
+        self.latency_jitter = latency_jitter
+        self.seed = seed
+
+    def _latency_for(self, request: CompletionRequest) -> float:
+        if not self.latency_jitter:
+            return self.latency_s
+        rng = np.random.default_rng((self.seed, request.request_id))
+        return self.latency_s + self.latency_jitter * float(rng.random())

@@ -1,104 +1,202 @@
-"""Real-LLM proposers over HTTPS (unexercised offline; implemented for
-production use — EXPERIMENTS.md records that all offline results use the
-SyntheticLLM engine instead).
+"""Real-LLM proposers, rebuilt on the provider-agnostic `LLMClient`
+transport (EXPERIMENTS.md §Proposer batching documents the API; all
+offline results still use the SyntheticLLM engine).
 
-Both clients render the prompt from the Prompt Engineering Layer verbatim,
-request a single ``kernel`` function plus a one-line insight, and extract
-the first python code block from the response.
+`LLMProposer` owns the protocol: render nothing itself (the Prompt
+Engineering Layer's prompt arrives verbatim), request a single ``kernel``
+function plus a one-line insight, extract the kernel-defining code block
+from the response.  Transport concerns — retry/backoff, rate limiting,
+token-budget backpressure — live in the client (`repro.proposers.client`).
+
+``propose_batch`` issues up to ``concurrency`` requests at once on a
+thread pool and returns proposals in submission order, which is what lets
+`EvolutionEngine(pipeline=True)` overlap generation with evaluation.  The
+proposer draws nothing from the engine RNG (``batchable = True``): retry
+jitter is derived per ``(seed, request_id, attempt)`` inside the client,
+so batched runs stay bit-identical to serial ones.
+
+A request refused by the token-budget gate degrades to a *budget-exhausted
+fallback*: the task's initial source with a marker insight, charged
+nothing (``issued=False`` — no request went to the wire).  The trial still
+happens (the evaluator's source-hash cache makes it nearly free) and the
+run ends within budget instead of crashing mid-batch.
 """
 
 from __future__ import annotations
 
-import json
-import os
 import re
-import urllib.request
-from typing import Optional
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.solution import count_tokens
 from repro.core.traverse import GuidingConfig, InformationBundle
-from repro.proposers.base import Proposal, Proposer
+from repro.proposers.base import Proposal, ProposalRequest, Proposer
+from repro.proposers.client import (
+    AnthropicClient,
+    CompletionRequest,
+    LLMClient,
+    TokenBudgetExceeded,
+    OpenAIClient,
+    TransportError,
+)
 from repro.tasks.base import KernelTask
 
 _CODE_RE = re.compile(r"```(?:python)?\n(.*?)```", re.S)
 _INSIGHT_RE = re.compile(r"(?:insight|rationale)\s*[:\-]\s*(.+)", re.I)
+# the block we asked for defines (or assigns) `kernel`
+_KERNEL_DEF_RE = re.compile(r"^\s*(?:def\s+kernel\b|kernel\s*=)", re.M)
+
+BUDGET_EXHAUSTED_INSIGHT = "[budget-exhausted: request not issued]"
+TRANSPORT_FAILED_INSIGHT = "[transport-failed: retries exhausted]"
 
 
 def _extract(text: str) -> Proposal:
-    m = _CODE_RE.search(text)
-    source = m.group(1) if m else text
+    """Parse a model response into a Proposal.
+
+    Responses often contain several code blocks (scratch snippets, usage
+    examples) before the actual answer — prefer the first block that
+    defines ``kernel``, falling back to the first block, then to the raw
+    text."""
+    blocks = _CODE_RE.findall(text)
+    source = text
+    if blocks:
+        source = next((b for b in blocks if _KERNEL_DEF_RE.search(b)), blocks[0])
     im = _INSIGHT_RE.search(text)
     insight = im.group(1).strip() if im else ""
-    return Proposal(
-        source=source, insight=insight, tokens_out=max(1, len(text) // 4)
-    )
+    return Proposal(source=source, insight=insight, tokens_out=count_tokens(text))
 
 
-class AnthropicProposer(Proposer):
+class LLMProposer(Proposer):
+    """Protocol layer over an `LLMClient`; concrete providers below just
+    pick the default client."""
+
+    name = "llm"
+    batchable = True
+
+    def __init__(self, client: LLMClient, max_tokens: int = 4096,
+                 temperature: float = 0.8, concurrency: int = 8):
+        self.client = client
+        self.max_tokens = max_tokens
+        self.temperature = temperature
+        self.concurrency = max(1, concurrency)
+        self._id_lock = threading.Lock()
+        self._next_request_id = 0
+
+    # ------------------------------------------------------------------
+    def _take_request_id(self) -> int:
+        with self._id_lock:
+            rid = self._next_request_id
+            self._next_request_id += 1
+            return rid
+
+    def _make_comp_request(self, request: ProposalRequest, request_id: int) -> CompletionRequest:
+        return CompletionRequest(
+            prompt=request.prompt,
+            max_tokens=self.max_tokens,
+            temperature=self.temperature,
+            request_id=request_id,
+        )
+
+    def _fallback(self, request: ProposalRequest, insight: str) -> Proposal:
+        """Degraded trial: the task's initial source (nearly free to
+        evaluate — source-hash cache) with a marker insight, so the run
+        keeps its schedule instead of dying mid-batch."""
+        return Proposal(
+            source=request.task.initial_source, insight=insight, tokens_out=0,
+            issued=False,
+        )
+
+    def _complete_one(
+        self,
+        request: ProposalRequest,
+        request_id: int,
+        pre_reserved: bool = False,
+        comp_req: Optional[CompletionRequest] = None,
+    ) -> Proposal:
+        if comp_req is None:
+            comp_req = self._make_comp_request(request, request_id)
+        try:
+            comp = self.client.complete(comp_req, pre_reserved=pre_reserved)
+        except TokenBudgetExceeded:
+            return self._fallback(request, BUDGET_EXHAUSTED_INSIGHT)
+        except TransportError:
+            # retries exhausted on a transient fault: losing one proposal
+            # beats losing the whole batch (non-retryable faults — auth,
+            # malformed request — still raise)
+            return self._fallback(request, TRANSPORT_FAILED_INSIGHT)
+        proposal = _extract(comp.text)
+        proposal.tokens_in = comp.tokens_in
+        proposal.tokens_out = comp.tokens_out or proposal.tokens_out
+        return proposal
+
+    # ------------------------------------------------------------------
+    def propose(self, task: KernelTask, prompt: str, bundle: InformationBundle,
+                guiding: GuidingConfig, fault, rng: np.random.Generator) -> Proposal:
+        request = ProposalRequest(
+            task=task, prompt=prompt, bundle=bundle, guiding=guiding, fault=fault
+        )
+        return self._complete_one(request, self._take_request_id())
+
+    def propose_batch(
+        self, requests: Sequence[ProposalRequest], rng: np.random.Generator
+    ) -> List[Proposal]:
+        """Issue up to ``concurrency`` requests at once; results align with
+        ``requests`` by index regardless of completion order.  Request ids
+        are assigned in submission order before any worker runs, so retry
+        jitter and rate-limit accounting are schedule-independent.
+
+        Budget admission is decided up-front, in submission order, by
+        reserving every admitted request's worst-case cost before any
+        worker starts — which requests degrade to the budget fallback near
+        exhaustion is therefore deterministic, not a thread race.  (This
+        is more conservative than the serial loop, which returns each
+        request's est-vs-actual headroom before the next reserve.)"""
+        if not requests:
+            return []
+        rids = [self._take_request_id() for _ in requests]
+        if len(requests) == 1:
+            return [self._complete_one(requests[0], rids[0])]
+        comp_reqs = [
+            self._make_comp_request(r, rid) for r, rid in zip(requests, rids)
+        ]
+        admitted = [self.client.reserve(cr) for cr in comp_reqs]
+        with ThreadPoolExecutor(
+            max_workers=min(self.concurrency, len(requests))
+        ) as pool:
+            futures = [
+                pool.submit(self._complete_one, r, rid, True, cr) if ok else None
+                for r, rid, cr, ok in zip(requests, rids, comp_reqs, admitted)
+            ]
+            return [
+                f.result() if f is not None else self._fallback(r, BUDGET_EXHAUSTED_INSIGHT)
+                for f, r in zip(futures, requests)
+            ]
+
+
+class AnthropicProposer(LLMProposer):
     name = "anthropic"
 
-    def __init__(self, model: str = "claude-sonnet-4-20250514", api_key: Optional[str] = None,
-                 max_tokens: int = 4096, temperature: float = 0.8):
-        self.model = model
-        self.api_key = api_key or os.environ.get("ANTHROPIC_API_KEY", "")
-        self.max_tokens = max_tokens
-        self.temperature = temperature
-
-    def propose(self, task: KernelTask, prompt: str, bundle: InformationBundle,
-                guiding: GuidingConfig, fault, rng: np.random.Generator) -> Proposal:
-        req = urllib.request.Request(
-            "https://api.anthropic.com/v1/messages",
-            data=json.dumps(
-                {
-                    "model": self.model,
-                    "max_tokens": self.max_tokens,
-                    "temperature": self.temperature,
-                    "messages": [{"role": "user", "content": prompt}],
-                }
-            ).encode(),
-            headers={
-                "x-api-key": self.api_key,
-                "anthropic-version": "2023-06-01",
-                "content-type": "application/json",
-            },
+    def __init__(self, model: str = "claude-sonnet-4-20250514",
+                 api_key: Optional[str] = None, max_tokens: int = 4096,
+                 temperature: float = 0.8, client: Optional[LLMClient] = None,
+                 concurrency: int = 8):
+        super().__init__(
+            client or AnthropicClient(model=model, api_key=api_key),
+            max_tokens=max_tokens, temperature=temperature, concurrency=concurrency,
         )
-        with urllib.request.urlopen(req, timeout=120) as resp:
-            body = json.loads(resp.read())
-        text = "".join(
-            b.get("text", "") for b in body.get("content", []) if b.get("type") == "text"
-        )
-        return _extract(text)
 
 
-class OpenAIProposer(Proposer):
+class OpenAIProposer(LLMProposer):
     name = "openai"
 
-    def __init__(self, model: str = "gpt-4.1-2025-04-14", api_key: Optional[str] = None,
-                 max_tokens: int = 4096, temperature: float = 0.8):
-        self.model = model
-        self.api_key = api_key or os.environ.get("OPENAI_API_KEY", "")
-        self.max_tokens = max_tokens
-        self.temperature = temperature
-
-    def propose(self, task: KernelTask, prompt: str, bundle: InformationBundle,
-                guiding: GuidingConfig, fault, rng: np.random.Generator) -> Proposal:
-        req = urllib.request.Request(
-            "https://api.openai.com/v1/chat/completions",
-            data=json.dumps(
-                {
-                    "model": self.model,
-                    "max_tokens": self.max_tokens,
-                    "temperature": self.temperature,
-                    "messages": [{"role": "user", "content": prompt}],
-                }
-            ).encode(),
-            headers={
-                "Authorization": f"Bearer {self.api_key}",
-                "content-type": "application/json",
-            },
+    def __init__(self, model: str = "gpt-4.1-2025-04-14",
+                 api_key: Optional[str] = None, max_tokens: int = 4096,
+                 temperature: float = 0.8, client: Optional[LLMClient] = None,
+                 concurrency: int = 8):
+        super().__init__(
+            client or OpenAIClient(model=model, api_key=api_key),
+            max_tokens=max_tokens, temperature=temperature, concurrency=concurrency,
         )
-        with urllib.request.urlopen(req, timeout=120) as resp:
-            body = json.loads(resp.read())
-        text = body["choices"][0]["message"]["content"]
-        return _extract(text)

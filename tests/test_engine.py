@@ -1,6 +1,9 @@
 """Evolution-engine invariants: unit + hypothesis property tests +
-checkpoint/resume determinism (the fault-tolerance contract)."""
+checkpoint/resume determinism (the fault-tolerance contract) + the
+pipelined generate/evaluate schedule's bit-identity contract."""
 
+import json
+import os
 import tempfile
 
 import numpy as np
@@ -11,15 +14,19 @@ try:
 except ImportError:  # seed env: run properties via the deterministic stub
     from _hypothesis_stub import given, settings, st
 
-from repro.core.engine import EvolutionEngine
+from repro.core.engine import EvolutionEngine, RunResult
 from repro.core.methods import DISPLAY_ORDER, get_method
 from repro.core.population import ElitePopulation, IslandPopulation, SingleBestPopulation
-from repro.core.solution import Solution
+from repro.core.solution import Solution, TokenLedger
 from repro.core.traverse import GuidingConfig, build_bundle, render_prompt
 from repro.evaluation import EvalConfig, Evaluator
 from repro.tasks import get_task
 
 FAST_EVAL = EvalConfig(n_correctness=2, timing_runs=3, warmup_runs=1)
+# bit-identity comparisons need deterministic runtimes, not wall-clock
+SIM_EVAL = EvalConfig(
+    n_correctness=2, timing_runs=3, warmup_runs=1, timing_mode="simulated"
+)
 
 
 def _sol(sid, fit, valid=True):
@@ -148,6 +155,140 @@ def test_engine_checkpoint_resume_identical_trajectory():
         resumed = e2.run(max_trials=14, checkpoint_every=5)
         assert [s.sid for s in resumed.history] == [s.sid for s in full.history]
         assert resumed.best_speedup == full.best_speedup
+
+
+def test_any_speedup_guards_degenerate_best():
+    base = dict(task="t", method="m", seed=0, history=[], ledger=TokenLedger(),
+                baseline_us=100.0)
+    assert RunResult(best=None, **base).any_speedup is False
+    # invalid best with no runtime (previously TypeError)
+    bad = _sol("x", 50.0, valid=False)
+    assert RunResult(best=bad, **base).any_speedup is False
+    # valid best with a zero runtime (previously ZeroDivisionError)
+    zero = _sol("z", 0.0)
+    zero.runtime_us = 0.0
+    assert RunResult(best=zero, **base).any_speedup is False
+    fast = _sol("f", 50.0)
+    assert RunResult(best=fast, **base).any_speedup is True
+
+
+def test_sid_index_keeps_first_occurrence():
+    task = get_task("reduce_sum")
+    eng = EvolutionEngine(
+        task, get_method("evoengineer-free"), evaluator=Evaluator(SIM_EVAL), seed=1
+    )
+    eng.run(max_trials=20)
+    # small genome space -> duplicate sids are common; the O(1) parent index
+    # must resolve to the same (first) Solution the old linear scan found
+    assert any(
+        s.sid in {h.sid for h in eng.history[:i]} for i, s in enumerate(eng.history)
+    )
+    for sid, sol in eng._sid_index.items():
+        first = next(h for h in eng.history if h.sid == sid)
+        assert sol is first
+
+
+def _ckpt_states(d):
+    states = {}
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                states[name] = json.load(f)
+    return states
+
+
+def test_engine_pipelined_bit_identical_to_serial_schedule():
+    """pipeline=True must not change history, checkpoints, RNG trajectory
+    or the token ledger vs the non-pipelined run of the same schedule."""
+    task = get_task("reduce_sum")
+    method = get_method("evoengineer-full")
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        r_serial = EvolutionEngine(
+            task, method, evaluator=Evaluator(SIM_EVAL), seed=5,
+            batch_size=5, checkpoint_dir=d1,
+        ).run(max_trials=15)
+        r_pipe = EvolutionEngine(
+            task, method, evaluator=Evaluator(SIM_EVAL), seed=5,
+            batch_size=5, pipeline=True, pipeline_chunk=2, checkpoint_dir=d2,
+        ).run(max_trials=15)
+        assert [s.to_dict() for s in r_pipe.history] == [
+            s.to_dict() for s in r_serial.history
+        ]
+        assert r_pipe.ledger.to_dict() == r_serial.ledger.to_dict()
+        assert r_pipe.best_speedup == r_serial.best_speedup
+        s1, s2 = _ckpt_states(d1), _ckpt_states(d2)
+        assert list(s1) == list(s2)
+        assert s1 == s2  # full state incl. rng_state, population, insights
+
+
+def test_engine_pipelined_with_batched_llm_proposer():
+    """The LLMClient-backed proposer (batchable, concurrent transport) is
+    deterministic under the pipelined schedule too."""
+    from repro.proposers import LLMProposer, MockClient
+
+    task = get_task("act_relu")
+    method = get_method("evoengineer-free")
+
+    def reply(req):
+        return (
+            f"Insight: variant {req.request_id}\n"
+            f"```python\n{task.initial_source}\n# v{req.request_id}\n```"
+        )
+
+    def run(pipeline):
+        # concurrency 2 < batch_size 4 so pipeline=True actually spans
+        # two chunks (a batch fitting one chunk runs the plain schedule)
+        prop = LLMProposer(MockClient(reply=reply), concurrency=2)
+        eng = EvolutionEngine(
+            task, method, evaluator=Evaluator(SIM_EVAL), seed=2,
+            batch_size=4, pipeline=pipeline, proposer=prop,
+        )
+        return eng.run(max_trials=10)
+
+    r_serial, r_pipe = run(False), run(True)
+    assert [s.sid for s in r_pipe.history] == [s.sid for s in r_serial.history]
+    assert [s.insight for s in r_pipe.history] == [
+        s.insight for s in r_serial.history
+    ]
+    assert r_pipe.ledger.to_dict() == r_serial.ledger.to_dict()
+    assert len(r_pipe.history) == 10
+
+
+def test_engine_budget_backpressure_degrades_not_crashes():
+    """With a tight TokenLedger budget the run completes: requests beyond
+    the budget degrade to the initial-source fallback instead of raising."""
+    from repro.proposers import LLMProposer, MockClient, TokenBudgetGate
+    from repro.proposers.llm import BUDGET_EXHAUSTED_INSIGHT
+
+    task = get_task("act_relu")
+
+    def run(budget):
+        ledger = TokenLedger(budget=budget)
+        client = MockClient(budget_gate=TokenBudgetGate(ledger))
+        prop = LLMProposer(client, max_tokens=1000, concurrency=1)
+        eng = EvolutionEngine(
+            task, get_method("evoengineer-free"), evaluator=Evaluator(SIM_EVAL),
+            seed=0, batch_size=4, pipeline=True, proposer=prop, ledger=ledger,
+        )
+        return eng.run(max_trials=8)
+
+    probe = run(None)  # unbudgeted: measures the schedule's true spend
+    budget = probe.ledger.total // 2
+    res = run(budget)
+    # budget-gated admission is submission-order, not a thread race: the
+    # same config must replay the identical degradation pattern
+    res2 = run(budget)
+    assert [s.to_dict() for s in res2.history] == [s.to_dict() for s in res.history]
+    flags = [s.insight == BUDGET_EXHAUSTED_INSIGHT for s in res.history]
+    assert any(flags), "budget should have been exhausted mid-run"
+    assert len(res.history) == 8
+    # never-issued fallback trials charge nothing, so the ledger respects
+    # the ceiling (est reservations >= settled actuals)
+    assert all(
+        s.tokens_in == 0 and s.tokens_out == 0
+        for s, f in zip(res.history, flags) if f
+    )
+    assert res.ledger.total <= budget
 
 
 def test_validity_ordering_full_vs_free():
