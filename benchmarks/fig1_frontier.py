@@ -7,9 +7,10 @@ The paper's headline figure: EvoEngineer variants dominate the frontier
 from __future__ import annotations
 
 import argparse
-import json
 
 import numpy as np
+
+from repro.sweep.merge import load_records
 
 _MARKS = {
     "EvoEngineer-Free": "F",
@@ -22,7 +23,7 @@ _MARKS = {
 
 
 def points(path):
-    recs = [json.loads(l) for l in open(path)]
+    recs = load_records(path)
     out = {}
     for m in _MARKS:
         mr = [r for r in recs if r["method"] == m]

@@ -9,17 +9,16 @@ validity; AICE at high tokens without matching validity.
 from __future__ import annotations
 
 import argparse
-import json
 
 import numpy as np
 
+from repro.core.methods import canonical_method_order
+from repro.sweep.merge import load_records
+
 
 def summarize(path: str) -> str:
-    recs = [json.loads(l) for l in open(path)]
-    methods = []
-    for r in recs:
-        if r["method"] not in methods:
-            methods.append(r["method"])
+    recs = load_records(path)
+    methods = canonical_method_order(r["method"] for r in recs)
     lines = [
         f"{'Method':28s} {'tok_in/run':>12s} {'tok_out/run':>12s} {'total':>10s} "
         f"{'median_spd':>11s} {'validity':>9s}",

@@ -11,9 +11,7 @@ if none do) and prints the roofline table from the dry-run cache.  CSV lines
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import sys
 import warnings
 
 warnings.filterwarnings("ignore")
@@ -34,6 +32,12 @@ def main():
     ap.add_argument("--bench-eval-throughput", action="store_true",
                     help="also measure serial-vs-parallel evaluation "
                          "throughput and write BENCH_eval_throughput.json")
+    ap.add_argument("--distributed", action="store_true",
+                    help="run the sweep as one work-stealing driver over "
+                         "the shared results file (start the same command "
+                         "on as many hosts as you like; see repro.sweep)")
+    ap.add_argument("--heartbeat", type=float, default=30.0,
+                    help="--distributed: seconds between lease heartbeats")
     args = ap.parse_args()
     batch_size = args.batch_size or (2 * args.workers if args.workers > 1 else 1)
 
@@ -58,11 +62,36 @@ def main():
             )
         )
 
-    if args.full or not os.path.exists(args.table4):
+    # ONE grid definition for both the serial and the distributed path, so
+    # `--workers 4` produces the same (task, method, seed, batch_size)
+    # trajectories either way.  batch_size affects trajectories (a batch
+    # is proposed against batch-start population state), so it is part of
+    # the fleet's manifest contract: every host must join with the same
+    # --workers/--batch-size or fail loudly on the manifest mismatch.
+    grid = dict(
+        mode="full" if args.full else "quick",
+        seeds=3 if args.full else 1,
+        trials=45, timing_runs=11, batch_size=batch_size,
+    )
+
+    if args.distributed:
+        # join/start the work-stealing fleet: each invocation of this
+        # command (on any host sharing the results path) leases grid units
+        # until the whole table-4 grid has records; summaries below then
+        # read the merged view
+        from repro.sweep import build_manifest
+        from repro.sweep.driver import join_fleet
+
+        stats = join_fleet(
+            build_manifest(**grid), args.table4,
+            heartbeat=args.heartbeat, workers=args.workers, progress=True,
+        ).run()
+        print(f"distributed sweep driver done: {stats}")
+    elif args.full or not os.path.exists(args.table4):
         ns = argparse.Namespace(
-            mode="full" if args.full else "quick",
-            seeds=3, trials=45, timing_runs=11,
-            workers=args.workers, batch_size=batch_size,
+            mode=grid["mode"], seeds=grid["seeds"], trials=grid["trials"],
+            timing_runs=grid["timing_runs"], workers=args.workers,
+            batch_size=grid["batch_size"],
             out=args.table4, summarize_only=False,
         )
         table4_overall.run(ns)
@@ -83,9 +112,12 @@ def main():
         print("\n### Roofline (multi-pod) ###")
         print(roofline.table(args.dryrun_dir, "multi"))
 
-    # machine-readable CSV tail
+    # machine-readable CSV tail (merged view: torn trailing lines from a
+    # killed appender are skipped, duplicate unit records deduped)
+    from repro.sweep.merge import load_records
+
     print("\nname,value,derived")
-    recs = [json.loads(l) for l in open(args.table4)]
+    recs = load_records(args.table4)
     methods = sorted(set(r["method"] for r in recs))
     for m in methods:
         mr = [r for r in recs if r["method"] == m]

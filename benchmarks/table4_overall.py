@@ -14,6 +14,12 @@ Usage:
   PYTHONPATH=src python -m benchmarks.table4_overall --mode quick   # 12 tasks, 1 seed
   PYTHONPATH=src python -m benchmarks.table4_overall --mode full    # 91 tasks, 3 seeds
 
+To shard the grid across hosts, run the work-stealing driver instead
+(``python -m repro.sweep`` or ``python -m benchmarks.run --distributed``);
+`summarize` here reads the merged view (torn trailing lines skipped,
+duplicate unit records deduped last-write-wins), so it works unchanged on
+a fleet-written results file.
+
 `--workers N` pipelines candidate evaluation through a worker-process
 pool.  Caveat for wall-clock timing: candidates are then timed while up
 to N-1 other candidates run concurrently, so absolute runtimes carry CPU
@@ -26,33 +32,23 @@ result.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 import warnings
-from collections import defaultdict
 
 import numpy as np
 
 warnings.filterwarnings("ignore")
 
-from repro.core.engine import EvolutionEngine
-from repro.core.methods import DISPLAY_ORDER, get_method
+from repro.core.methods import DISPLAY_ORDER, canonical_method_order, get_method
 from repro.evaluation import EvalConfig, Evaluator, ParallelEvaluator
+from repro.sweep.driver import run_unit
+from repro.sweep.manifest import quick_subset
+from repro.sweep.merge import append_record, load_records, record_key
 from repro.tasks import benchmark_tasks
 from repro.tasks.base import CATEGORIES
 
 CATEGORY_INDEX = {c: i + 1 for i, c in enumerate(CATEGORIES)}
-
-
-def quick_subset(tasks, per_category=2):
-    by_cat = defaultdict(list)
-    for t in tasks:
-        by_cat[t.category].append(t)
-    out = []
-    for c in CATEGORIES:
-        out += by_cat[c][:per_category]
-    return out
 
 
 def run(args):
@@ -62,15 +58,9 @@ def run(args):
     seeds = 1 if args.mode == "quick" else args.seeds
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
 
-    done = set()
-    if os.path.exists(args.out):
-        with open(args.out) as f:
-            for line in f:
-                try:
-                    r = json.loads(line)
-                    done.add((r["task"], r["method"], r["seed"]))
-                except json.JSONDecodeError:
-                    pass
+    # tolerant resume: skip-and-report partial trailing lines (a killed
+    # appender must not strand the sweep) instead of crashing on them
+    done = {record_key(r) for r in load_records(args.out)}
 
     # RAG pool for AI CUDA Engineer's Compose stage: naive sources of other
     # tasks (stands in for the cross-kernel archive retrieval)
@@ -95,26 +85,22 @@ def run(args):
                     method = get_method(mkey)
                     if (task.name, method.name, seed) in done:
                         continue
-                    eng = EvolutionEngine(
-                        task, method, evaluator=evaluator, seed=seed,
-                        rag_pool=[r for r in rag_pool if r[0] != task.name],
-                        batch_size=batch_size,
+                    # the exact single-unit runner the distributed driver
+                    # uses (repro.sweep.driver), so serial and fleet sweeps
+                    # emit byte-identical records for the same unit
+                    rec = run_unit(
+                        task, method, seed,
+                        evaluator=evaluator, trials=args.trials,
+                        rag_pool=rag_pool, batch_size=batch_size,
                     )
-                    res = eng.run(max_trials=args.trials)
-                    rec = res.to_dict()
-                    rec["category"] = task.category
-                    rec["speedups_all"] = [
-                        s.speedup for s in res.history if s.valid and s.speedup
-                    ]
-                    with open(args.out, "a") as f:
-                        f.write(json.dumps(rec) + "\n")
+                    append_record(args.out, rec)
                     n += 1
                     if n % 10 == 0:
                         el = time.time() - t_start
                         print(
                             f"[{n}/{total}] {task.name} {method.name} "
-                            f"spd={res.best_speedup:.2f} val={res.validity_rate:.2f} "
-                            f"({el:.0f}s)",
+                            f"spd={rec['best_speedup']:.2f} "
+                            f"val={rec['validity_rate']:.2f} ({el:.0f}s)",
                             flush=True,
                         )
     finally:
@@ -125,15 +111,14 @@ def run(args):
 
 
 def summarize(path: str) -> str:
-    recs = [json.loads(l) for l in open(path)]
+    # the merged view: torn lines skipped, duplicate unit records (work
+    # stealing's benign double-runs) deduped last-write-wins
+    recs = load_records(path)
     lines = ["", "=" * 100,
              f"{'Method':28s} | " + " | ".join(f"cat{i}" for i in range(1, 7)) +
              " | overall  (median speedup | any-speedup count | validity | compile)",
              "-" * 100]
-    methods = []
-    for r in recs:
-        if r["method"] not in methods:
-            methods.append(r["method"])
+    methods = canonical_method_order(r["method"] for r in recs)
     for m in methods:
         mr = [r for r in recs if r["method"] == m]
         med = {}

@@ -8,20 +8,20 @@ best_speedup==1.0 means 'no improvement found'), 1.0-2.0, 2.0-5.0, 5.0-10.0,
 from __future__ import annotations
 
 import argparse
-import json
 from collections import defaultdict
+
+from repro.core.methods import canonical_method_order
+from repro.sweep.merge import load_records
 
 BUCKETS = [(0.0, 1.0001), (1.0001, 2.0), (2.0, 5.0), (5.0, 10.0), (10.0, 1e9)]
 LABELS = ["<=1.0", "1.0~2.0", "2.0~5.0", "5.0~10.0", ">10.0"]
 
 
 def summarize(path: str) -> str:
-    recs = [json.loads(l) for l in open(path)]
+    recs = load_records(path)
     best = defaultdict(float)  # (method, task) -> max speedup over seeds
-    methods = []
+    methods = canonical_method_order(r["method"] for r in recs)
     for r in recs:
-        if r["method"] not in methods:
-            methods.append(r["method"])
         key = (r["method"], r["task"])
         best[key] = max(best[key], r["best_speedup"])
     lines = [

@@ -9,13 +9,14 @@ the paper uses to validate its own AICE replication.
 from __future__ import annotations
 
 import argparse
-import json
 
 import numpy as np
 
+from repro.sweep.merge import load_records
+
 
 def summarize(path: str) -> str:
-    recs = [json.loads(l) for l in open(path) if '"AI CUDA Engineer"' in l]
+    recs = [r for r in load_records(path) if r["method"] == "AI CUDA Engineer"]
     if not recs:
         return "no AI CUDA Engineer records yet"
     spd = np.array([r["best_speedup"] for r in recs])

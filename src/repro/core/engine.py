@@ -68,6 +68,7 @@ from repro.core.methods import MethodConfig
 from repro.core.solution import Solution, TokenLedger, count_tokens
 from repro.core.traverse import build_bundle, render_prompt
 from repro.evaluation.evaluator import Evaluator
+from repro.ioutil import tmp_suffix
 from repro.tasks.base import KernelTask
 
 if False:  # typing only — imported lazily in __init__ to avoid an import
@@ -387,7 +388,10 @@ class EvolutionEngine:
         )
 
     def save_checkpoint(self) -> str:
-        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        """Best-effort atomic checkpoint: an OSError (e.g. the distributed
+        sweep driver garbage-collecting a completed unit's checkpoint dir
+        under a concurrent duplicate worker) skips the checkpoint rather
+        than crashing the run — the next boundary retries."""
         state = {
             "trial": self.trial,
             "seed": self.seed,
@@ -401,31 +405,66 @@ class EvolutionEngine:
             "history": [s.to_dict() for s in self.history],
         }
         path = self._ckpt_path()
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(state, f)
-        os.replace(tmp, path)
+        # host+pid-suffixed temp: under the distributed sweep two hosts can
+        # legitimately checkpoint the same unit (work stealing's documented
+        # duplicate window) — a shared tmp name would interleave writes
+        tmp = path + tmp_suffix()
+        try:
+            os.makedirs(self.checkpoint_dir, exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump(state, f)
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
         return path
 
     def resume(self) -> bool:
         path = self._ckpt_path()
         if not os.path.exists(path):
             return False
-        with open(path) as f:
-            state = json.load(f)
-        self.trial = state["trial"]
-        self.rng.bit_generator.state = state["rng_state"]
-        self.population.load_state_dict(state["population"]["state"])
-        self.insights.load_state_dict(state["insights"])
+        # parse AND validate the whole checkpoint before mutating any
+        # engine state: checkpoint writes are atomic, but shared storage
+        # can still surface a damaged or stale-schema file, and a partial
+        # restore would be worse than the fresh start we fall back to
+        try:
+            with open(path) as f:
+                state = json.load(f)
+            rng = np.random.default_rng()
+            rng.bit_generator.state = state["rng_state"]
+            trial = state["trial"]
+            # restore population/insights into fresh objects: a payload
+            # from a stale schema must fail HERE, not after self.* is
+            # half-overwritten (a poison checkpoint on shared storage
+            # would otherwise crash every driver that steals the unit)
+            population = self.method.make_population()
+            population.load_state_dict(state["population"]["state"])
+            insight_state = state["insights"]
+            InsightStore().load_state_dict(insight_state)
+            led = state["ledger"]
+            tokens_in = led["tokens_in"]
+            tokens_out = led["tokens_out"]
+            calls = led["calls"]
+            budget = led.get("budget", self.ledger.budget)
+            history = [Solution.from_dict(d) for d in state["history"]]
+        except Exception:  # noqa: BLE001 — any damage means fresh start
+            return False
+        self.trial = trial
+        self.rng = rng
+        self.population = population
+        # the insight STORE keeps its identity (the proposer holds a
+        # reference to it); only its contents are replaced
+        self.insights.load_state_dict(insight_state)
         # restore the ledger IN PLACE: a TokenBudgetGate may hold a
         # reference to this object, and rebinding would detach it (the gate
         # would stop seeing post-resume spend and could overshoot budget)
-        led = state["ledger"]
-        self.ledger.tokens_in = led["tokens_in"]
-        self.ledger.tokens_out = led["tokens_out"]
-        self.ledger.calls = led["calls"]
-        self.ledger.budget = led.get("budget", self.ledger.budget)
-        self.history = [Solution.from_dict(d) for d in state["history"]]
+        self.ledger.tokens_in = tokens_in
+        self.ledger.tokens_out = tokens_out
+        self.ledger.calls = calls
+        self.ledger.budget = budget
+        self.history = history
         self._sid_index = {}
         for s in self.history:
             self._sid_index.setdefault(s.sid, s)

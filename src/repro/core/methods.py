@@ -162,6 +162,15 @@ DISPLAY_ORDER = [
 ]
 
 
+def canonical_method_order(names) -> List[str]:
+    """Display names sorted into the paper's method order (unknown names
+    last, alphabetically).  Summarizers use this instead of record
+    first-appearance order, which is completion order — nondeterministic
+    — when the results file was written by a distributed driver fleet."""
+    rank = {METHODS[k]().name: i for i, k in enumerate(DISPLAY_ORDER)}
+    return sorted(set(names), key=lambda n: (rank.get(n, len(rank)), n))
+
+
 def get_method(name: str) -> MethodConfig:
     key = name.lower()
     if key not in METHODS:

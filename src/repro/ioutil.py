@@ -11,12 +11,24 @@ from __future__ import annotations
 
 import json
 import os
+import re
+import socket
 from typing import Any, Callable, Dict, Optional
+
+# pid alone is not a unique writer id on *shared* storage — two hosts can
+# run the same pid concurrently (the sweep driver's duplicate-unit window
+# makes that real, not theoretical) and would interleave one temp file
+_HOST = re.sub(r"[^A-Za-z0-9_.-]", "-", socket.gethostname()) or "host"
+
+
+def tmp_suffix() -> str:
+    """Per-writer temp-file suffix that is unique across hosts."""
+    return f".tmp{_HOST}-{os.getpid()}"
 
 
 def atomic_write(path: str, write_fn: Callable[[Any], None], mode: str = "wb") -> None:
     """Write via `write_fn(file_object)` to a temp file, then rename over `path`."""
-    tmp = f"{path}.tmp{os.getpid()}"
+    tmp = path + tmp_suffix()
     with open(tmp, mode) as f:
         write_fn(f)
     os.replace(tmp, path)

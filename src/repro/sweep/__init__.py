@@ -1,0 +1,71 @@
+"""Work-stealing distributed sweep driver for the table-4 grid.
+
+The paper's main experiment is a ``task x method x seed`` grid (91 tasks,
+6 methods, 3 seeds).  One process can own the whole sweep, but the grid is
+embarrassingly parallel across units — this package turns it into a
+manifest of work units that any number of concurrently running driver
+processes lease, run and append to the shared JSONL results file:
+
+* `manifest`  — the deterministic unit list (and its on-disk contract, so
+  every driver agrees on the grid);
+* `lease`     — lease files with TTL + heartbeat on shared storage.  All
+  writes are full-content-to-temp-then-rename (no lock server); expired
+  leases are reclaimed by any driver (work stealing);
+* `driver`    — the `SweepDriver` loop plus `run_unit`, the single-unit
+  runner shared with the serial `benchmarks/table4_overall.py` path so a
+  distributed sweep is record-identical to a serial one;
+* `merge`     — crash-tolerant JSONL reading (torn trailing lines from a
+  killed appender are skipped and reported, duplicate records from
+  stolen-but-still-running units are deduped last-write-wins by unit key)
+  and the canonical merged view every summarizer reads.
+
+Correctness does NOT depend on mutual exclusion: leases are a liveness
+optimization (avoid duplicate work), while the determinism of the engine
+guarantees that a duplicated unit produces an identical record and the
+merge layer keeps exactly one.  CLI: ``python -m repro.sweep --results
+results/table4.jsonl --heartbeat 30`` (see `__main__`).
+"""
+
+# Lazy attribute exports: `driver` (and through it the engine/evaluator/
+# jax stack plus the task registry) must not load just because a
+# summarizer imported `repro.sweep.merge` to parse a JSONL.
+_EXPORTS = {
+    "Lease": "repro.sweep.lease",
+    "LeaseStore": "repro.sweep.lease",
+    "SweepDriver": "repro.sweep.driver",
+    "SweepManifest": "repro.sweep.manifest",
+    "WorkUnit": "repro.sweep.manifest",
+    "append_record": "repro.sweep.merge",
+    "build_manifest": "repro.sweep.manifest",
+    "join_fleet": "repro.sweep.driver",
+    "load_records": "repro.sweep.merge",
+    "quick_subset": "repro.sweep.manifest",
+    "read_records": "repro.sweep.merge",
+    "record_key": "repro.sweep.merge",
+    "run_unit": "repro.sweep.driver",
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "Lease",
+    "LeaseStore",
+    "SweepDriver",
+    "SweepManifest",
+    "WorkUnit",
+    "append_record",
+    "build_manifest",
+    "join_fleet",
+    "load_records",
+    "quick_subset",
+    "read_records",
+    "record_key",
+    "run_unit",
+]

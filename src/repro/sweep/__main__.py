@@ -1,0 +1,211 @@
+"""CLI for the distributed sweep.
+
+  # run (default subcommand): join/start a fleet over the quick grid
+  PYTHONPATH=src python -m repro.sweep --results results/table4.jsonl --heartbeat 30
+
+  # the full paper grid, from as many hosts as you like (shared storage):
+  PYTHONPATH=src python -m repro.sweep run --results /shared/table4.jsonl --mode full
+
+  # a serial reference run (no leases; manifest order — the `--workers 0`
+  # baseline the fault-injection suite compares fleets against):
+  PYTHONPATH=src python -m repro.sweep run --results out.jsonl --serial
+
+  # operational views:
+  PYTHONPATH=src python -m repro.sweep status --results results/table4.jsonl
+  PYTHONPATH=src python -m repro.sweep merge  --results results/table4.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import warnings
+
+warnings.filterwarnings("ignore")
+
+
+def _manifest_path(results: str) -> str:
+    return f"{results}.sweep/manifest.json"
+
+
+def _csv(text):
+    return [s for s in (text or "").split(",") if s]
+
+
+def cmd_run(args) -> int:
+    from repro.sweep import driver as driver_mod
+    from repro.sweep import manifest as manifest_mod
+    from repro.sweep import merge
+    from repro.tasks import get_task
+
+    built = manifest_mod.build_manifest(
+        mode=args.mode,
+        seeds=args.seeds,
+        trials=args.trials,
+        timing_runs=args.timing_runs,
+        timing_mode=args.timing_mode,
+        batch_size=args.batch_size,
+        tasks=_csv(args.tasks) or None,
+        methods=_csv(args.methods) or None,
+    )
+    if args.serial:
+        os.makedirs(f"{args.results}.sweep", exist_ok=True)
+        man = manifest_mod.create_or_load(_manifest_path(args.results), built)
+        # the clean single-process reference: manifest order, no leases
+        from repro.core.methods import get_method
+        from repro.evaluation import EvalConfig, Evaluator
+
+        cfg = EvalConfig(timing_runs=man.timing_runs, timing_mode=man.timing_mode)
+        ev = Evaluator(cfg, cache_dir=f"{args.results}.sweep/eval_cache")
+        done = merge.completed_keys(args.results)
+        rag = man.rag_pool()
+        for unit in man.units:
+            if unit.key in done:
+                continue
+            rec = driver_mod.run_unit(
+                get_task(unit.task), get_method(unit.method_key), unit.seed,
+                evaluator=ev, trials=man.trials, rag_pool=rag,
+                batch_size=man.batch_size,
+            )
+            merge.append_record(args.results, rec)
+        print(f"serial sweep complete: {len(man.units)} units in {args.results}")
+        return 0
+
+    drv = driver_mod.join_fleet(
+        built,
+        args.results,
+        owner=args.owner,
+        heartbeat=args.heartbeat,
+        ttl=args.ttl,
+        poll=args.poll,
+        workers=args.workers,
+        max_units=args.max_units,
+        progress=not args.quiet,
+    )
+    t0 = time.time()
+    stats = drv.run()
+    print(
+        f"driver {drv.owner} exiting after {time.time() - t0:.1f}s: "
+        f"{stats['completed']} unit(s) completed, {stats['stolen']} stolen, "
+        f"{stats['lost_leases']} lease(s) lost mid-run"
+    )
+    return 0
+
+
+def cmd_merge(args) -> int:
+    from repro.sweep import merge
+
+    out = args.out or f"{os.path.splitext(args.results)[0]}.merged.jsonl"
+    n = merge.write_merged(args.results, out)
+    print(f"merged {n} unique record(s) -> {out}")
+    return 0
+
+
+def cmd_status(args) -> int:
+    from repro.sweep import manifest as manifest_mod
+    from repro.sweep import merge
+    from repro.sweep.lease import LeaseStore
+
+    path = _manifest_path(args.results)
+    if not os.path.exists(path):
+        print(f"no manifest at {path} — has a sweep started?")
+        return 1
+    man = manifest_mod.create_or_load(path)
+    units = man.units
+    done = merge.completed_keys(args.results)
+    _, partial = merge.read_records(args.results)
+    # read-only view: must not create sweep state (or need write access)
+    store = LeaseStore(
+        f"{args.results}.sweep/leases", owner="status", ttl=1.0, create=False
+    )
+    leases = {l.unit: l for l in store.all_leases()}
+    live = stale = 0
+    owners = {}
+    now = time.time()
+    for u in units:
+        lease = leases.get(u.slug)
+        if lease is None or u.key in done:
+            continue
+        if lease.expired(now):
+            stale += 1
+        else:
+            live += 1
+            owners[lease.owner] = owners.get(lease.owner, 0) + 1
+    pending = sum(1 for u in units if u.key not in done)
+    print(f"grid:      {len(units)} units "
+          f"({len(man.tasks)} tasks x {len(man.methods)} methods x {man.seeds} seeds)")
+    print(f"done:      {len(units) - pending}")
+    print(f"pending:   {pending} ({live} leased live, {stale} stale-leased, "
+          f"{pending - live - stale} unclaimed)")
+    if partial:
+        print(f"warning:   {partial} partial/corrupt result line(s) will be "
+              "skipped at merge")
+    for owner, n in sorted(owners.items()):
+        print(f"  live lease(s) held by {owner}: {n}")
+    if args.json:
+        print(json.dumps({
+            "units": len(units), "done": len(units) - pending,
+            "pending": pending, "live_leases": live, "stale_leases": stale,
+            "partial_lines": partial,
+        }))
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # `python -m repro.sweep --results ...` defaults to the run subcommand
+    if not argv or argv[0].startswith("-"):
+        argv = ["run"] + argv
+
+    ap = argparse.ArgumentParser(prog="python -m repro.sweep", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rp = sub.add_parser("run", help="join/start a driver fleet (default)")
+    rp.add_argument("--results", default="results/table4.jsonl")
+    rp.add_argument("--mode", choices=["quick", "full"], default="quick")
+    rp.add_argument("--tasks", default="",
+                    help="comma-separated task-name override (e.g. calibration grids)")
+    rp.add_argument("--methods", default="",
+                    help="comma-separated method-key override")
+    rp.add_argument("--seeds", type=int, default=None,
+                    help="seeds per task x method (default: 1 quick, 3 full)")
+    rp.add_argument("--trials", type=int, default=45)
+    rp.add_argument("--timing-runs", type=int, default=11)
+    rp.add_argument("--timing-mode", choices=["wall", "simulated"], default="wall")
+    rp.add_argument("--batch-size", type=int, default=1)
+    rp.add_argument("--workers", type=int, default=0,
+                    help=">1 evaluates candidates in a worker-process pool")
+    rp.add_argument("--heartbeat", type=float, default=30.0,
+                    help="seconds between lease heartbeats")
+    rp.add_argument("--ttl", type=float, default=None,
+                    help="lease expiry (default 3x heartbeat)")
+    rp.add_argument("--poll", type=float, default=None,
+                    help="idle re-scan interval when peers hold all leases")
+    rp.add_argument("--owner", default=None,
+                    help="lease owner id (default host-pid)")
+    rp.add_argument("--max-units", type=int, default=None,
+                    help="exit after completing this many units (drain)")
+    rp.add_argument("--serial", action="store_true",
+                    help="single-process reference run: manifest order, no leases")
+    rp.add_argument("--quiet", action="store_true")
+    rp.set_defaults(fn=cmd_run)
+
+    mp = sub.add_parser("merge", help="materialize the deduped merged view")
+    mp.add_argument("--results", default="results/table4.jsonl")
+    mp.add_argument("--out", default=None)
+    mp.set_defaults(fn=cmd_merge)
+
+    sp = sub.add_parser("status", help="grid/lease/results status")
+    sp.add_argument("--results", default="results/table4.jsonl")
+    sp.add_argument("--json", action="store_true")
+    sp.set_defaults(fn=cmd_status)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

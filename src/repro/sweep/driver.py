@@ -1,0 +1,257 @@
+"""The work-stealing sweep driver loop.
+
+Any number of `SweepDriver` processes point at the same results file (on
+shared storage) and the same manifest; each repeatedly:
+
+1. re-reads the merged results to learn which units are done,
+2. walks the manifest in order and tries to lease the first unleased
+   not-done unit (expired leases are stolen — see `repro.sweep.lease`),
+3. runs the unit through the exact single-unit runner the serial harness
+   uses (`run_unit`), heartbeating the lease from a background thread,
+4. appends the record (`repro.sweep.merge.append_record`) and releases.
+
+A driver exits when every unit has a record.  When live peers hold the
+remaining leases it polls, so the fleet as a whole finishes even if a
+peer dies mid-unit: its lease expires and someone steals the unit,
+resuming from the unit-scoped engine checkpoint when one exists.
+
+Determinism contract (the whole point): with ``timing_mode="simulated"``,
+N racing drivers — including kills, steals and duplicated units — produce
+a merged view record-identical to one driver running the grid serially,
+because every unit's trajectory depends only on ``(task, method, seed)``
+and the engine checkpoints replay exactly (tested in
+tests/test_sweep_driver.py).  Wall-clock timing mode keeps exactly-once
+units but records carry real (host-dependent) runtimes, as in the serial
+sweep.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import socket
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.engine import EvolutionEngine
+from repro.core.methods import MethodConfig, get_method
+from repro.evaluation import EvalConfig, Evaluator, ParallelEvaluator
+from repro.sweep import merge
+from repro.sweep.lease import LeaseStore
+from repro.sweep.manifest import SweepManifest, WorkUnit
+from repro.tasks import get_task
+from repro.tasks.base import KernelTask
+
+
+def run_unit(
+    task: KernelTask,
+    method: MethodConfig,
+    seed: int,
+    evaluator: Evaluator,
+    trials: int,
+    rag_pool: List,
+    batch_size: int = 1,
+    checkpoint_dir: Optional[str] = None,
+) -> Dict:
+    """Run one grid cell and shape its JSONL record.  Shared by the serial
+    table-4 harness and the distributed driver, so both paths emit
+    byte-identical records for the same ``(task, method, seed)``.
+
+    With a `checkpoint_dir` (unit-scoped under the sweep state dir, so
+    concurrent units never collide on disk) the engine checkpoints every
+    few trials and resumes a predecessor's progress — how a stolen unit
+    continues a dead worker's run to the identical trajectory."""
+    eng = EvolutionEngine(
+        task,
+        method,
+        evaluator=evaluator,
+        seed=seed,
+        rag_pool=[r for r in rag_pool if r[0] != task.name],
+        batch_size=batch_size,
+        checkpoint_dir=checkpoint_dir,
+    )
+    if checkpoint_dir:
+        eng.resume()
+    res = eng.run(max_trials=trials)
+    rec = res.to_dict()
+    rec["category"] = task.category
+    rec["speedups_all"] = [s.speedup for s in res.history if s.valid and s.speedup]
+    return rec
+
+
+def join_fleet(manifest: SweepManifest, results: str, **driver_kw) -> "SweepDriver":
+    """Publish (or adopt) the fleet's manifest beside `results` and build
+    a driver — the one join path shared by ``python -m repro.sweep`` and
+    ``python -m benchmarks.run --distributed``, so they cannot drift."""
+    from repro.sweep.manifest import create_or_load
+
+    sweep_dir = f"{results}.sweep"
+    os.makedirs(sweep_dir, exist_ok=True)
+    man = create_or_load(os.path.join(sweep_dir, "manifest.json"), manifest)
+    return SweepDriver(man, results, sweep_dir=sweep_dir, **driver_kw)
+
+
+class _Heartbeat(threading.Thread):
+    """Bumps one lease every `interval` seconds until stopped; flips
+    `lost` and exits if the lease was stolen (the driver still finishes
+    the unit — the duplicate record dedups at merge)."""
+
+    def __init__(self, store: LeaseStore, slug: str, interval: float):
+        super().__init__(daemon=True, name=f"heartbeat-{slug}")
+        self.store = store
+        self.slug = slug
+        self.interval = interval
+        self.lost = False
+        # NB: not named _stop — Thread itself has a private _stop method
+        # that join() calls internally; shadowing it breaks join()
+        self._halt = threading.Event()
+
+    def run(self):
+        while not self._halt.wait(self.interval):
+            try:
+                alive = self.store.heartbeat(self.slug)
+            except OSError:
+                continue  # transient shared-storage hiccup: retry next beat
+            if not alive:
+                self.lost = True
+                return
+
+    def stop(self):
+        self._halt.set()
+        self.join(timeout=5.0)
+
+
+class SweepDriver:
+    def __init__(
+        self,
+        manifest: SweepManifest,
+        results: str,
+        sweep_dir: Optional[str] = None,
+        owner: Optional[str] = None,
+        heartbeat: float = 30.0,
+        ttl: Optional[float] = None,
+        poll: Optional[float] = None,
+        workers: int = 0,
+        max_units: Optional[int] = None,
+        progress: bool = False,
+    ):
+        self.manifest = manifest
+        self.results = results
+        self.sweep_dir = sweep_dir or f"{results}.sweep"
+        self.owner = owner or f"{socket.gethostname()}-{os.getpid()}"
+        self.heartbeat = heartbeat
+        # a lease survives two missed heartbeats before it is stealable
+        self.ttl = ttl if ttl is not None else 3.0 * heartbeat
+        self.poll = poll if poll is not None else max(0.2, min(heartbeat, 5.0))
+        self.max_units = max_units
+        self.progress = progress
+        self.leases = LeaseStore(
+            os.path.join(self.sweep_dir, "leases"), self.owner, self.ttl
+        )
+        cfg = EvalConfig(
+            timing_runs=manifest.timing_runs, timing_mode=manifest.timing_mode
+        )
+        cache_dir = os.path.join(self.sweep_dir, "eval_cache")
+        if workers > 1:
+            self.evaluator: Evaluator = ParallelEvaluator(
+                cfg, workers=workers, cache_dir=cache_dir
+            )
+        else:
+            self.evaluator = Evaluator(cfg, cache_dir=cache_dir)
+        self.stats = {"completed": 0, "stolen": 0, "lost_leases": 0}
+
+    # ------------------------------------------------------------------
+    def _log(self, msg: str) -> None:
+        if self.progress:
+            print(f"[sweep:{self.owner}] {msg}", flush=True)
+
+    def _checkpoint_dir(self, unit: WorkUnit) -> str:
+        return os.path.join(self.sweep_dir, "checkpoints", unit.slug)
+
+    def _run_leased_unit(self, unit: WorkUnit) -> None:
+        hb = _Heartbeat(self.leases, unit.slug, self.heartbeat / 2.0)
+        hb.start()
+        try:
+            rec = run_unit(
+                get_task(unit.task),
+                get_method(unit.method_key),
+                unit.seed,
+                evaluator=self.evaluator,
+                trials=self.manifest.trials,
+                rag_pool=self.manifest.rag_pool(),
+                batch_size=self.manifest.batch_size,
+                checkpoint_dir=self._checkpoint_dir(unit),
+            )
+            merge.append_record(self.results, rec)
+            self.stats["completed"] += 1
+            if hb.lost:
+                # stolen mid-run; our record is a benign duplicate
+                self.stats["lost_leases"] += 1
+            else:
+                # the unit-scoped checkpoint only matters while the unit is
+                # in flight (steal-resume); drop it once the record landed.
+                # Skipped when our lease was stolen — the thief may be
+                # resuming from this very directory right now (its engine
+                # tolerates the dir vanishing, but keeping it is kinder).
+                shutil.rmtree(self._checkpoint_dir(unit), ignore_errors=True)
+            self._log(
+                f"done {unit.key} spd={rec['best_speedup']:.2f} "
+                f"val={rec['validity_rate']:.2f}"
+            )
+        finally:
+            hb.stop()
+            try:
+                self.leases.release(unit.slug)
+            except OSError:
+                pass  # expires on its own; the record already landed
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, int]:
+        """Drive until every manifest unit has a record (or `max_units`
+        of our own completions, for tests/graceful draining)."""
+        units = self.manifest.units
+        try:
+            while True:
+                done = merge.completed_keys(self.results)
+                pending = [u for u in units if u.key not in done]
+                if not pending:
+                    break
+                claimed = None
+                for unit in pending:
+                    try:
+                        existing = self.leases.read(unit.slug)
+                        stealing = existing is not None and existing.expired()
+                        acquired = self.leases.try_acquire(unit.slug)
+                    except OSError:
+                        # transient shared-storage hiccup: same policy as
+                        # the heartbeat thread — skip, retry next scan
+                        continue
+                    if not acquired:
+                        continue
+                    # the unit may have finished between our done-scan and
+                    # the acquire (completion and lease release are not one
+                    # atomic step) — recheck before burning a run on it
+                    if unit.key in merge.completed_keys(self.results):
+                        try:
+                            self.leases.release(unit.slug)
+                        except OSError:
+                            pass
+                        continue
+                    claimed = unit
+                    if stealing:
+                        self.stats["stolen"] += 1
+                        self._log(f"stole expired lease for {unit.key}")
+                    break
+                if claimed is None:
+                    # everything pending is leased by live peers: wait for
+                    # their records (or their leases to expire)
+                    time.sleep(self.poll)
+                    continue
+                self._run_leased_unit(claimed)
+                if self.max_units and self.stats["completed"] >= self.max_units:
+                    break
+        finally:
+            if isinstance(self.evaluator, ParallelEvaluator):
+                self.evaluator.close()
+        return dict(self.stats)

@@ -1,0 +1,176 @@
+"""Lease files with TTL + heartbeat on shared storage — no lock server.
+
+One lease file per work unit, full JSON content, always written as
+temp-file-then-rename so readers see either the old lease or the new one,
+never a torn write.  Acquisition of a *free* unit uses ``os.link`` (which
+fails if the lease exists, unlike rename) so two drivers racing on a free
+unit get exactly one winner.  Stealing an *expired* lease uses
+``os.replace`` followed by a read-back: the last writer's content wins,
+and every stealer that doesn't read its own owner id back walks away.
+
+There is a deliberate, documented hole: between a stealer's read-back and
+a second stealer's replace, both can briefly believe they own the unit
+(classic shared-filesystem TOCTOU).  Leases are therefore a *liveness*
+mechanism — they keep N drivers from duplicating work in the common case
+— not a correctness mechanism.  Correctness comes from the engine's
+determinism (a duplicated unit yields a byte-identical record) plus
+last-write-wins dedup by unit key at merge time (`repro.sweep.merge`).
+
+Expiry is judged against the lease's own recorded TTL (so a mixed fleet
+honors each writer's contract) using wall-clock time; shared-storage
+fleets should keep TTL comfortably above host clock skew.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.ioutil import tmp_suffix
+
+
+@dataclasses.dataclass
+class Lease:
+    unit: str
+    owner: str
+    acquired_at: float
+    heartbeat_at: float
+    ttl: float
+    stolen_from: Optional[str] = None
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        return (now if now is not None else time.time()) - self.heartbeat_at > self.ttl
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class LeaseStore:
+    """Per-unit lease files under `root`, owned by `owner`."""
+
+    def __init__(self, root: str, owner: str, ttl: float, create: bool = True):
+        if ttl <= 0:
+            raise ValueError("lease ttl must be positive")
+        self.root = root
+        self.owner = owner
+        self.ttl = ttl
+        if create:
+            os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _path(self, slug: str) -> str:
+        return os.path.join(self.root, f"{slug}.lease")
+
+    def _write(self, path: str, lease: Lease, replace: bool) -> bool:
+        """Atomically publish `lease`; with replace=False, lose (return
+        False) if the file already exists."""
+        tmp = path + tmp_suffix()
+        with open(tmp, "w") as f:
+            json.dump(lease.to_dict(), f)
+        try:
+            if replace:
+                os.replace(tmp, path)
+                return True
+            try:
+                os.link(tmp, path)
+                return True
+            except FileExistsError:
+                return False
+        finally:
+            try:
+                os.unlink(tmp)
+            except FileNotFoundError:
+                pass  # consumed by os.replace
+
+    def read(self, slug: str) -> Optional[Lease]:
+        """The current lease, or None if free.  An unparseable lease file
+        (should not happen — writes are atomic — but shared storage is
+        shared storage) is treated as a live lease aged by file mtime, so
+        it is stealable only once stale."""
+        path = self._path(slug)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            return Lease(
+                unit=data["unit"],
+                owner=data["owner"],
+                acquired_at=float(data["acquired_at"]),
+                heartbeat_at=float(data["heartbeat_at"]),
+                ttl=float(data["ttl"]),
+                stolen_from=data.get("stolen_from"),
+            )
+        except FileNotFoundError:
+            return None
+        except (OSError, ValueError, KeyError, TypeError):
+            try:
+                mtime = os.stat(path).st_mtime
+            except OSError:
+                return None
+            return Lease(
+                unit=slug, owner="<unreadable>", acquired_at=mtime,
+                heartbeat_at=mtime, ttl=self.ttl,
+            )
+
+    # ------------------------------------------------------------------
+    def try_acquire(self, slug: str) -> bool:
+        """Acquire the unit's lease: free units via atomic create, expired
+        leases via steal + read-back confirmation.  False means a live
+        owner holds it (or we lost a race) — callers move on and repoll.
+        """
+        now = time.time()
+        path = self._path(slug)
+        current = self.read(slug)
+        fresh = Lease(
+            unit=slug, owner=self.owner, acquired_at=now,
+            heartbeat_at=now, ttl=self.ttl,
+        )
+        if current is None:
+            return self._write(path, fresh, replace=False)
+        if current.owner == self.owner and not current.expired(now):
+            return True  # already ours (e.g. retry after a crash-restart)
+        if not current.expired(now):
+            return False
+        # work stealing: replace the expired lease, then confirm we are
+        # the last writer (concurrent stealers: exactly the read-back
+        # winner proceeds; see the module docstring for the residual race)
+        fresh.stolen_from = current.owner
+        self._write(path, fresh, replace=True)
+        confirmed = self.read(slug)
+        return confirmed is not None and confirmed.owner == self.owner
+
+    def heartbeat(self, slug: str) -> bool:
+        """Bump our lease's heartbeat.  False when the lease is gone or
+        owned by someone else — i.e. it expired and was stolen — in which
+        case the caller has lost the unit (finishing anyway is harmless:
+        the duplicate record dedups at merge)."""
+        current = self.read(slug)
+        if current is None or current.owner != self.owner:
+            return False
+        current.heartbeat_at = time.time()
+        return self._write(self._path(slug), current, replace=True)
+
+    def release(self, slug: str) -> None:
+        """Drop our lease (no-op if it was stolen meanwhile)."""
+        current = self.read(slug)
+        if current is not None and current.owner == self.owner:
+            try:
+                os.unlink(self._path(slug))
+            except FileNotFoundError:
+                pass
+
+    # ------------------------------------------------------------------
+    def all_leases(self) -> List[Lease]:
+        out = []
+        try:
+            names = sorted(os.listdir(self.root))
+        except FileNotFoundError:
+            return out  # no sweep state yet (read-only status views)
+        for name in names:
+            if name.endswith(".lease"):
+                lease = self.read(name[: -len(".lease")])
+                if lease is not None:
+                    out.append(lease)
+        return out

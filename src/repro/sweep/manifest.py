@@ -1,0 +1,189 @@
+"""Sweep manifest: the deterministic work-unit list for one grid.
+
+A manifest is the single source of truth a fleet of drivers shares: the
+ordered task list, the method keys, the seed count and the evaluation
+config knobs that affect records (trials, timing_runs, timing_mode,
+batch_size).  Units enumerate in the same nesting order as the serial
+``table4_overall.run`` loop (``task -> seed -> method``), so a serial
+sweep and a distributed sweep walk the identical grid.
+
+The manifest persists as JSON beside the results file; the first driver
+writes it atomically (temp file + ``os.link``, which fails rather than
+overwrites if another driver won the race) and every driver — including
+the writer — then reads the file back, so a fleet started with divergent
+flags fails loudly instead of silently splitting the grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.methods import DISPLAY_ORDER, get_method
+from repro.ioutil import tmp_suffix
+from repro.tasks import benchmark_tasks, get_task
+from repro.tasks.base import CATEGORIES
+
+MANIFEST_VERSION = 1
+
+# RAG pool size for AI CUDA Engineer's Compose stage (matches the serial
+# sweep: naive sources of the grid's first tasks stand in for the
+# cross-kernel archive retrieval)
+RAG_POOL_TASKS = 8
+
+_SLUG_RE = re.compile(r"[^A-Za-z0-9_.-]+")
+
+
+def _slug(text: str) -> str:
+    return _SLUG_RE.sub("-", text)
+
+
+def quick_subset(tasks, per_category: int = 2):
+    """The quick-mode grid: the first `per_category` tasks per category,
+    in category order (moved here from benchmarks/table4_overall.py so the
+    serial harness and the distributed driver share one definition)."""
+    by_cat = defaultdict(list)
+    for t in tasks:
+        by_cat[t.category].append(t)
+    out = []
+    for c in CATEGORIES:
+        out += by_cat[c][:per_category]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkUnit:
+    """One cell of the grid.  `method` is the display name (what records
+    carry); `method_key` is the registry key (what CLIs take)."""
+
+    task: str
+    method_key: str
+    method: str
+    seed: int
+
+    @property
+    def key(self) -> str:
+        """The dedup/completion key — matches `merge.record_key` on the
+        records the unit produces."""
+        return f"{self.task}|{self.method}|{self.seed}"
+
+    @property
+    def slug(self) -> str:
+        """Filesystem-safe name for lease files and checkpoint dirs."""
+        return _slug(f"{self.task}__{self.method_key}__s{self.seed}")
+
+
+@dataclasses.dataclass
+class SweepManifest:
+    tasks: List[str]
+    methods: List[str]  # method registry keys, in schedule order
+    seeds: int
+    trials: int = 45
+    timing_runs: int = 11
+    timing_mode: str = "wall"
+    batch_size: int = 1
+    version: int = MANIFEST_VERSION
+
+    def __post_init__(self):
+        for key in self.methods:
+            get_method(key)  # raises KeyError on an unknown method
+        for name in self.tasks:
+            get_task(name)  # raises KeyError on an unknown task
+
+    # ------------------------------------------------------------------
+    @property
+    def units(self) -> List[WorkUnit]:
+        out = []
+        for task in self.tasks:
+            for seed in range(self.seeds):
+                for mkey in self.methods:
+                    out.append(
+                        WorkUnit(
+                            task=task,
+                            method_key=mkey,
+                            method=get_method(mkey).name,
+                            seed=seed,
+                        )
+                    )
+        return out
+
+    def rag_pool(self) -> List[Tuple[str, str]]:
+        """Naive sources of the grid's first tasks (see RAG_POOL_TASKS) —
+        identical to the pool the serial table4 harness builds."""
+        return [
+            (name, get_task(name).initial_source)
+            for name in self.tasks[:RAG_POOL_TASKS]
+        ]
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SweepManifest":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def build_manifest(
+    mode: str = "quick",
+    seeds: Optional[int] = None,
+    trials: int = 45,
+    timing_runs: int = 11,
+    timing_mode: str = "wall",
+    batch_size: int = 1,
+    tasks: Optional[List[str]] = None,
+    methods: Optional[List[str]] = None,
+) -> SweepManifest:
+    """Build the grid.  `tasks`/`methods` override the benchmark set (used
+    by the fault-injection harness to sweep calibration tasks); otherwise
+    `mode` selects the paper's quick (12-task, 1-seed) or full grid."""
+    if tasks is None:
+        ts = benchmark_tasks()
+        if mode == "quick":
+            ts = quick_subset(ts)
+        tasks = [t.name for t in ts]
+    if seeds is None:
+        seeds = 1 if mode == "quick" else 3
+    return SweepManifest(
+        tasks=list(tasks),
+        methods=list(methods or DISPLAY_ORDER),
+        seeds=seeds,
+        trials=trials,
+        timing_runs=timing_runs,
+        timing_mode=timing_mode,
+        batch_size=batch_size,
+    )
+
+
+def create_or_load(path: str, manifest: Optional[SweepManifest] = None) -> SweepManifest:
+    """Publish `manifest` at `path` if absent (atomic create: temp +
+    ``os.link`` never overwrites a concurrent winner), then load whatever
+    the file holds.  A mismatch between the loaded grid and the one this
+    driver was asked to run raises — a fleet must agree on the manifest.
+    """
+    if manifest is not None and not os.path.exists(path):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + tmp_suffix()
+        with open(tmp, "w") as f:
+            json.dump(manifest.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        try:
+            os.link(tmp, path)
+        except FileExistsError:
+            pass  # another driver published first; defer to its copy
+        finally:
+            os.unlink(tmp)
+    with open(path) as f:
+        loaded = SweepManifest.from_dict(json.load(f))
+    if manifest is not None and loaded.to_dict() != manifest.to_dict():
+        raise ValueError(
+            f"manifest at {path} does not match this driver's grid — "
+            "the fleet must be started with identical sweep flags "
+            f"(existing: {loaded.to_dict()!r})"
+        )
+    return loaded

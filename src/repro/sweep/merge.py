@@ -1,0 +1,138 @@
+"""Crash-tolerant JSONL results: append, read, dedupe, merge.
+
+The results file is the existing table-4 resume protocol — one JSON
+record per ``task x method x seed`` unit, appended by any number of
+concurrent writers on shared storage.  This module owns the two failure
+modes a distributed sweep adds:
+
+* **Torn trailing lines.**  A SIGKILLed appender can leave a partial
+  final line.  `append_record` writes each record as a single
+  ``O_APPEND`` write *and* prepends a newline when the file doesn't end
+  in one, so a torn tail never swallows the next good record; readers
+  skip-and-count unparseable lines instead of crashing the summary.
+* **Duplicate records.**  Work stealing plus the lease layer's documented
+  TOCTOU window means a unit can legitimately be run twice.  The engine
+  is deterministic, so duplicates are identical in content; `load_records`
+  dedupes last-write-wins by unit key regardless.
+
+Every summarizer reads through `load_records`, so the "merged view" needs
+no separate file — but ``python -m repro.sweep merge`` can materialize a
+clean, canonically-sorted copy for archival.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from repro.ioutil import atomic_write
+
+KEY_FIELDS = ("task", "method", "seed")
+
+
+def record_key(rec) -> Optional[Tuple[str, str, int]]:
+    """The unit key of a record, or None for malformed records."""
+    if not isinstance(rec, dict):
+        return None
+    try:
+        return (rec["task"], rec["method"], rec["seed"])
+    except (KeyError, TypeError):
+        return None
+
+
+def _ends_with_newline(path: str) -> bool:
+    try:
+        with open(path, "rb") as f:
+            f.seek(0, os.SEEK_END)
+            if f.tell() == 0:
+                return True  # empty file: no healing needed
+            f.seek(-1, os.SEEK_END)
+            return f.read(1) == b"\n"
+    except OSError:
+        return True
+
+
+def append_record(path: str, rec: Dict) -> None:
+    """Append one record as a single O_APPEND write, healing a torn tail
+    left by a killed writer with a leading newline.  (The heal check races
+    with concurrent appenders in the worst case into an extra blank line,
+    which readers skip.)"""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    data = (json.dumps(rec) + "\n").encode()
+    if not _ends_with_newline(path):
+        data = b"\n" + data
+    fd = os.open(path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+    try:
+        os.write(fd, data)
+    finally:
+        os.close(fd)
+
+
+def read_records(path: str) -> Tuple[List[Dict], int]:
+    """All parseable records in file order plus the count of skipped
+    partial/corrupt lines.  Missing file reads as empty."""
+    records: List[Dict] = []
+    partial = 0
+    try:
+        f = open(path, "rb")
+    except OSError:
+        return records, partial
+    with f:
+        for raw in f:
+            line = raw.decode("utf-8", errors="replace").strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                partial += 1
+                continue
+            if record_key(rec) is None:
+                partial += 1
+                continue
+            records.append(rec)
+    return records, partial
+
+
+def load_records(path: str, warn: bool = True) -> List[Dict]:
+    """The merged view: parseable records deduped last-write-wins by unit
+    key, in first-appearance order.  With `warn`, skipped partial lines
+    are reported to stderr (never fatal — a torn tail from a killed
+    appender must not crash a summary)."""
+    records, partial = read_records(path)
+    if partial and warn:
+        sys.stderr.write(
+            f"[sweep] {path}: skipped {partial} partial/corrupt line(s) "
+            "(torn append from a killed writer?)\n"
+        )
+    merged: Dict[Tuple[str, str, int], Dict] = {}
+    order: List[Tuple[str, str, int]] = []
+    for rec in records:
+        key = record_key(rec)
+        if key not in merged:
+            order.append(key)
+        merged[key] = rec
+    return [merged[k] for k in order]
+
+
+def completed_keys(path: str) -> set:
+    """Unit keys (manifest `WorkUnit.key` strings) with a finished record."""
+    return {
+        f"{r['task']}|{r['method']}|{r['seed']}" for r in load_records(path, warn=False)
+    }
+
+
+def write_merged(path: str, out: str) -> int:
+    """Materialize the canonical merged file: deduped, sorted by unit key,
+    written atomically.  Returns the record count."""
+    records = load_records(path)
+    records.sort(key=lambda r: (r["task"], r["method"], r["seed"]))
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    atomic_write(
+        out,
+        lambda f: f.writelines(json.dumps(r) + "\n" for r in records),
+        mode="w",
+    )
+    return len(records)

@@ -38,6 +38,23 @@ def _render_sleep(genome):
 
 register(
     KernelTask(
+        name="cal_quick",
+        category="calibration",
+        description=(
+            "Calibration: cal_sleep's near-free sibling (0-3ms import "
+            "cost) — lets multi-process sweep-driver tests run whole "
+            "task x method x seed grids in seconds."
+        ),
+        make_inputs=_cal_inputs,
+        ref=_cal_ref,
+        genome_space={"sleep_ms": [0, 1, 2, 3]},
+        render=_render_sleep,
+        naive_genome={"sleep_ms": 1},
+    )
+)
+
+register(
+    KernelTask(
         name="cal_sleep",
         category="calibration",
         description=(

@@ -1,0 +1,83 @@
+"""Golden-output tests for the benchmark summarizers.
+
+The summarizers (`table4_overall.summarize`, `table7_speedup_dist`,
+`table8_aice`, `fig1_frontier`, `fig4_token_usage`) had no coverage: a
+record-schema refactor could silently wreck every reported table.  The
+fixture is a committed mini-sweep (3 tasks x 6 methods x 2 seeds,
+simulated timing — real records from the real engine) and the goldens
+are its exact rendered outputs; regenerate both together if the record
+schema or a summarizer's format deliberately changes (see
+tests/fixtures/golden/).
+"""
+
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from benchmarks import (
+    fig1_frontier,
+    fig4_token_usage,
+    table4_overall,
+    table7_speedup_dist,
+    table8_aice,
+)
+
+FIXTURES = Path(__file__).parent / "fixtures"
+SAMPLE = str(FIXTURES / "table4_sample.jsonl")
+
+SUMMARIZERS = {
+    "table4.txt": table4_overall.summarize,
+    "table7.txt": table7_speedup_dist.summarize,
+    "table8.txt": table8_aice.summarize,
+    "fig1.txt": fig1_frontier.render,
+    "fig4.txt": fig4_token_usage.summarize,
+}
+
+
+@pytest.mark.parametrize("golden", sorted(SUMMARIZERS))
+def test_summarizer_matches_golden(golden):
+    want = (FIXTURES / "golden" / golden).read_text()
+    got = SUMMARIZERS[golden](SAMPLE) + "\n"
+    assert got == want, (
+        f"{golden} output drifted — if the change is deliberate, "
+        "regenerate tests/fixtures/golden/ from the fixture"
+    )
+
+
+def test_fixture_schema_is_what_run_unit_emits():
+    """The fixture must carry every field the summarizers consume, so a
+    record-schema refactor fails here loudly instead of skewing tables."""
+    recs = [json.loads(l) for l in open(SAMPLE)]
+    assert len(recs) == 36
+    for r in recs:
+        for field in ("task", "method", "seed", "best_speedup", "compile_rate",
+                      "validity_rate", "tokens", "baseline_us", "category",
+                      "speedups_all"):
+            assert field in r, f"fixture record missing {field!r}"
+        assert {"tokens_in", "tokens_out"} <= set(r["tokens"])
+
+
+@pytest.mark.parametrize("golden", sorted(SUMMARIZERS))
+def test_summarizers_invariant_to_record_order(tmp_path, golden):
+    """A fleet-written results file arrives in completion order, not the
+    serial sweep's loop order: summaries must not depend on it (method
+    rows follow the paper's canonical order)."""
+    shuffled = tmp_path / "shuffled.jsonl"
+    lines = Path(SAMPLE).read_text().splitlines()
+    shuffled.write_text("\n".join(reversed(lines)) + "\n")
+    assert SUMMARIZERS[golden](str(shuffled)) == SUMMARIZERS[golden](SAMPLE)
+
+
+@pytest.mark.parametrize("golden", sorted(SUMMARIZERS))
+def test_summarizers_identical_on_duplicated_records(tmp_path, golden):
+    """Merged-view contract: replaying records (work stealing's duplicate
+    appends) must not change any summary — dedup is last-write-wins."""
+    dup = tmp_path / "dup.jsonl"
+    shutil.copy(SAMPLE, dup)
+    lines = Path(SAMPLE).read_text().splitlines()
+    with open(dup, "a") as f:
+        for line in lines[:7]:  # replay a prefix, out of order
+            f.write(line + "\n")
+    assert SUMMARIZERS[golden](str(dup)) == SUMMARIZERS[golden](SAMPLE)

@@ -1,0 +1,401 @@
+"""Fault-injection suite for the work-stealing distributed sweep driver.
+
+The determinism bar under test: N racing driver processes — surviving
+SIGKILLs mid-unit, duplicate workers on a lease and torn result lines —
+must produce a merged view record-identical to one process running the
+grid serially.  The expensive scenarios spawn *real* ``python -m
+repro.sweep`` subprocesses; lease/manifest/merge semantics are covered
+in-process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+import repro
+from repro.core.engine import EvolutionEngine
+from repro.core.methods import get_method
+from repro.evaluation import EvalConfig, Evaluator
+from repro.sweep import build_manifest, run_unit
+from repro.sweep.driver import SweepDriver
+from repro.sweep.lease import LeaseStore
+from repro.sweep.manifest import create_or_load
+from repro.sweep.merge import (
+    append_record,
+    completed_keys,
+    load_records,
+    read_records,
+    record_key,
+    write_merged,
+)
+from repro.tasks import get_task
+
+SRC_DIR = str(Path(repro.__file__).resolve().parents[1])
+
+# the tiny grids: calibration tasks, simulated timing -> deterministic
+# records in milliseconds per unit.  cal_quick units finish near-instantly
+# (racing fleets), cal_sleep units take ~1s (killable mid-unit).
+QUICK_GRID = dict(
+    tasks=["cal_quick"],
+    methods=["evoengineer-free", "evoengineer-insight"],
+    seeds=3, trials=4, timing_runs=1, timing_mode="simulated",
+)
+SLOW_GRID = dict(
+    tasks=["cal_sleep"],
+    methods=["evoengineer-free", "evoengineer-insight"],
+    seeds=2, trials=6, timing_runs=1, timing_mode="simulated",
+)
+
+
+def serial_reference(grid):
+    """The clean single-process run the fleets must reproduce."""
+    man = build_manifest(**grid)
+    ev = Evaluator(EvalConfig(timing_runs=man.timing_runs,
+                              timing_mode=man.timing_mode))
+    out = {}
+    rag = man.rag_pool()
+    for unit in man.units:
+        rec = run_unit(
+            get_task(unit.task), get_method(unit.method_key), unit.seed,
+            evaluator=ev, trials=man.trials, rag_pool=rag,
+        )
+        out[unit.key] = rec
+    return out
+
+
+@pytest.fixture(scope="module")
+def quick_serial():
+    return serial_reference(QUICK_GRID)
+
+
+@pytest.fixture(scope="module")
+def slow_serial():
+    return serial_reference(SLOW_GRID)
+
+
+def spawn_driver(results, owner, grid, heartbeat=0.5, ttl=2.0, extra=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [
+        sys.executable, "-m", "repro.sweep", "run",
+        "--results", str(results),
+        "--tasks", ",".join(grid["tasks"]),
+        "--methods", ",".join(grid["methods"]),
+        "--seeds", str(grid["seeds"]),
+        "--trials", str(grid["trials"]),
+        "--timing-runs", str(grid["timing_runs"]),
+        "--timing-mode", grid["timing_mode"],
+        "--heartbeat", str(heartbeat),
+        "--ttl", str(ttl),
+        "--poll", "0.2",
+        "--owner", owner,
+        "--quiet",
+        *extra,
+    ]
+    return subprocess.Popen(
+        cmd, env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
+    )
+
+
+def merged_by_key(results):
+    return {record_key(r): r for r in load_records(str(results), warn=False)}
+
+
+def assert_merged_matches_serial(results, serial):
+    merged = merged_by_key(results)
+    assert set(merged) == {
+        (k.split("|")[0], k.split("|")[1], int(k.split("|")[2])) for k in serial
+    }
+    for key, rec in serial.items():
+        t, m, s = key.split("|")
+        assert merged[(t, m, int(s))] == rec, f"unit {key} diverged from serial run"
+
+
+# ---------------------------------------------------------------------------
+# lease semantics (in-process)
+# ---------------------------------------------------------------------------
+def test_lease_acquire_heartbeat_release(tmp_path):
+    a = LeaseStore(str(tmp_path), "alice", ttl=60.0)
+    b = LeaseStore(str(tmp_path), "bob", ttl=60.0)
+    assert a.try_acquire("u1")
+    assert a.try_acquire("u1")  # re-entrant for the same owner
+    assert not b.try_acquire("u1")  # live lease is respected
+    assert a.heartbeat("u1")
+    assert not b.heartbeat("u1")  # can't heartbeat someone else's lease
+    a.release("u1")
+    assert b.try_acquire("u1")
+    b.release("u1")
+    assert a.read("u1") is None
+
+
+def test_lease_expiry_enables_stealing(tmp_path):
+    a = LeaseStore(str(tmp_path), "dead-worker", ttl=0.2)
+    b = LeaseStore(str(tmp_path), "thief", ttl=60.0)
+    assert a.try_acquire("u1")
+    assert not b.try_acquire("u1")
+    time.sleep(0.3)  # dead worker misses its heartbeats
+    assert b.try_acquire("u1")
+    stolen = b.read("u1")
+    assert stolen.owner == "thief" and stolen.stolen_from == "dead-worker"
+    assert not a.heartbeat("u1")  # the zombie discovers it lost the unit
+
+
+def test_unreadable_lease_treated_as_stale_by_mtime(tmp_path):
+    store = LeaseStore(str(tmp_path), "w", ttl=0.2)
+    path = tmp_path / "u1.lease"
+    path.write_text("{not json")
+    lease = store.read("u1")
+    assert lease.owner == "<unreadable>"
+    assert not store.try_acquire("u1")  # fresh mtime: treated as live
+    past = time.time() - 5.0
+    os.utime(path, (past, past))
+    assert store.try_acquire("u1")  # stale garbage is reclaimed
+
+
+def test_merge_module_imports_without_heavy_stack():
+    """Summarizers parse JSONL through repro.sweep.merge; that import must
+    not drag in the engine/evaluator/jax stack (repro.sweep's __init__ is
+    lazy) — a merge box without an accelerator stack stays a merge box."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+    code = (
+        "import sys; import repro.sweep.merge; "
+        "assert 'jax' not in sys.modules, 'merge import pulled in jax'; "
+        "assert 'repro.core.engine' not in sys.modules"
+    )
+    subprocess.run([sys.executable, "-c", code], env=env, check=True)
+
+
+# ---------------------------------------------------------------------------
+# manifest contract (in-process)
+# ---------------------------------------------------------------------------
+def test_manifest_publish_and_fleet_mismatch(tmp_path):
+    man = build_manifest(**QUICK_GRID)
+    path = str(tmp_path / "manifest.json")
+    loaded = create_or_load(path, man)
+    assert loaded.to_dict() == man.to_dict()
+    assert create_or_load(path).to_dict() == man.to_dict()  # read-only load
+    assert len(man.units) == 6
+    # unit order matches the serial table4 loop: task -> seed -> method
+    assert [u.key for u in man.units[:2]] == [
+        "cal_quick|EvoEngineer-Free|0", "cal_quick|EvoEngineer-Insight|0",
+    ]
+    other = build_manifest(**{**QUICK_GRID, "trials": 9})
+    with pytest.raises(ValueError, match="must be started with identical"):
+        create_or_load(path, other)
+
+
+# ---------------------------------------------------------------------------
+# crash-tolerant results file (in-process)
+# ---------------------------------------------------------------------------
+def test_torn_tail_is_skipped_healed_and_deduped(tmp_path):
+    path = str(tmp_path / "r.jsonl")
+    r1 = {"task": "t", "method": "m", "seed": 0, "best_speedup": 1.0}
+    r2 = {"task": "t", "method": "m", "seed": 1, "best_speedup": 2.0}
+    append_record(path, r1)
+    # a killed appender leaves a torn, newline-less tail
+    with open(path, "a") as f:
+        f.write('{"task": "t", "method": "m", "seed": 2, "best_sp')
+    records, partial = read_records(path)
+    assert records == [r1] and partial == 1
+    # the next append heals the tail instead of gluing onto the torn line
+    append_record(path, r2)
+    records, partial = read_records(path)
+    assert records == [r1, r2] and partial == 1
+    # duplicate unit records dedupe last-write-wins
+    r2b = dict(r2, best_speedup=3.0)
+    append_record(path, r2b)
+    assert load_records(path, warn=False) == [r1, r2b]
+    assert completed_keys(path) == {"t|m|0", "t|m|1"}
+    # and merge materializes the canonical deduped file
+    out = str(tmp_path / "merged.jsonl")
+    assert write_merged(path, out) == 2
+    assert [json.loads(l) for l in open(out)] == [r1, r2b]
+
+
+def test_summarize_survives_torn_trailing_line(tmp_path, quick_serial):
+    """Regression (satellite): json.loads over a torn final line used to
+    crash every summarizer; they now skip-and-report."""
+    from benchmarks import fig1_frontier, fig4_token_usage, table4_overall
+    from benchmarks import table7_speedup_dist, table8_aice
+
+    path = str(tmp_path / "table4.jsonl")
+    for rec in quick_serial.values():
+        append_record(path, rec)
+    with open(path, "a") as f:
+        f.write('{"task": "cal_quick", "method": "EvoEng')  # torn tail
+    assert "EvoEngineer-Free" in table4_overall.summarize(path)
+    assert table7_speedup_dist.summarize(path)
+    assert table8_aice.summarize(path)
+    assert fig1_frontier.render(path)
+    assert fig4_token_usage.summarize(path)
+    merged = load_records(path, warn=False)
+    assert len(merged) == len(quick_serial)
+
+
+# ---------------------------------------------------------------------------
+# steal-resume determinism (in-process)
+# ---------------------------------------------------------------------------
+def test_run_unit_resumes_dead_workers_checkpoint(tmp_path, quick_serial):
+    """A stolen unit picks up the dead worker's unit-scoped checkpoint and
+    still lands on the identical record."""
+    man = build_manifest(**QUICK_GRID)
+    unit = man.units[0]
+    ckpt = str(tmp_path / "checkpoints" / unit.slug)
+    cfg = EvalConfig(timing_runs=man.timing_runs, timing_mode=man.timing_mode)
+    # the "dead worker": ran 2 of 4 trials, checkpointed, then died
+    eng = EvolutionEngine(
+        get_task(unit.task), get_method(unit.method_key),
+        evaluator=Evaluator(cfg), seed=unit.seed,
+        rag_pool=[r for r in man.rag_pool() if r[0] != unit.task],
+        checkpoint_dir=ckpt,
+    )
+    eng.run(max_trials=2, checkpoint_every=1)
+    assert eng.trial == 2
+    # the thief: same unit through the driver's runner, resuming
+    rec = run_unit(
+        get_task(unit.task), get_method(unit.method_key), unit.seed,
+        evaluator=Evaluator(cfg), trials=man.trials,
+        rag_pool=man.rag_pool(), checkpoint_dir=ckpt,
+    )
+    assert rec == quick_serial[unit.key]
+
+
+@pytest.mark.parametrize("damage", [
+    '{"trial": ',  # torn mid-write: not JSON at all
+    '{"trial": 2, "rng_state": {"bad": 1}, "population": {"state": {}}, '
+    '"insights": [], "ledger": {}, "history": []}',  # parses, stale schema
+])
+def test_run_unit_tolerates_corrupt_checkpoint(tmp_path, quick_serial, damage):
+    """A damaged checkpoint — torn bytes or a schema the engine can't
+    restore — must yield a clean fresh start with the serial trajectory,
+    never a partially-restored engine or a poison file that crashes every
+    driver stealing the unit."""
+    man = build_manifest(**QUICK_GRID)
+    unit = man.units[0]
+    ckpt = tmp_path / "checkpoints" / unit.slug
+    ckpt.mkdir(parents=True)
+    method = get_method(unit.method_key)
+    safe = method.name.replace(" ", "_").replace("(", "").replace(")", "")
+    (ckpt / f"{unit.task}_{safe}_s{unit.seed}.json").write_text(damage)
+    cfg = EvalConfig(timing_runs=man.timing_runs, timing_mode=man.timing_mode)
+    rec = run_unit(
+        get_task(unit.task), method, unit.seed,
+        evaluator=Evaluator(cfg), trials=man.trials,
+        rag_pool=man.rag_pool(), checkpoint_dir=str(ckpt),
+    )
+    assert rec == quick_serial[unit.key]  # fresh start, same trajectory
+
+
+# ---------------------------------------------------------------------------
+# real multi-process fleets (subprocess)
+# ---------------------------------------------------------------------------
+def test_three_driver_fleet_matches_serial(tmp_path, quick_serial):
+    results = tmp_path / "table4.jsonl"
+    procs = [
+        spawn_driver(results, f"drv{i}", QUICK_GRID) for i in range(3)
+    ]
+    for p in procs:
+        out, _ = p.communicate(timeout=120)
+        assert p.returncode == 0, out
+    assert_merged_matches_serial(results, quick_serial)
+    # every driver exited only once the whole grid was complete
+    assert len(load_records(str(results), warn=False)) == len(quick_serial)
+
+
+def test_sigkill_mid_unit_is_stolen_and_completes(tmp_path, slow_serial):
+    """The acceptance scenario: a worker is SIGKILLed while holding a
+    lease mid-unit; fresh drivers steal the expired lease and the merged
+    view still matches the clean serial run, every unit exactly once."""
+    results = tmp_path / "table4.jsonl"
+    leases = tmp_path / "table4.jsonl.sweep" / "leases"
+    victim = spawn_driver(results, "victim", SLOW_GRID, heartbeat=0.5, ttl=2.0)
+    try:
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            if leases.is_dir() and any(leases.glob("*.lease")):
+                break
+            time.sleep(0.01)
+        else:
+            pytest.fail("victim never leased a unit")
+        time.sleep(0.2)  # let it get into the unit body
+        victim.kill()  # SIGKILL: no release, no final heartbeat
+        victim.wait(timeout=30)
+    finally:
+        if victim.poll() is None:
+            victim.kill()
+    held = list(leases.glob("*.lease"))
+    assert held, "victim died without leaving a lease to steal"
+
+    rescuers = [
+        spawn_driver(results, f"rescue{i}", SLOW_GRID, heartbeat=0.5, ttl=2.0)
+        for i in range(2)
+    ]
+    outs = []
+    for p in rescuers:
+        out, _ = p.communicate(timeout=180)
+        outs.append(out)
+        assert p.returncode == 0, out
+    assert_merged_matches_serial(results, slow_serial)
+    assert any("stolen" in o and " 0 stolen" not in o for o in outs), outs
+
+
+def test_duplicate_worker_on_live_lease_dedupes(tmp_path, quick_serial):
+    """A zombie worker keeps computing a unit whose lease expires and is
+    stolen: both workers append a record; the merged view keeps exactly
+    one, identical to serial."""
+    results = tmp_path / "table4.jsonl"
+    man = build_manifest(**QUICK_GRID)
+    create_or_load(str(tmp_path / "table4.jsonl.sweep" / "manifest.json"), man)
+    unit = man.units[0]
+    zombie = LeaseStore(
+        str(tmp_path / "table4.jsonl.sweep" / "leases"), "zombie", ttl=1.0
+    )
+    assert zombie.try_acquire(unit.slug)  # live lease, but never heartbeats
+
+    drivers = [
+        spawn_driver(results, f"drv{i}", QUICK_GRID, heartbeat=0.4, ttl=1.0)
+        for i in range(2)
+    ]
+    for p in drivers:
+        out, _ = p.communicate(timeout=120)
+        assert p.returncode == 0, out
+    # the fleet stole the zombie's expired lease and ran the unit...
+    assert not zombie.heartbeat(unit.slug)
+    # ...while the zombie finishes it anyway and double-appends
+    cfg = EvalConfig(timing_runs=man.timing_runs, timing_mode=man.timing_mode)
+    rec = run_unit(
+        get_task(unit.task), get_method(unit.method_key), unit.seed,
+        evaluator=Evaluator(cfg), trials=man.trials, rag_pool=man.rag_pool(),
+    )
+    append_record(str(results), rec)
+    raw, partial = read_records(str(results))
+    assert partial == 0
+    assert sum(1 for r in raw if record_key(r)[:2] == (unit.task, unit.method)
+               and r["seed"] == unit.seed) >= 2  # genuine duplicates on disk
+    assert_merged_matches_serial(results, quick_serial)
+
+
+def test_driver_recovers_grid_with_torn_tail_in_results(tmp_path, quick_serial):
+    """A results file truncated mid-record (killed appender) must not
+    wedge the fleet: the torn line is skipped, its unit is re-run."""
+    results = tmp_path / "table4.jsonl"
+    serial_items = list(quick_serial.items())
+    append_record(str(results), serial_items[0][1])
+    torn = json.dumps(serial_items[1][1])[: 40]
+    with open(results, "a") as f:
+        f.write(torn)  # no newline: torn mid-record
+    man = build_manifest(**QUICK_GRID)
+    create_or_load(str(tmp_path / "table4.jsonl.sweep" / "manifest.json"), man)
+    stats = SweepDriver(
+        man, str(results), owner="healer", heartbeat=0.4, ttl=1.5, poll=0.1
+    ).run()
+    assert stats["completed"] == len(quick_serial) - 1
+    _, partial = read_records(str(results))
+    assert partial == 1  # the torn line is still there, still skipped
+    assert_merged_matches_serial(results, quick_serial)
