@@ -29,6 +29,12 @@ def main():
     ap.add_argument("--batch-size", type=int, default=0,
                     help="proposals per generation (default: 2x workers when "
                          "parallel, else 1)")
+    ap.add_argument("--timing", choices=["wall", "simulated"], default="wall",
+                    help="candidate timing provider for the table-4 sweep "
+                         "(repro.evaluation.timing): wall = measured with "
+                         "outlier rejection + noise floor, simulated = "
+                         "deterministic pseudo-runtimes (bit-reproducible "
+                         "across hosts/fleets)")
     ap.add_argument("--bench-eval-throughput", action="store_true",
                     help="also measure serial-vs-parallel evaluation "
                          "throughput and write BENCH_eval_throughput.json")
@@ -58,7 +64,7 @@ def main():
             argparse.Namespace(
                 task="cal_sleep", candidates=16,
                 workers=args.workers or os.cpu_count() or 4, timing_runs=3,
-                out="BENCH_eval_throughput.json",
+                timing="simulated", out="BENCH_eval_throughput.json",
             )
         )
 
@@ -71,7 +77,8 @@ def main():
     grid = dict(
         mode="full" if args.full else "quick",
         seeds=3 if args.full else 1,
-        trials=45, timing_runs=11, batch_size=batch_size,
+        trials=45, timing_runs=11, timing_mode=args.timing,
+        batch_size=batch_size,
     )
 
     if args.distributed:
@@ -90,8 +97,8 @@ def main():
     elif args.full or not os.path.exists(args.table4):
         ns = argparse.Namespace(
             mode=grid["mode"], seeds=grid["seeds"], trials=grid["trials"],
-            timing_runs=grid["timing_runs"], workers=args.workers,
-            batch_size=grid["batch_size"],
+            timing_runs=grid["timing_runs"], timing=grid["timing_mode"],
+            workers=args.workers, batch_size=grid["batch_size"],
             out=args.table4, summarize_only=False,
         )
         table4_overall.run(ns)

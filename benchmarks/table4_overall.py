@@ -68,7 +68,10 @@ def run(args):
 
     workers = getattr(args, "workers", 0) or 0
     batch_size = getattr(args, "batch_size", 1) or 1
-    cfg = EvalConfig(timing_runs=args.timing_runs)
+    cfg = EvalConfig(
+        timing_runs=args.timing_runs,
+        timing_mode=getattr(args, "timing", "wall"),
+    )
     cache_dir = os.path.join(os.path.dirname(args.out) or ".", "eval_cache")
     if workers > 1:
         evaluator = ParallelEvaluator(cfg, workers=workers, cache_dir=cache_dir)
@@ -151,6 +154,9 @@ def main():
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--trials", type=int, default=45)
     ap.add_argument("--timing-runs", type=int, default=11)
+    ap.add_argument("--timing", choices=["wall", "simulated"], default="wall",
+                    help="candidate timing provider (repro.evaluation.timing); "
+                         "simulated makes records bit-reproducible across hosts")
     ap.add_argument("--workers", type=int, default=0,
                     help=">1 evaluates candidate batches in a worker-process "
                          "pool (wall-clock timings then include pool "

@@ -6,9 +6,43 @@ of spawned worker processes with hard per-candidate timeouts (see
 repro/evaluation/parallel.py for the worker protocol and cache keys).
 Both share the source-hash result cache format, the `(task, seed)`
 oracle-output cache and the on-disk baseline/oracle layer.
+
+All runtime numbers flow through the unified timing subsystem
+(`repro.evaluation.timing`): `WallClockTiming` (measured, statistically
+hardened), `SimulatedTiming` (deterministic pseudo-runtimes) and
+`RooflineTiming` (analytic v5e models, used by the autotuner's offline
+fallback) behind one `TimingProvider` protocol.
 """
 
 from repro.evaluation.evaluator import EvalConfig, EvalResult, Evaluator, source_key
 from repro.evaluation.parallel import ParallelEvaluator
+from repro.evaluation.timing import (
+    Measurement,
+    RooflineTiming,
+    SimulatedTiming,
+    TimingProvider,
+    TimingRequest,
+    WallClockTiming,
+    device_kind,
+    provider_for,
+    provider_from_config,
+    resolve_timing_mode,
+)
 
-__all__ = ["EvalConfig", "EvalResult", "Evaluator", "ParallelEvaluator", "source_key"]
+__all__ = [
+    "EvalConfig",
+    "EvalResult",
+    "Evaluator",
+    "Measurement",
+    "ParallelEvaluator",
+    "RooflineTiming",
+    "SimulatedTiming",
+    "TimingProvider",
+    "TimingRequest",
+    "WallClockTiming",
+    "device_kind",
+    "provider_for",
+    "provider_from_config",
+    "resolve_timing_mode",
+    "source_key",
+]

@@ -12,13 +12,17 @@ outputs are cached by ``(task, input_seed)`` so ``task.ref(...)`` runs once
 per task/seed pair instead of once per candidate; with a ``cache_dir`` the
 cache persists to disk and is shared across processes and re-runs.
 
-Performance: median wall-clock of the jitted candidate over ``timing_runs``
-repeats after warmup (the paper averages 100 GPU runs; the knob is
-configurable and recorded).  ``timing_mode="simulated"`` replaces the
-wall-clock with a deterministic pseudo-runtime derived from the source
-hash — bit-identical across runs, processes and serial/parallel
-evaluation, which is what the determinism tests and throughput benches
-compare against.  A per-candidate deadline (SIGALRM) provides straggler
+Performance: delegated to the shared timing subsystem
+(`repro.evaluation.timing`).  ``timing_mode="wall"`` measures the jitted
+candidate through `WallClockTiming` — warmup, IQR outlier rejection,
+median of the kept repeats, and a noise-floor estimate recorded on the
+result (`EvalResult.noise_floor_us`) so downstream consumers can tell a
+real speedup from measurement noise.  ``timing_mode="simulated"``
+resolves through `SimulatedTiming`, byte-identical to the historical
+pseudo-runtime path — bit-identical across runs, processes and
+serial/parallel evaluation, which is what the determinism tests and
+throughput benches compare against.  A per-candidate deadline (SIGALRM)
+provides straggler
 mitigation: a hanging candidate is failed, not waited on.  (SIGALRM only
 arms on a main thread; `ParallelEvaluator` workers guarantee one and add a
 hard process-kill deadline on top.)
@@ -36,12 +40,18 @@ import hashlib
 import os
 import re
 import signal
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.evaluation.timing import (
+    Measurement,
+    TimingProvider,
+    TimingRequest,
+    provider_from_config,
+    pseudo_runtime_us,
+)
 from repro.ioutil import atomic_write, read_json, update_json
 from repro.tasks.base import KernelTask
 
@@ -53,7 +63,8 @@ class EvalConfig:
     warmup_runs: int = 2
     timeout_s: float = 30.0
     input_seed_base: int = 10_000
-    # "wall": median wall-clock of the jitted candidate (default).
+    # "wall": statistically hardened wall-clock of the jitted candidate
+    # (default; see repro.evaluation.timing.WallClockTiming).
     # "simulated": deterministic pseudo-runtime from the source hash —
     # compile + correctness stages still run for real; only the timing
     # stage is replaced.  Used by tests/benches that need bit-identical
@@ -68,6 +79,10 @@ class EvalResult:
     runtime_us: Optional[float] = None
     error: Optional[str] = None
     stage: str = "compile"
+    # measurement resolution in µs (WallClockTiming's kept-sample IQR;
+    # exactly 0.0 for simulated timing): runtime differences below this
+    # are noise, not signal
+    noise_floor_us: Optional[float] = None
 
     @property
     def valid(self) -> bool:
@@ -81,9 +96,8 @@ def source_key(task_name: str, source: str) -> Tuple[str, str]:
 
 
 def _pseudo_runtime_us(task_name: str, sha: str) -> float:
-    """Deterministic stand-in runtime in [50, 1050) us for timing_mode="simulated"."""
-    h = int(hashlib.sha1(f"{task_name}:{sha}".encode()).hexdigest()[:12], 16)
-    return 50.0 + (h % 1_000_000) / 1000.0
+    """Back-compat alias for `repro.evaluation.timing.pseudo_runtime_us`."""
+    return pseudo_runtime_us(f"{task_name}:{sha}")
 
 
 def _errmsg(e: BaseException, limit: int = 500) -> str:
@@ -130,8 +144,23 @@ class _Deadline:
 
 
 class Evaluator:
-    def __init__(self, config: Optional[EvalConfig] = None, cache_dir: Optional[str] = None):
+    def __init__(
+        self,
+        config: Optional[EvalConfig] = None,
+        cache_dir: Optional[str] = None,
+        timing: Optional[TimingProvider] = None,
+    ):
         self.config = config or EvalConfig()
+        # the single timing path: every runtime_us this evaluator reports
+        # comes from one TimingProvider (injectable for tests)
+        self.timing: TimingProvider = timing or provider_from_config(self.config)
+        if self.timing.mode not in ("wall", "simulated"):
+            # roofline scores (kernel, genome) pairs, not candidate sources —
+            # it belongs to the autotuner, not candidate evaluation
+            raise ValueError(
+                f"Evaluator cannot time candidates with a "
+                f"{self.timing.mode!r} provider (use wall or simulated)"
+            )
         self._cache: Dict[Tuple[str, str], EvalResult] = {}
         self._baseline_us: Dict[str, float] = {}
         self._oracle_cache: Dict[Tuple[str, int], np.ndarray] = {}
@@ -232,23 +261,22 @@ class Evaluator:
                 compile_ok=True, error=_errmsg(e), stage="correctness"
             )
 
-        # ---- performance ------------------------------------------------
-        if cfg.timing_mode == "simulated":
-            return EvalResult(
-                compile_ok=True, correct=True,
-                runtime_us=_pseudo_runtime_us(task.name, sha), stage="done",
-            )
-        inputs = task.make_inputs(cfg.input_seed_base)
-        for _ in range(cfg.warmup_runs):
-            jax.block_until_ready(jfn(*inputs))
-        times = []
-        for _ in range(cfg.timing_runs):
-            t0 = time.perf_counter()
-            jax.block_until_ready(jfn(*inputs))
-            times.append(time.perf_counter() - t0)
-        runtime_us = float(np.median(times) * 1e6)
+        # ---- performance (via the shared timing subsystem) ---------------
+        m = self._measure(task, jfn, sha)
         return EvalResult(
-            compile_ok=True, correct=True, runtime_us=runtime_us, stage="done"
+            compile_ok=True, correct=True, runtime_us=m.runtime_us,
+            stage="done", noise_floor_us=m.noise_floor_us,
+        )
+
+    def _measure(self, task: KernelTask, jfn, sha: str) -> Measurement:
+        """One Measurement for the (already warm-traced) jitted candidate.
+        Simulated timing never builds inputs or runs the candidate —
+        exactly the historical cost profile of that mode."""
+        if self.timing.mode == "simulated":
+            return self.timing.measure(TimingRequest(key=f"{task.name}:{sha}"))
+        inputs = task.make_inputs(self.config.input_seed_base)
+        return self.timing.measure(
+            TimingRequest(thunk=lambda: jax.block_until_ready(jfn(*inputs)))
         )
 
     # ------------------------------------------------------------------
@@ -291,17 +319,25 @@ class Evaluator:
     # baseline runtimes (memory -> disk -> measure)
     # ------------------------------------------------------------------
     def _baseline_key(self, task: KernelTask) -> str:
+        # keyed by the provider actually measuring (an injected provider
+        # may disagree with config.timing_mode — its numbers must never
+        # land under another mode's cache key), falling back to the config
+        # knobs when the provider doesn't carry its own
         c = self.config
-        key = (
-            f"{task.name}@{_task_fingerprint(task)}"
-            f"|r{c.timing_runs}w{c.warmup_runs}|{c.timing_mode}"
-        )
-        if c.timing_mode == "wall":
+        mode = self.timing.mode
+        runs = getattr(self.timing, "timing_runs", c.timing_runs)
+        warmup = getattr(self.timing, "warmup_runs", c.warmup_runs)
+        key = f"{task.name}@{_task_fingerprint(task)}|r{runs}w{warmup}|{mode}"
+        if mode == "wall":
             # wall-clock baselines are hardware-specific: never reuse them
-            # across hosts when eval_cache lives on shared storage
+            # across hosts when eval_cache lives on shared storage.  "iqr1"
+            # stamps the measurement methodology (WallClockTiming's outlier
+            # rejection): baselines recorded by the pre-hardening median
+            # loop must miss rather than pair a stale unhardened baseline
+            # with hardened candidate timings
             import platform
 
-            key += f"|{platform.node()}x{os.cpu_count()}"
+            key += f"|iqr1|{platform.node()}x{os.cpu_count()}"
         return key
 
     def _baseline_file(self) -> Optional[str]:

@@ -41,10 +41,17 @@ Cache keys
 * baselines: ``<cache_dir>/baseline_us.json`` keyed by task + timing
   config (see `Evaluator.baseline_us`).
 
+Timing: each worker builds its own `TimingProvider` from the `EvalConfig`
+it received at spawn (`repro.evaluation.timing.provider_from_config`), so
+parent and workers share one timing definition without shipping provider
+objects across the pipe.  Custom provider *instances* therefore cannot be
+injected into a pool — construct workers' behavior through the config.
+
 Determinism: compile and correctness outcomes are pure functions of the
 source, so parallel evaluation returns bit-identical `EvalResult`s to the
-serial evaluator; with ``timing_mode="simulated"`` the runtimes are too
-(tested in tests/test_parallel_eval.py).
+serial evaluator; with ``timing_mode="simulated"`` the runtimes are too —
+`SimulatedTiming` is a pure function of the source hash (tested in
+tests/test_parallel_eval.py and regression-locked in tests/test_timing.py).
 """
 
 from __future__ import annotations
@@ -137,7 +144,14 @@ class ParallelEvaluator(Evaluator):
         cache_dir: Optional[str] = None,
         worker_deadline_s: Optional[float] = None,
         extra_task_modules: Tuple[str, ...] = (),
+        timing=None,
     ):
+        if timing is not None:
+            raise ValueError(
+                "ParallelEvaluator cannot take a timing provider instance: "
+                "workers rebuild their provider from EvalConfig at spawn "
+                "(set EvalConfig.timing_mode/timing_runs/warmup_runs instead)"
+            )
         super().__init__(config, cache_dir=cache_dir)
         self.workers = max(1, workers or min(4, os.cpu_count() or 1))
         if worker_deadline_s is None and self.config.timeout_s:

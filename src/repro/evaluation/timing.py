@@ -1,0 +1,403 @@
+"""Unified timing subsystem: one measurement layer for evaluator + autotuner.
+
+Every runtime number this repo ranks candidates by — the evolution
+engine's candidate wall-clocks, the autotuner's genome scores, the
+benchmark harnesses — flows through a `TimingProvider`, so the statistics
+(warmup, outlier rejection, drift cancellation, noise floor) are defined
+once instead of re-hand-rolled per call site.  "Towards Robust Agentic
+CUDA Kernel Benchmarking" (Lange et al., 2025) identifies naive
+single-shot timing as the dominant source of bogus speedups in LLM kernel
+evolution; this module is the hardening layer that claim asks for.
+
+Three providers implement the protocol:
+
+* `WallClockTiming` — measured on-hardware timing: ``warmup_runs``
+  untimed warmups (jit compile + caches), ``timing_runs`` timed repeats,
+  Tukey-fence IQR outlier rejection (a GC pause or a noisy neighbor
+  cannot become the reported runtime), median of the kept samples, and a
+  noise-floor estimate (the IQR of the kept samples, in µs) recorded
+  alongside every measurement — two candidates whose medians differ by
+  less than the noise floor are indistinguishable, and downstream
+  consumers can say so instead of shipping a fake ranking.  When a
+  ``baseline_thunk`` is supplied, baseline and candidate are measured
+  *interleaved* (B,C,B,C,...) so slow clock drift (thermal throttling,
+  background load ramping) hits both series equally and cancels in the
+  ratio.  The clock is injectable for deterministic tests.
+* `SimulatedTiming` — the deterministic pseudo-runtime derived from the
+  source hash, byte-identical to the historical
+  ``timing_mode="simulated"`` path (regression-locked in
+  tests/test_timing.py against a committed fixture).  This is what keeps
+  serial/parallel/distributed runs bit-comparable.
+* `RooflineTiming` — the analytic v5e roofline models that used to be
+  inlined in `launch/autotune.py`: modeled kernel time (compute vs HBM
+  term, MXU-underfill penalty) with the VMEM-fit constraint as the
+  feasibility gate.  The offline fallback when no accelerator is
+  attached.
+
+Providers consume a `TimingRequest` and return a `Measurement` (or
+``None`` when the request is infeasible — e.g. a genome that does not
+tile the shape or busts the VMEM budget).  Each provider reads only the
+request fields it needs: wall uses the thunks, simulated the key,
+roofline the (kernel, genome) pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+import time
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# request / result records
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TimingRequest:
+    """What to time.  Fields are provider-specific (see module docstring)."""
+
+    thunk: Optional[Callable[[], Any]] = None  # wall: run + block until done
+    baseline_thunk: Optional[Callable[[], Any]] = None  # wall: interleave vs this
+    key: Optional[str] = None  # simulated: "task:sha"
+    kernel: Optional[str] = None  # roofline: model name
+    genome: Optional[Dict[str, Any]] = None  # roofline: knob assignment
+
+
+@dataclasses.dataclass
+class Measurement:
+    """One timing verdict plus the statistics that produced it."""
+
+    runtime_us: float
+    mode: str  # "wall" | "simulated" | "roofline"
+    runs: int = 1  # samples collected
+    kept: int = 1  # samples surviving outlier rejection
+    outliers: int = 0
+    noise_floor_us: float = 0.0
+    baseline_us: Optional[float] = None  # interleaved companion median
+    vmem_bytes: Optional[int] = None  # roofline: modeled VMEM footprint
+
+    @property
+    def rank(self) -> float:
+        """Drift-cancelled ranking key: the candidate/baseline ratio when an
+        interleaved baseline was measured, the raw runtime otherwise."""
+        if self.baseline_us:
+            return self.runtime_us / self.baseline_us
+        return self.runtime_us
+
+    def provenance(self) -> Dict[str, Any]:
+        """The ``_meta`` payload persisted beside a tuned genome."""
+        out: Dict[str, Any] = {
+            "source": "measured" if self.mode == "wall" else "modeled",
+            "timing": self.mode,
+            "runs": self.runs,
+            "kept": self.kept,
+            "outliers": self.outliers,
+            "noise_floor_us": round(self.noise_floor_us, 3),
+        }
+        if self.baseline_us is not None:
+            out["baseline_us"] = round(self.baseline_us, 3)
+        return out
+
+
+class TimingProvider(Protocol):
+    mode: str
+
+    def measure(self, request: TimingRequest) -> Optional[Measurement]: ...
+
+
+# --------------------------------------------------------------------------
+# wall clock
+# --------------------------------------------------------------------------
+
+
+def _iqr_keep(samples: List[float]) -> Tuple[List[float], float]:
+    """Tukey fences: keep samples within [q1 - 1.5·IQR, q3 + 1.5·IQR].
+    Returns (kept, iqr_of_kept)."""
+    arr = np.asarray(samples, dtype=np.float64)
+    q1, q3 = np.percentile(arr, [25.0, 75.0])
+    iqr = q3 - q1
+    # relative slack so a zero-IQR series (all samples equal) doesn't
+    # reject neighbors that differ only in float rounding
+    slack = 1e-9 * max(abs(q1), abs(q3))
+    lo, hi = q1 - 1.5 * iqr - slack, q3 + 1.5 * iqr + slack
+    kept = [s for s in samples if lo <= s <= hi]
+    if not kept:  # degenerate (can't happen: the median is always in-fence)
+        kept = list(samples)
+    kq1, kq3 = np.percentile(np.asarray(kept, dtype=np.float64), [25.0, 75.0])
+    return kept, float(kq3 - kq1)
+
+
+class WallClockTiming:
+    """Measured on-hardware timing with statistical hardening.
+
+    ``clock`` defaults to ``time.perf_counter`` and is injectable so the
+    statistics are testable without real hardware (tests/test_timing.py
+    drives it with a scripted fake clock).
+    """
+
+    mode = "wall"
+
+    def __init__(
+        self,
+        timing_runs: int = 15,
+        warmup_runs: int = 2,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        if timing_runs < 1:
+            raise ValueError(f"timing_runs must be >= 1, got {timing_runs}")
+        self.timing_runs = timing_runs
+        self.warmup_runs = max(0, warmup_runs)
+        self.clock = clock or time.perf_counter
+
+    def _series(self, thunk: Callable[[], Any]) -> float:
+        t0 = self.clock()
+        thunk()
+        return self.clock() - t0
+
+    def measure(self, request: TimingRequest) -> Optional[Measurement]:
+        thunk = request.thunk
+        if thunk is None:
+            raise ValueError("WallClockTiming requires TimingRequest.thunk")
+        baseline = request.baseline_thunk
+        # warmup: untimed, interleaved when a baseline rides along so both
+        # arrive at the timed section equally warm
+        for _ in range(self.warmup_runs):
+            if baseline is not None:
+                baseline()
+            thunk()
+        cand: List[float] = []
+        base: List[float] = []
+        # interleaved B,C,B,C,... — drift (thermal, background load) moves
+        # both series together and cancels in the ratio
+        for _ in range(self.timing_runs):
+            if baseline is not None:
+                base.append(self._series(baseline))
+            cand.append(self._series(thunk))
+        kept, iqr = _iqr_keep(cand)
+        m = Measurement(
+            runtime_us=float(np.median(kept) * 1e6),
+            mode=self.mode,
+            runs=self.timing_runs,
+            kept=len(kept),
+            outliers=self.timing_runs - len(kept),
+            noise_floor_us=float(iqr * 1e6),
+        )
+        if base:
+            bkept, _ = _iqr_keep(base)
+            m.baseline_us = float(np.median(bkept) * 1e6)
+        return m
+
+
+# --------------------------------------------------------------------------
+# simulated (deterministic pseudo-runtime)
+# --------------------------------------------------------------------------
+
+
+def pseudo_runtime_us(key: str) -> float:
+    """Deterministic stand-in runtime in [50, 1050) µs for a ``task:sha``
+    key.  The exact historical ``timing_mode="simulated"`` formula — any
+    change here breaks bit-comparability with every recorded run, which is
+    why tests/test_timing.py locks it against a committed fixture."""
+    h = int(hashlib.sha1(key.encode()).hexdigest()[:12], 16)
+    return 50.0 + (h % 1_000_000) / 1000.0
+
+
+class SimulatedTiming:
+    """Byte-identical to the historical simulated path: runtime is a pure
+    function of the ``task:sha`` key, noise floor is exactly zero."""
+
+    mode = "simulated"
+
+    def measure(self, request: TimingRequest) -> Optional[Measurement]:
+        if request.key is None:
+            raise ValueError("SimulatedTiming requires TimingRequest.key")
+        return Measurement(
+            runtime_us=pseudo_runtime_us(request.key),
+            mode=self.mode,
+            runs=1,
+            kept=1,
+            outliers=0,
+            noise_floor_us=0.0,
+        )
+
+
+# --------------------------------------------------------------------------
+# roofline (analytic v5e models, moved verbatim from launch/autotune.py)
+# --------------------------------------------------------------------------
+
+VMEM_BYTES = 128 * 2**20  # v5e VMEM per core (we budget half for double-buffering)
+VMEM_BUDGET = VMEM_BYTES // 2
+
+
+def _peaks() -> Tuple[float, float]:
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+    return PEAK_FLOPS_BF16, HBM_BW
+
+
+def model_flash(g, *, s=8192, h=32, d=128, b=1):
+    peak, bw = _peaks()
+    bq, bk = g["block_q"], g["block_k"]
+    if s % bq or s % bk:
+        return None
+    n_tiles = (s // bq) * (s // bk) * h * b
+    flops_tile = 2 * bq * bk * d * 2  # qk^T and pv
+    bytes_tile = (bq * d + 2 * bk * d) * 2  # q stays resident per q row
+    # causal: ~half the tiles contribute
+    t_compute = 0.5 * n_tiles * flops_tile / peak
+    t_memory = 0.5 * n_tiles * bytes_tile / bw
+    # MXU alignment penalty: dims below 128 underfill the systolic array
+    util = min(bq, 128) / 128 * min(bk, 128) / 128
+    t_compute /= max(util, 1e-3)
+    vmem = (bq * d + bk * d * 2) * 2 + bq * (d + 2) * 4
+    return max(t_compute, t_memory), vmem
+
+
+def model_matmul(g, *, m=8192, n=8192, k=8192):
+    peak, bw = _peaks()
+    bm, bn, bk = g["block_m"], g["block_n"], g["block_k"]
+    if m % bm or n % bn or k % bk:
+        return None
+    tiles = (m // bm) * (n // bn) * (k // bk)
+    t_compute = 2 * m * n * k / peak
+    bytes_total = tiles * (bm * bk + bk * bn) * 2 + (m // bm) * (n // bn) * bm * bn * 2
+    t_memory = bytes_total / bw
+    util = min(bm, 128) / 128 * min(bn, 128) / 128 * min(bk, 128) / 128
+    vmem = (bm * bk + bk * bn) * 2 + bm * bn * 4
+    return max(t_compute / max(util, 1e-3), t_memory), vmem
+
+
+def model_wkv6(g, *, s=8192, h=32, kd=64, b=8):
+    peak, bw = _peaks()
+    c = g["chunk"]
+    if s % c:
+        return None
+    n_chunks = (s // c) * h * b
+    flops = n_chunks * (2 * c * kd * kd * 3 + 2 * c * c * kd * 2)
+    bytes_ = n_chunks * (4 * c * kd * 2 + c * kd * 4)
+    vmem = 5 * c * kd * 4 + kd * kd * 4
+    # small chunks underfill the MXU on the (c x c) intra matmul
+    util = min(c, 128) / 128
+    return max(flops / peak / max(util, 1e-3), bytes_ / bw), vmem
+
+
+ROOFLINE_MODELS = {
+    "flash": model_flash,
+    "matmul": model_matmul,
+    "wkv6": model_wkv6,
+}
+
+
+class RooflineTiming:
+    """Analytic genome scoring: modeled seconds from the v5e roofline,
+    ``None`` when the genome does not tile the benchmark shape or its
+    working set busts the VMEM budget (the g(p) != 0 constraint)."""
+
+    mode = "roofline"
+
+    def __init__(self, vmem_budget: int = VMEM_BUDGET):
+        self.vmem_budget = vmem_budget
+
+    def measure(self, request: TimingRequest) -> Optional[Measurement]:
+        if request.kernel is None or request.genome is None:
+            raise ValueError("RooflineTiming requires TimingRequest.kernel + genome")
+        model = ROOFLINE_MODELS.get(request.kernel)
+        if model is None:
+            raise KeyError(f"no roofline model for kernel {request.kernel!r}")
+        out = model(request.genome)
+        if out is None:
+            return None
+        t, vmem = out
+        if vmem > self.vmem_budget:
+            return None
+        return Measurement(
+            runtime_us=t * 1e6,
+            mode=self.mode,
+            runs=1,
+            kept=1,
+            outliers=0,
+            noise_floor_us=0.0,
+            vmem_bytes=int(vmem),
+        )
+
+
+# --------------------------------------------------------------------------
+# backend detection + factories
+# --------------------------------------------------------------------------
+
+_device_kind_cache: Optional[str] = None
+
+
+def normalize_device_kind(kind: str) -> str:
+    """Registry-key form of a jax ``device_kind`` string: lowercase,
+    non-alphanumerics collapsed to ``_`` ("TPU v5e" -> "tpu_v5e")."""
+    return re.sub(r"[^a-z0-9]+", "_", kind.lower()).strip("_") or "cpu"
+
+
+def device_kind() -> str:
+    """The attached backend's normalized device kind ("cpu" when jax is
+    unavailable or uninitialized-safe detection fails).  Cached: a
+    process's devices do not change."""
+    global _device_kind_cache
+    if _device_kind_cache is None:
+        try:
+            import jax
+
+            d = jax.devices()[0]
+            _device_kind_cache = normalize_device_kind(
+                getattr(d, "device_kind", None) or d.platform
+            )
+        except Exception:  # noqa: BLE001 — detection is best-effort
+            _device_kind_cache = "cpu"
+    return _device_kind_cache
+
+
+def has_accelerator() -> bool:
+    """True when jax sees a non-CPU backend (TPU/GPU)."""
+    try:
+        import jax
+
+        return jax.devices()[0].platform != "cpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def resolve_timing_mode(mode: str) -> str:
+    """``auto`` -> measured wall-clock when a real accelerator is attached,
+    the roofline model otherwise; explicit modes pass through."""
+    if mode == "auto":
+        return "wall" if has_accelerator() else "roofline"
+    if mode not in ("wall", "roofline", "simulated"):
+        raise ValueError(f"unknown timing mode {mode!r}")
+    return mode
+
+
+def provider_for(
+    mode: str,
+    *,
+    timing_runs: int = 15,
+    warmup_runs: int = 2,
+    clock: Optional[Callable[[], float]] = None,
+) -> TimingProvider:
+    """Build the provider for a (resolved) timing mode."""
+    mode = resolve_timing_mode(mode)
+    if mode == "wall":
+        return WallClockTiming(timing_runs=timing_runs, warmup_runs=warmup_runs, clock=clock)
+    if mode == "simulated":
+        return SimulatedTiming()
+    return RooflineTiming()
+
+
+def provider_from_config(config) -> TimingProvider:
+    """The evaluator's provider: ``EvalConfig.timing_mode`` plus its
+    run-count knobs (config is any object with timing_mode / timing_runs /
+    warmup_runs attributes)."""
+    return provider_for(
+        config.timing_mode,
+        timing_runs=config.timing_runs,
+        warmup_runs=config.warmup_runs,
+    )

@@ -45,8 +45,19 @@ def read_json(path: str) -> Dict[str, Any]:
 
 def update_json(path: str, updates: Dict[str, Any]) -> Dict[str, Any]:
     """Read-merge-atomically-rewrite a JSON object file; returns the merge."""
-    data = read_json(path)
-    data.update(updates)
+    return merge_json(path, lambda data: {**data, **updates})
+
+
+def merge_json(
+    path: str, merge_fn: Callable[[Dict[str, Any]], Dict[str, Any]]
+) -> Dict[str, Any]:
+    """Read-transform-atomically-rewrite: `merge_fn` receives the freshly
+    read file content and returns what to write.  Writers that build their
+    update *from* the existing content (e.g. layered registry entries)
+    must do the build inside `merge_fn` — reading the file separately and
+    then calling `update_json` leaves a stale-snapshot window where a
+    concurrent writer's keys are silently dropped."""
+    data = merge_fn(read_json(path))
     atomic_write(
         path,
         lambda f: (json.dump(data, f, indent=2, sort_keys=True), f.write("\n")),

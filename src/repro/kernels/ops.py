@@ -7,9 +7,11 @@ and CPU smoke tests compile.
 
 Block/chunk arguments left as ``None`` resolve through the tuned-genome
 registry (`repro.kernels.tuned`), i.e. the `launch/autotune.py --save`
-winners are the live defaults; explicit arguments always override.
-Resolution happens at trace time — the values are static, so each
-(shape, genome) signature compiles once.
+winners are the live defaults; explicit arguments always override.  The
+registry is device-aware: an entry measured on the attached backend's
+``device_kind`` outranks the device-agnostic (roofline-modeled) layer,
+which outranks the builtin fallbacks.  Resolution happens at trace time —
+the values are static, so each (shape, genome) signature compiles once.
 """
 
 from __future__ import annotations

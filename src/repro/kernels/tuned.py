@@ -7,10 +7,33 @@ block/chunk argument left as ``None`` through `get_tuned` — so an
 autotune run upgrades every caller's defaults instead of ending life as
 print-only JSON.  Passing explicit block sizes always wins.
 
-Entries merge over `_BUILTIN` (the safe hand-picked fallbacks), so a
-partial file or an unknown kernel never breaks dispatch.  ``_meta`` keys
-inside an entry record provenance (modeled time, trials, seed) and are
-ignored by `get_tuned`.
+Entries are layered per device kind.  On-disk schema per kernel:
+
+    {"flash": {
+        "block_q": 512, "block_k": 256,          # device-agnostic (modeled)
+        "_meta": {"source": "modeled", ...},
+        "_by_device": {
+            "tpu_v5e": {"block_q": 256, "block_k": 256,
+                         "_meta": {"source": "measured", "runs": 15,
+                                   "noise_floor_us": 1.2, ...}}}}}
+
+`get_tuned` resolution: knobs merge builtin fallbacks, then the flat
+device-agnostic entry, then the entry matching the *current* device kind
+(``repro.evaluation.timing.device_kind()``, overridable per call) — so a
+CPU host running the roofline autotuner can never silently shadow a
+TPU-measured winner: the modeled result lands in the device-agnostic
+layer while the measured one stays pinned to its device key.  On top of
+that, `save_tuned` refuses to overwrite a ``source="measured"`` entry
+with a ``source="modeled"`` one for the same device kind.
+
+``_meta`` keys record provenance (measured vs modeled, run count, noise
+floor, trials, seed) and are ignored by knob resolution; read them with
+`get_tuned_meta`.
+
+The in-memory registry caches per *path*: changing ``REPRO_TUNED_GENOMES``
+mid-process triggers a re-read on the next lookup (an explicit
+`invalidate` is only needed when the file changes underneath an unchanged
+path).
 
 Note: the jit'd dispatch wrappers resolve tuned defaults at trace time;
 a registry update during a process's lifetime only affects call
@@ -19,11 +42,11 @@ signatures not yet traced (``jax.clear_caches()`` forces re-resolution).
 
 from __future__ import annotations
 
-import copy
 import os
+import warnings
 from typing import Any, Dict, Optional
 
-from repro.ioutil import read_json, update_json
+from repro.ioutil import merge_json, read_json
 
 ENV_VAR = "REPRO_TUNED_GENOMES"
 _DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "tuned_genomes.json")
@@ -36,7 +59,10 @@ _BUILTIN: Dict[str, Dict[str, Any]] = {
     "rglru": {"chunk": 64},
 }
 
+# normalized form: {kernel: {"base": knobs, "base_meta": meta|None,
+#                            "devices": {kind: {"genome": knobs, "meta": meta}}}}
 _loaded: Optional[Dict[str, Dict[str, Any]]] = None
+_loaded_path: Optional[str] = None
 
 
 def genomes_path() -> str:
@@ -45,34 +71,102 @@ def genomes_path() -> str:
 
 def invalidate() -> None:
     """Drop the in-memory registry; next access re-reads the file."""
-    global _loaded
+    global _loaded, _loaded_path
     _loaded = None
+    _loaded_path = None
+
+
+def current_device_kind() -> str:
+    """The attached backend's normalized device kind (lazy import so this
+    module stays importable without initializing jax)."""
+    from repro.evaluation.timing import device_kind
+
+    return device_kind()
+
+
+def _knobs(entry: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: v for k, v in entry.items() if not k.startswith("_")}
+
+
+def _normalize(raw: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    out: Dict[str, Dict[str, Any]] = {}
+    for kernel, entry in raw.items():
+        if not isinstance(entry, dict):
+            continue
+        devices: Dict[str, Dict[str, Any]] = {}
+        for kind, sub in (entry.get("_by_device") or {}).items():
+            if isinstance(sub, dict):
+                devices[kind] = {"genome": _knobs(sub), "meta": sub.get("_meta") or {}}
+        out[kernel] = {
+            "base": _knobs(entry),
+            "base_meta": entry.get("_meta"),
+            "devices": devices,
+        }
+    return out
 
 
 def _load() -> Dict[str, Dict[str, Any]]:
-    global _loaded
-    if _loaded is None:
-        _loaded = copy.deepcopy(_BUILTIN)
-        path = genomes_path()
-        if os.path.exists(path):
-            for kernel, genome in read_json(path).items():
-                if isinstance(genome, dict):
-                    _loaded.setdefault(kernel, {}).update(
-                        {k: v for k, v in genome.items() if not k.startswith("_")}
-                    )
+    global _loaded, _loaded_path
+    path = genomes_path()
+    if _loaded is None or path != _loaded_path:
+        raw = read_json(path) if os.path.exists(path) else {}
+        _loaded = _normalize(raw)
+        _loaded_path = path
     return _loaded
 
 
-def get_tuned(kernel: str) -> Dict[str, Any]:
-    """The tuned genome for `kernel` (builtin fallbacks merged under file)."""
-    return dict(_load().get(kernel, {}))
+def get_tuned(kernel: str, device_kind: Optional[str] = None) -> Dict[str, Any]:
+    """The tuned genome for `kernel` on `device_kind` (default: the
+    attached backend).  Precedence per knob: device-matched entry >
+    device-agnostic entry > builtin fallback."""
+    entry = _load().get(kernel, {})
+    out = dict(_BUILTIN.get(kernel, {}))
+    out.update(entry.get("base", {}))
+    if entry.get("devices"):
+        kind = device_kind or current_device_kind()
+        dev = entry["devices"].get(kind)
+        if dev:
+            out.update(dev["genome"])
+    return out
 
 
-def resolve(kernel: str, knob: str, value: Any, fallback: Any) -> Any:
-    """Dispatch helper: explicit `value` wins, else tuned, else `fallback`."""
+def get_tuned_meta(
+    kernel: str, device_kind: Optional[str] = None
+) -> Optional[Dict[str, Any]]:
+    """Provenance of the entry `get_tuned` would resolve knobs from:
+    ``{"layer": "device"|"base", "device_kind": ..., "meta": {...}}``, or
+    ``None`` when only builtin fallbacks exist."""
+    entry = _load().get(kernel)
+    if not entry:
+        return None
+    if entry.get("devices"):
+        kind = device_kind or current_device_kind()
+        dev = entry["devices"].get(kind)
+        if dev:
+            return {"layer": "device", "device_kind": kind, "meta": dict(dev["meta"])}
+    if entry.get("base"):
+        return {"layer": "base", "device_kind": None, "meta": dict(entry.get("base_meta") or {})}
+    return None
+
+
+def resolve(
+    kernel: str,
+    knob: str,
+    value: Any,
+    fallback: Any,
+    device_kind: Optional[str] = None,
+) -> Any:
+    """Dispatch helper: explicit `value` wins, else tuned (device-aware),
+    else `fallback`."""
     if value is not None:
         return value
-    return _load().get(kernel, {}).get(knob, fallback)
+    return get_tuned(kernel, device_kind=device_kind).get(knob, fallback)
+
+
+def _source(meta: Optional[Dict[str, Any]]) -> str:
+    """Provenance class of a _meta dict; anything not explicitly measured
+    (including legacy pre-schema entries) counts as modeled."""
+    return "measured" if (meta or {}).get("source") == "measured" else "modeled"
 
 
 def save_tuned(
@@ -80,12 +174,63 @@ def save_tuned(
     genome: Dict[str, Any],
     meta: Optional[Dict[str, Any]] = None,
     path: Optional[str] = None,
+    device_kind: Optional[str] = None,
 ) -> str:
-    """Persist `genome` as the tuned default for `kernel` (atomic write)."""
+    """Persist `genome` as the tuned default for `kernel` (atomic write).
+
+    With `device_kind` the genome lands in that device's layer; without,
+    in the device-agnostic layer (where only modeled entries belong —
+    measured saves must carry their device kind, and `launch/autotune.py`
+    always passes it for wall-clock runs).  A modeled save can never
+    overwrite a measured entry for the same device kind: the measured
+    entry is kept and a RuntimeWarning is emitted.
+    """
     path = path or genomes_path()
-    entry = dict(genome)
-    if meta:
-        entry["_meta"] = meta
-    update_json(path, {kernel: entry})
+    if _source(meta) == "measured" and device_kind is None:
+        raise ValueError(
+            "measured genomes are device-specific: save_tuned requires "
+            "device_kind when meta['source'] == 'measured'"
+        )
+
+    refused = []
+
+    # the per-kernel merge runs against the content read inside the
+    # atomic rewrite — building the entry from a separate earlier read
+    # would let a concurrent saver's device layers be silently dropped
+    def merge(existing: Dict[str, Any]) -> Dict[str, Any]:
+        entry = dict(existing.get(kernel) or {})
+        if device_kind is not None:
+            by_dev = dict(entry.get("_by_device") or {})
+            prev = by_dev.get(device_kind)
+            if (
+                isinstance(prev, dict)
+                and _source(prev.get("_meta")) == "measured"
+                and _source(meta) == "modeled"
+            ):
+                refused.append(device_kind)
+                return existing
+            sub = dict(genome)
+            if meta:
+                sub["_meta"] = meta
+            by_dev[device_kind] = sub
+            entry["_by_device"] = by_dev
+        else:
+            by_dev = entry.get("_by_device")
+            entry = dict(genome)
+            if meta:
+                entry["_meta"] = meta
+            if by_dev:  # device layers survive a device-agnostic (modeled) save
+                entry["_by_device"] = by_dev
+        return {**existing, kernel: entry}
+
+    merge_json(path, merge)
+    if refused:
+        warnings.warn(
+            f"save_tuned({kernel!r}, device_kind={device_kind!r}): refusing "
+            "to overwrite a measured entry with a modeled one — re-run "
+            "with --timing wall on that device to replace it",
+            RuntimeWarning,
+            stacklevel=2,
+        )
     invalidate()
     return path

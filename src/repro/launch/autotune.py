@@ -2,10 +2,22 @@
 
 The paper's future-work §A.7.2 asks for "co-evolving kernels with their
 compilation parameters".  This driver runs the SAME evolution engine over
-the Pallas kernel genomes (block shapes / chunk sizes), scored by the
-analytic TPU v5e roofline model — CPU wall-clock cannot rank MXU tilings,
-so f(p) here is the modeled kernel time (compute term vs HBM term with a
-VMEM-fit constraint as g(p)).
+the Pallas kernel genomes (block shapes / chunk sizes), scored through
+the unified timing subsystem (`repro.evaluation.timing`):
+
+* ``--timing wall`` — measured on-hardware: each genome's kernel is built
+  at the benchmark shape and timed by `WallClockTiming` (warmup, IQR
+  outlier rejection, median of kept runs) *interleaved* with a baseline
+  run of the builtin genome, so slow clock drift cancels in the ranking
+  ratio.  The winner is saved per device kind with
+  ``_meta.source="measured"`` plus the run count and noise floor.
+* ``--timing roofline`` — the analytic TPU v5e model (`RooflineTiming`):
+  modeled kernel time (compute term vs HBM term with a VMEM-fit
+  constraint as g(p)).  The offline path; winners save device-agnostic
+  with ``_meta.source="modeled"`` and can never shadow a measured entry
+  (see `repro.kernels.tuned`).
+* ``--timing auto`` (default) — wall when `jax.devices()` reports a real
+  accelerator, roofline otherwise.
 
     PYTHONPATH=src python -m repro.launch.autotune --kernel flash --trials 40
 
@@ -17,87 +29,172 @@ block/chunk configuration (no more print-only JSON).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-from typing import Any, Dict
+from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
-from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.evaluation.timing import (
+    Measurement,
+    RooflineTiming,
+    TimingProvider,
+    TimingRequest,
+    WallClockTiming,
+    device_kind,
+    resolve_timing_mode,
+)
 
-VMEM_BYTES = 128 * 2**20  # v5e VMEM per core (we budget half for double-buffering)
-VMEM_BUDGET = VMEM_BYTES // 2
+# genome search spaces (the roofline models themselves live in
+# repro.evaluation.timing.ROOFLINE_MODELS)
+SPACES: Dict[str, Dict[str, list]] = {
+    "flash": {"block_q": [64, 128, 256, 512], "block_k": [64, 128, 256, 512]},
+    "matmul": {"block_m": [64, 128, 256, 512], "block_n": [64, 128, 256, 512], "block_k": [64, 128, 256, 512]},
+    "wkv6": {"chunk": [16, 32, 64, 128, 256]},
+}
 
-
-# --------------------------------------------------------------------------
-# analytic kernel models: (genome) -> (seconds, vmem_bytes)
-# --------------------------------------------------------------------------
-def model_flash(g, *, s=8192, h=32, d=128, b=1):
-    bq, bk = g["block_q"], g["block_k"]
-    if s % bq or s % bk:
-        return None
-    n_tiles = (s // bq) * (s // bk) * h * b
-    flops_tile = 2 * bq * bk * d * 2  # qk^T and pv
-    bytes_tile = (bq * d + 2 * bk * d) * 2  # q stays resident per q row
-    # causal: ~half the tiles contribute
-    t_compute = 0.5 * n_tiles * flops_tile / PEAK_FLOPS_BF16
-    t_memory = 0.5 * n_tiles * bytes_tile / HBM_BW
-    # MXU alignment penalty: dims below 128 underfill the systolic array
-    util = min(bq, 128) / 128 * min(bk, 128) / 128
-    t_compute /= max(util, 1e-3)
-    vmem = (bq * d + bk * d * 2) * 2 + bq * (d + 2) * 4
-    return max(t_compute, t_memory), vmem
-
-
-def model_matmul(g, *, m=8192, n=8192, k=8192):
-    bm, bn, bk = g["block_m"], g["block_n"], g["block_k"]
-    if m % bm or n % bn or k % bk:
-        return None
-    tiles = (m // bm) * (n // bn) * (k // bk)
-    t_compute = 2 * m * n * k / PEAK_FLOPS_BF16
-    bytes_total = tiles * (bm * bk + bk * bn) * 2 + (m // bm) * (n // bn) * bm * bn * 2
-    t_memory = bytes_total / HBM_BW
-    util = min(bm, 128) / 128 * min(bn, 128) / 128 * min(bk, 128) / 128
-    vmem = (bm * bk + bk * bn) * 2 + bm * bn * 4
-    return max(t_compute / max(util, 1e-3), t_memory), vmem
-
-
-def model_wkv6(g, *, s=8192, h=32, kd=64, b=8):
-    c = g["chunk"]
-    if s % c:
-        return None
-    n_chunks = (s // c) * h * b
-    flops = n_chunks * (2 * c * kd * kd * 3 + 2 * c * c * kd * 2)
-    bytes_ = n_chunks * (4 * c * kd * 2 + c * kd * 4)
-    vmem = 5 * c * kd * 4 + kd * kd * 4
-    # small chunks underfill the MXU on the (c x c) intra matmul
-    util = min(c, 128) / 128
-    return max(flops / PEAK_FLOPS_BF16 / max(util, 1e-3), bytes_ / HBM_BW), vmem
-
-
-KERNELS = {
-    "flash": (model_flash, {"block_q": [64, 128, 256, 512], "block_k": [64, 128, 256, 512]}),
-    "matmul": (model_matmul, {"block_m": [64, 128, 256, 512], "block_n": [64, 128, 256, 512], "block_k": [64, 128, 256, 512]}),
-    "wkv6": (model_wkv6, {"chunk": [16, 32, 64, 128, 256]}),
+# wall-mode benchmark shapes.  "paper" mirrors the roofline models'
+# defaults (what a v5e would be tuned at); "small" keeps interpret-mode
+# CPU measurement tractable so `--timing wall` works on any backend.
+BENCH_SHAPES: Dict[str, Dict[str, Dict[str, int]]] = {
+    "paper": {
+        "flash": dict(b=1, s=8192, h=32, d=128),
+        "matmul": dict(m=8192, n=8192, k=8192),
+        "wkv6": dict(b=8, s=8192, h=32, kd=64),
+    },
+    "small": {
+        "flash": dict(b=1, s=256, h=2, d=32),
+        "matmul": dict(m=256, n=256, k=256),
+        "wkv6": dict(b=1, s=256, h=2, kd=16),
+    },
 }
 
 
-def tune(kernel: str, trials: int, seed: int = 0) -> Dict[str, Any]:
+def _bench_thunk(kernel: str, genome: Dict[str, Any], shapes: Dict[str, int]) -> Optional[Callable[[], Any]]:
+    """A zero-arg callable running the kernel once with `genome`'s blocks
+    at the benchmark shape (blocking until the result is ready), or
+    ``None`` when the genome does not tile the shape.
+
+    The Pallas kernels are called directly (not through the ops wrappers,
+    whose module-level ``_INTERPRET`` flag governs interpret mode) with
+    ``interpret`` resolved from the attached backend: compiled on a real
+    accelerator, interpreter on CPU — a TPU "measured" entry must time
+    the compiled kernel, never the Python interpreter."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.evaluation.timing import has_accelerator
+    from repro.kernels.blocked_matmul import matmul_pallas
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.wkv6 import wkv6_pallas
+
+    interpret = not has_accelerator()
+    key = jax.random.key(0)
+    if kernel == "flash":
+        b, s, h, d = shapes["b"], shapes["s"], shapes["h"], shapes["d"]
+        if s % genome["block_q"] or s % genome["block_k"]:
+            return None
+        q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d), jnp.float32)
+        fn = jax.jit(
+            lambda q, k, v: flash_attention_pallas(
+                q, k, v, block_q=genome["block_q"], block_k=genome["block_k"],
+                interpret=interpret,
+            )
+        )
+        return lambda: jax.block_until_ready(fn(q, k, v))
+    if kernel == "matmul":
+        m, n, k_ = shapes["m"], shapes["n"], shapes["k"]
+        if m % genome["block_m"] or n % genome["block_n"] or k_ % genome["block_k"]:
+            return None
+        a = jax.random.normal(key, (m, k_), jnp.float32)
+        b_ = jax.random.normal(jax.random.fold_in(key, 1), (k_, n), jnp.float32)
+        fn = jax.jit(
+            lambda a, b: matmul_pallas(
+                a, b, block_m=genome["block_m"], block_n=genome["block_n"],
+                block_k=genome["block_k"], interpret=interpret,
+            )
+        )
+        return lambda: jax.block_until_ready(fn(a, b_))
+    if kernel == "wkv6":
+        b, s, h, kd = shapes["b"], shapes["s"], shapes["h"], shapes["kd"]
+        if s % genome["chunk"]:
+            return None
+        mk = lambda i: jax.random.normal(jax.random.fold_in(key, i), (b, s, h, kd)) * 0.5
+        r, k_, v = mk(1), mk(2), mk(3)
+        lw = -jnp.exp(mk(4) - 4.0)
+        u = jax.random.normal(jax.random.fold_in(key, 5), (h, kd)) * 0.1
+        fn = jax.jit(
+            lambda r, k, v, lw, u: wkv6_pallas(
+                r, k, v, lw, u, chunk=genome["chunk"], interpret=interpret
+            )
+        )
+        return lambda: jax.block_until_ready(fn(r, k_, v, lw, u))
+    raise KeyError(f"no wall-clock bench for kernel {kernel!r}")
+
+
+def _make_scorer(
+    kernel: str,
+    provider: TimingProvider,
+    bench: Optional[Callable[[Dict[str, Any]], Optional[Callable[[], Any]]]] = None,
+) -> Callable[[Dict[str, Any]], Optional[Measurement]]:
+    """genome -> Measurement|None through `provider`.  Roofline scores the
+    genome analytically; wall builds (or takes, for tests) a bench thunk
+    per genome and interleaves it with the builtin-genome baseline."""
+    if provider.mode == "roofline":
+        return lambda g: provider.measure(TimingRequest(kernel=kernel, genome=g))
+    if bench is None:
+        raise ValueError(f"timing mode {provider.mode!r} needs a bench builder")
+
+    from repro.kernels.tuned import _BUILTIN
+
+    baseline_thunk = bench(dict(_BUILTIN[kernel]))
+
+    def score(g: Dict[str, Any]) -> Optional[Measurement]:
+        thunk = bench(g)
+        if thunk is None:
+            return None
+        return provider.measure(
+            TimingRequest(thunk=thunk, baseline_thunk=baseline_thunk)
+        )
+
+    return score
+
+
+def tune(
+    kernel: str,
+    trials: int,
+    seed: int = 0,
+    provider: Optional[TimingProvider] = None,
+    bench: Optional[Callable[[Dict[str, Any]], Optional[Callable[[], Any]]]] = None,
+) -> Dict[str, Any]:
     """Hill-climb with the EvoEngineer-Full information regime: elite
-    population + measured-gain insights biasing knob selection."""
-    model, space = KERNELS[kernel]
+    population + measured-gain insights biasing knob selection.
+
+    The search trajectory depends only on ``(kernel, trials, seed)`` and
+    the scores: with the default `RooflineTiming` provider it reproduces
+    the historical modeled winners bit-for-bit (the scores are the same
+    analytic model values in the same trial order)."""
+    provider = provider or RooflineTiming()
+    space = SPACES[kernel]
     rng = np.random.default_rng(seed)
     history = []
-    elite: list = []  # (time, genome)
+    elite: list = []  # (rank_key, genome, measurement)
+    score = _make_scorer(kernel, provider, bench=bench)
+    # memoize by genome: revisited genomes (common — the spaces are small
+    # and 70% of trials mutate an elite) reuse their measurement instead
+    # of re-paying warmup+runs kernel executions in wall mode.  Scores are
+    # per-genome constants either way, so the search trajectory — and the
+    # roofline mode's bit-identity with the historical winners — is
+    # unchanged.  Elite may hold duplicate genomes, exactly as the
+    # historical algorithm did (deduping would change the trajectory).
+    memo: Dict[tuple, Optional[Measurement]] = {}
 
-    def score(g):
-        out = model(g)
-        if out is None:
-            return None
-        t, vmem = out
-        if vmem > VMEM_BUDGET:  # g(p) != 0: VMEM violation
-            return None
-        return t
+    def scored(g: Dict[str, Any]) -> Optional[Measurement]:
+        gkey = tuple(sorted(g.items()))
+        if gkey not in memo:
+            memo[gkey] = score(g)
+        return memo[gkey]
 
     for trial in range(trials):
         if elite and rng.random() < 0.7:
@@ -107,27 +204,55 @@ def tune(kernel: str, trials: int, seed: int = 0) -> Dict[str, Any]:
             g = base
         else:
             g = {k: v[int(rng.integers(len(v)))] for k, v in space.items()}
-        t = score(g)
-        history.append({"trial": trial, "genome": g, "time_us": None if t is None else t * 1e6})
-        if t is not None:
-            elite.append((t, g))
+        m = scored(g)
+        history.append(
+            {"trial": trial, "genome": g, "time_us": None if m is None else m.runtime_us}
+        )
+        if m is not None:
+            elite.append((m.rank, g, m))
             elite.sort(key=lambda e: e[0])
             del elite[4:]
-    best_t, best_g = elite[0]
-    return {
+    if not elite:
+        raise RuntimeError(
+            f"autotune({kernel}): no feasible genome in {trials} trials"
+        )
+    _, best_g, best_m = elite[0]
+    res = {
         "kernel": kernel,
+        "timing": provider.mode,
+        "device_kind": device_kind(),
         "best_genome": best_g,
-        "best_modeled_us": best_t * 1e6,
+        "best_us": best_m.runtime_us,
+        "best_measurement": best_m,
         "valid_rate": sum(1 for h in history if h["time_us"]) / len(history),
         "history": history,
     }
+    if provider.mode == "roofline":
+        # legacy key for historical consumers — modeled numbers only; a
+        # measured wall-clock must never masquerade as a roofline estimate
+        res["best_modeled_us"] = best_m.runtime_us
+    return res
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--kernel", choices=sorted(KERNELS), default="flash")
+    ap.add_argument("--kernel", choices=sorted(SPACES), default="flash")
     ap.add_argument("--trials", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--timing", choices=["auto", "wall", "roofline"], default="auto",
+        help="genome scoring: measured wall-clock, the analytic roofline "
+             "model, or auto (wall iff a real accelerator is attached)",
+    )
+    ap.add_argument(
+        "--bench-shape", choices=["auto", "small", "paper"], default="auto",
+        help="--timing wall benchmark shape: paper-scale (TPU) or small "
+             "(tractable in interpret mode); auto picks by backend",
+    )
+    ap.add_argument("--timing-runs", type=int, default=15,
+                    help="--timing wall: timed repeats per genome")
+    ap.add_argument("--warmup-runs", type=int, default=2,
+                    help="--timing wall: untimed warmups per genome")
     ap.add_argument("--out", default=None)
     ap.add_argument(
         "--save", action="store_true",
@@ -137,26 +262,58 @@ def main():
         "--save-path", default=None,
         help="registry file to write (default: the active tuned_genomes.json)",
     )
-    args = ap.parse_args()
-    res = tune(args.kernel, args.trials, args.seed)
-    print(f"kernel={res['kernel']} best={res['best_genome']} "
-          f"modeled={res['best_modeled_us']:.1f}us valid={res['valid_rate']:.2f}")
+    args = ap.parse_args(argv)
+
+    mode = resolve_timing_mode(args.timing)
+    kind = device_kind()
+    if mode == "wall":
+        from repro.evaluation.timing import has_accelerator
+
+        shape_preset = args.bench_shape
+        if shape_preset == "auto":
+            shape_preset = "paper" if has_accelerator() else "small"
+        provider: TimingProvider = WallClockTiming(
+            timing_runs=args.timing_runs, warmup_runs=args.warmup_runs
+        )
+        bench = lambda g: _bench_thunk(args.kernel, g, BENCH_SHAPES[shape_preset][args.kernel])
+        res = tune(args.kernel, args.trials, args.seed, provider=provider, bench=bench)
+        res["bench_shape"] = shape_preset
+    else:
+        res = tune(args.kernel, args.trials, args.seed, provider=RooflineTiming())
+
+    m: Measurement = res["best_measurement"]
+    noise = f" noise_floor={m.noise_floor_us:.1f}us" if mode == "wall" else ""
+    print(
+        f"kernel={res['kernel']} timing={mode} device={kind} "
+        f"best={res['best_genome']} {'measured' if mode == 'wall' else 'modeled'}"
+        f"={res['best_us']:.1f}us{noise} valid={res['valid_rate']:.2f}"
+    )
     if args.out:
+        out = {k: v for k, v in res.items() if k != "best_measurement"}
         with open(args.out, "w") as f:
-            json.dump(res, f, indent=2)
+            json.dump(out, f, indent=2)
     if args.save:
         from repro.kernels import tuned
 
+        meta = m.provenance()
+        meta.update({"trials": args.trials, "seed": args.seed})
+        if mode == "wall":
+            meta.update({
+                "device_kind": kind,
+                "measured_us": round(res["best_us"], 1),
+                "bench_shape": res["bench_shape"],
+            })
+        else:
+            meta.update({
+                "modeled_us": round(res["best_us"], 1),
+                "model": "v5e roofline",
+            })
         path = tuned.save_tuned(
             args.kernel,
             res["best_genome"],
-            meta={
-                "modeled_us": round(res["best_modeled_us"], 1),
-                "trials": args.trials,
-                "seed": args.seed,
-                "source": "repro.launch.autotune (v5e roofline model)",
-            },
+            meta=meta,
             path=args.save_path,
+            device_kind=kind if mode == "wall" else None,
         )
         print(f"saved tuned genome -> {path}")
 

@@ -1,0 +1,225 @@
+"""Autotuner + tuned-genome registry: measured vs modeled provenance.
+
+Covers the ISSUE-4 contracts:
+  * `--timing roofline` reproduces the committed modeled winners
+    bit-for-bit (the committed tuned_genomes.json is the fixture);
+  * wall-mode scoring goes through WallClockTiming with an interleaved
+    builtin-genome baseline (driven here by a scripted cost clock);
+  * `--save` round-trip: per-device_kind keys, `_meta` provenance schema,
+    get_tuned precedence (explicit arg > device-matched > device-agnostic
+    > builtin);
+  * a modeled entry can never override a measured entry for the same
+    device kind;
+  * the registry re-reads when REPRO_TUNED_GENOMES changes mid-process.
+"""
+
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.evaluation.timing import WallClockTiming, device_kind
+from repro.kernels import tuned
+from repro.launch import autotune
+
+COMMITTED = os.path.join(
+    os.path.dirname(tuned.__file__), "tuned_genomes.json"
+)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_registry(monkeypatch, tmp_path):
+    """Every test gets a private registry file; the committed one stays
+    untouched and the in-memory cache is reset around each test."""
+    monkeypatch.setenv(tuned.ENV_VAR, str(tmp_path / "tuned.json"))
+    tuned.invalidate()
+    yield
+    tuned.invalidate()
+
+
+# ---------------------------------------------------------------------------
+# roofline: today's modeled winners, bit-for-bit
+# ---------------------------------------------------------------------------
+def test_roofline_reproduces_committed_winners():
+    with open(COMMITTED) as f:
+        committed = json.load(f)
+    for kernel, entry in committed.items():
+        meta = entry["_meta"]
+        res = autotune.tune(kernel, meta["trials"], meta["seed"])
+        want = {k: v for k, v in entry.items() if not k.startswith("_")}
+        assert res["best_genome"] == want, kernel
+        assert round(res["best_modeled_us"], 1) == meta["modeled_us"], kernel
+        assert res["timing"] == "roofline"
+
+
+def test_tune_history_and_valid_rate_shape():
+    res = autotune.tune("wkv6", 10, seed=1)
+    assert len(res["history"]) == 10
+    assert {"trial", "genome", "time_us"} <= set(res["history"][0])
+    assert 0.0 < res["valid_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# wall-mode scoring through WallClockTiming (scripted cost clock)
+# ---------------------------------------------------------------------------
+class CostClock:
+    """perf_counter stand-in whose timed interval equals whatever cost the
+    last-run thunk deposited — genome cost becomes measured time."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.pending = 0.0
+        self._t0 = False
+
+    def __call__(self):
+        if not self._t0:
+            self._t0 = True
+            return self.t
+        self._t0 = False
+        self.t += self.pending
+        return self.t
+
+
+def test_tune_wall_ranks_by_interleaved_measurement():
+    clock = CostClock()
+
+    def bench(genome):
+        if genome["chunk"] > 64:
+            return None  # infeasible: does not tile the bench shape
+
+        def thunk():
+            clock.pending = genome["chunk"] * 1e-6  # cost = chunk µs
+
+        return thunk
+
+    provider = WallClockTiming(timing_runs=3, warmup_runs=1, clock=clock)
+    res = autotune.tune("wkv6", 12, seed=0, provider=provider, bench=bench)
+    assert res["timing"] == "wall"
+    assert res["best_genome"] == {"chunk": 16}  # cheapest feasible
+    assert res["best_us"] == pytest.approx(16.0)
+    m = res["best_measurement"]
+    # interleaved against the builtin genome (chunk=64)
+    assert m.baseline_us == pytest.approx(64.0)
+    assert m.rank == pytest.approx(16.0 / 64.0)
+    # infeasible genomes recorded as such, not silently dropped
+    infeasible = [h for h in res["history"] if h["time_us"] is None]
+    assert all(h["genome"]["chunk"] > 64 for h in infeasible)
+
+
+def test_tune_raises_when_nothing_feasible():
+    provider = WallClockTiming(timing_runs=1, warmup_runs=0, clock=CostClock())
+    with pytest.raises(RuntimeError, match="no feasible genome"):
+        autotune.tune("wkv6", 3, seed=0, provider=provider, bench=lambda g: None)
+
+
+# ---------------------------------------------------------------------------
+# --save round-trip: device keys, provenance, precedence
+# ---------------------------------------------------------------------------
+def test_autotune_cli_roofline_save_roundtrip(tmp_path):
+    path = str(tmp_path / "tuned.json")
+    autotune.main([
+        "--kernel", "wkv6", "--timing", "roofline", "--trials", "5", "--save",
+        "--save-path", path,
+    ])
+    data = json.load(open(path))
+    entry = data["wkv6"]
+    assert entry["_meta"]["source"] == "modeled"
+    assert entry["_meta"]["model"] == "v5e roofline"
+    assert "_by_device" not in entry  # modeled winners are device-agnostic
+    os.environ[tuned.ENV_VAR] = path  # monkeypatch fixture restores this
+    tuned.invalidate()
+    knobs = {k: v for k, v in entry.items() if not k.startswith("_")}
+    assert tuned.get_tuned("wkv6") == knobs
+    assert tuned.get_tuned("wkv6", device_kind="tpu_v5e") == knobs
+
+
+def test_save_measured_keys_by_device_kind(tmp_path):
+    path = str(tmp_path / "tuned.json")
+    meta = {"source": "measured", "runs": 15, "kept": 14, "outliers": 1,
+            "noise_floor_us": 2.5}
+    tuned.save_tuned("flash", {"block_q": 256, "block_k": 128}, meta=meta,
+                     path=path, device_kind="tpu_v5e")
+    raw = json.load(open(path))
+    sub = raw["flash"]["_by_device"]["tpu_v5e"]
+    assert sub["_meta"]["source"] == "measured"
+    assert sub["_meta"]["noise_floor_us"] == 2.5
+    assert sub["_meta"]["runs"] == 15
+
+    os.environ[tuned.ENV_VAR] = path
+    tuned.invalidate()
+    # device-matched > builtin
+    assert tuned.get_tuned("flash", device_kind="tpu_v5e") == {
+        "block_q": 256, "block_k": 128
+    }
+    # other device kinds fall through to builtin
+    assert tuned.get_tuned("flash", device_kind="cpu") == tuned._BUILTIN["flash"]
+    prov = tuned.get_tuned_meta("flash", device_kind="tpu_v5e")
+    assert prov["layer"] == "device" and prov["meta"]["source"] == "measured"
+    # explicit arg > device-matched tuned > builtin
+    assert tuned.resolve("flash", "block_q", 64, 128, device_kind="tpu_v5e") == 64
+    assert tuned.resolve("flash", "block_q", None, 128, device_kind="tpu_v5e") == 256
+    assert tuned.resolve("flash", "block_q", None, 111, device_kind="cpu") == 128
+
+
+def test_modeled_never_overrides_measured_same_device():
+    tuned.save_tuned("wkv6", {"chunk": 128},
+                     meta={"source": "measured", "runs": 9},
+                     device_kind="cpu")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        tuned.save_tuned("wkv6", {"chunk": 16},
+                         meta={"source": "modeled"}, device_kind="cpu")
+    assert any("refusing" in str(w.message) for w in caught)
+    assert tuned.get_tuned("wkv6", device_kind="cpu") == {"chunk": 128}
+    meta = tuned.get_tuned_meta("wkv6", device_kind="cpu")
+    assert meta["meta"] == {"source": "measured", "runs": 9}
+    # a device-agnostic modeled save coexists without shadowing it
+    tuned.save_tuned("wkv6", {"chunk": 32}, meta={"source": "modeled"})
+    assert tuned.get_tuned("wkv6", device_kind="cpu") == {"chunk": 128}
+    assert tuned.get_tuned("wkv6", device_kind="tpu_v5e") == {"chunk": 32}
+    # measured -> measured refresh IS allowed
+    tuned.save_tuned("wkv6", {"chunk": 256},
+                     meta={"source": "measured", "runs": 30}, device_kind="cpu")
+    assert tuned.get_tuned("wkv6", device_kind="cpu") == {"chunk": 256}
+
+
+def test_measured_save_requires_device_kind():
+    with pytest.raises(ValueError, match="device_kind"):
+        tuned.save_tuned("wkv6", {"chunk": 128}, meta={"source": "measured"})
+
+
+def test_legacy_flat_entries_still_resolve():
+    """Pre-schema files (knobs + _meta at top level, no _by_device) keep
+    working as device-agnostic modeled entries."""
+    path = os.environ[tuned.ENV_VAR]
+    with open(path, "w") as f:
+        json.dump({"matmul": {"block_m": 64, "_meta": {"trials": 40}}}, f)
+    tuned.invalidate()
+    got = tuned.get_tuned("matmul", device_kind="anything")
+    assert got["block_m"] == 64  # file overrides builtin
+    assert got["block_n"] == 256  # builtin fills the unlisted knobs
+    assert tuned.get_tuned_meta("matmul")["layer"] == "base"
+
+
+# ---------------------------------------------------------------------------
+# env-var re-read (the _loaded-cached-forever fix)
+# ---------------------------------------------------------------------------
+def test_env_var_change_rereads_registry(tmp_path):
+    a, b = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    json.dump({"wkv6": {"chunk": 32}}, open(a, "w"))
+    json.dump({"wkv6": {"chunk": 128}}, open(b, "w"))
+    os.environ[tuned.ENV_VAR] = a
+    tuned.invalidate()
+    assert tuned.get_tuned("wkv6", device_kind="cpu") == {"chunk": 32}
+    # no invalidate(): the path change alone must trigger the re-read
+    os.environ[tuned.ENV_VAR] = b
+    assert tuned.get_tuned("wkv6", device_kind="cpu") == {"chunk": 128}
+    os.environ[tuned.ENV_VAR] = a
+    assert tuned.get_tuned("wkv6", device_kind="cpu") == {"chunk": 32}
+
+
+def test_device_kind_is_a_sane_registry_key():
+    kind = device_kind()
+    assert kind and kind == kind.lower()
+    assert all(c.isalnum() or c == "_" for c in kind)

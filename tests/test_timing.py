@@ -1,0 +1,224 @@
+"""Unified timing subsystem: statistical hardening + regression locks.
+
+WallClockTiming is driven with a scripted fake clock so the statistics
+(warmup accounting, IQR outlier rejection, interleaved baseline, noise
+floor) are asserted deterministically without real hardware.
+SimulatedTiming is locked byte-for-byte against a committed fixture —
+any drift in the pseudo-runtime formula breaks bit-comparability with
+every recorded run, so that test failing is a release blocker, not a
+fixture refresh.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.evaluation import (
+    EvalConfig,
+    Evaluator,
+    ParallelEvaluator,
+    RooflineTiming,
+    SimulatedTiming,
+    TimingRequest,
+    WallClockTiming,
+    provider_for,
+    provider_from_config,
+    resolve_timing_mode,
+)
+from repro.evaluation.evaluator import _pseudo_runtime_us, source_key
+from repro.evaluation.timing import normalize_device_kind, pseudo_runtime_us
+from repro.tasks import get_task
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "simulated_runtimes.json")
+
+
+class FakeClock:
+    """Scripted clock: consecutive (t0, t1) call pairs are separated by the
+    next delta (seconds); time never goes backwards between pairs."""
+
+    def __init__(self, deltas):
+        self.deltas = list(deltas)
+        self.consumed = 0
+        self.t = 0.0
+        self._pending_t0 = False
+
+    def __call__(self):
+        if not self._pending_t0:
+            self._pending_t0 = True
+            return self.t
+        self._pending_t0 = False
+        self.t += self.deltas[self.consumed]
+        self.consumed += 1
+        return self.t
+
+
+US = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# WallClockTiming statistics
+# ---------------------------------------------------------------------------
+def test_wall_median_of_runs():
+    clock = FakeClock([100 * US] * 5)
+    m = WallClockTiming(timing_runs=5, warmup_runs=0, clock=clock).measure(
+        TimingRequest(thunk=lambda: None)
+    )
+    assert m.mode == "wall"
+    assert m.runtime_us == pytest.approx(100.0)
+    assert (m.runs, m.kept, m.outliers) == (5, 5, 0)
+    assert m.noise_floor_us == pytest.approx(0.0)
+
+
+def test_wall_rejects_injected_outlier():
+    # a 10 ms GC-pause-style spike among 90-110 µs samples must not move
+    # the reported median
+    clock = FakeClock([90 * US, 95 * US, 100 * US, 10_000 * US, 105 * US, 110 * US])
+    m = WallClockTiming(timing_runs=6, warmup_runs=0, clock=clock).measure(
+        TimingRequest(thunk=lambda: None)
+    )
+    assert m.outliers == 1
+    assert m.kept == 5
+    assert m.runtime_us == pytest.approx(100.0)
+
+
+def test_wall_respects_warmup():
+    calls = {"n": 0}
+
+    def thunk():
+        calls["n"] += 1
+
+    clock = FakeClock([100 * US] * 2)
+    m = WallClockTiming(timing_runs=2, warmup_runs=3, clock=clock).measure(
+        TimingRequest(thunk=thunk)
+    )
+    assert calls["n"] == 5  # 3 untimed warmups + 2 timed runs
+    assert clock.consumed == 2  # warmups never touch the clock
+    assert m.runs == 2
+
+
+def test_wall_interleaves_baseline_and_cancels_drift():
+    # alternating B,C,B,C... samples: baseline 200 µs, candidate 100 µs
+    clock = FakeClock([200 * US, 100 * US] * 4)
+    order = []
+    m = WallClockTiming(timing_runs=4, warmup_runs=1, clock=clock).measure(
+        TimingRequest(
+            thunk=lambda: order.append("C"), baseline_thunk=lambda: order.append("B")
+        )
+    )
+    assert m.baseline_us == pytest.approx(200.0)
+    assert m.runtime_us == pytest.approx(100.0)
+    assert m.rank == pytest.approx(0.5)  # drift-cancelled ratio
+    # strictly interleaved, warmup included
+    assert order == ["B", "C"] * 5
+
+
+def test_wall_noise_floor_is_kept_sample_iqr():
+    clock = FakeClock([90 * US, 95 * US, 100 * US, 105 * US, 110 * US])
+    m = WallClockTiming(timing_runs=5, warmup_runs=0, clock=clock).measure(
+        TimingRequest(thunk=lambda: None)
+    )
+    assert m.kept == 5
+    assert m.noise_floor_us == pytest.approx(10.0)  # q3(105) - q1(95)
+
+
+def test_wall_deterministic_under_fake_clock():
+    deltas = [103 * US, 99 * US, 100 * US, 5_000 * US, 101 * US]
+    runs = [
+        WallClockTiming(timing_runs=5, warmup_runs=1, clock=FakeClock(deltas)).measure(
+            TimingRequest(thunk=lambda: None)
+        )
+        for _ in range(2)
+    ]
+    assert runs[0] == runs[1]
+
+
+def test_wall_requires_thunk_and_valid_runs():
+    with pytest.raises(ValueError):
+        WallClockTiming(timing_runs=0)
+    with pytest.raises(ValueError):
+        WallClockTiming(timing_runs=1).measure(TimingRequest())
+
+
+# ---------------------------------------------------------------------------
+# SimulatedTiming: byte-identical to the historical pseudo-runtime path
+# ---------------------------------------------------------------------------
+def test_simulated_matches_committed_fixture():
+    with open(FIXTURE) as f:
+        fixture = json.load(f)
+    assert fixture  # guard against an emptied fixture silently passing
+    prov = SimulatedTiming()
+    for key, want_us in fixture.items():
+        m = prov.measure(TimingRequest(key=key))
+        assert m.runtime_us == want_us, key  # exact, not approx
+        assert m.noise_floor_us == 0.0
+        assert pseudo_runtime_us(key) == want_us
+
+
+def test_simulated_evaluator_path_unchanged():
+    """End-to-end: Evaluator(timing_mode="simulated") reports exactly the
+    historical formula value for a real task's naive source."""
+    task = get_task("act_relu")
+    ev = Evaluator(EvalConfig(n_correctness=1, timing_runs=3, warmup_runs=1,
+                              timing_mode="simulated"))
+    res = ev.evaluate(task, task.initial_source)
+    sha = source_key(task.name, task.initial_source)[1]
+    assert res.valid
+    assert res.runtime_us == _pseudo_runtime_us(task.name, sha)
+    assert res.runtime_us == pseudo_runtime_us(f"{task.name}:{sha}")
+    assert res.noise_floor_us == 0.0
+
+
+# ---------------------------------------------------------------------------
+# RooflineTiming + factories
+# ---------------------------------------------------------------------------
+def test_roofline_scores_and_feasibility():
+    prov = RooflineTiming()
+    m = prov.measure(TimingRequest(kernel="flash", genome={"block_q": 512, "block_k": 256}))
+    assert m is not None and round(m.runtime_us, 1) == 2790.6  # committed winner
+    assert m.vmem_bytes and m.vmem_bytes > 0
+    # non-tiling genome: infeasible, not an error
+    assert prov.measure(TimingRequest(kernel="flash", genome={"block_q": 96, "block_k": 128})) is None
+    # VMEM budget as g(p): same genome, tiny budget -> infeasible
+    tight = RooflineTiming(vmem_budget=1000)
+    assert tight.measure(TimingRequest(kernel="flash", genome={"block_q": 512, "block_k": 256})) is None
+    with pytest.raises(KeyError):
+        prov.measure(TimingRequest(kernel="nope", genome={}))
+
+
+def test_mode_resolution_and_factories():
+    # this suite runs on CPU hosts: auto must fall back to the roofline
+    assert resolve_timing_mode("auto") in ("wall", "roofline")
+    import jax
+
+    if jax.devices()[0].platform == "cpu":
+        assert resolve_timing_mode("auto") == "roofline"
+    with pytest.raises(ValueError):
+        resolve_timing_mode("vibes")
+    assert isinstance(provider_for("simulated"), SimulatedTiming)
+    assert isinstance(provider_for("roofline"), RooflineTiming)
+    wall = provider_from_config(EvalConfig(timing_runs=7, warmup_runs=3, timing_mode="wall"))
+    assert isinstance(wall, WallClockTiming)
+    assert (wall.timing_runs, wall.warmup_runs) == (7, 3)
+    assert isinstance(
+        provider_from_config(EvalConfig(timing_mode="simulated")), SimulatedTiming
+    )
+
+
+def test_normalize_device_kind():
+    assert normalize_device_kind("TPU v5e") == "tpu_v5e"
+    assert normalize_device_kind("cpu") == "cpu"
+    assert normalize_device_kind("NVIDIA H100 80GB HBM3") == "nvidia_h100_80gb_hbm3"
+
+
+def test_parallel_evaluator_rejects_provider_instance():
+    with pytest.raises(ValueError, match="timing provider"):
+        ParallelEvaluator(EvalConfig(), timing=SimulatedTiming())
+
+
+def test_evaluator_rejects_roofline_mode():
+    # roofline scores (kernel, genome) pairs — it cannot time candidates
+    with pytest.raises(ValueError, match="roofline"):
+        Evaluator(EvalConfig(timing_mode="roofline"))
+    with pytest.raises(ValueError):
+        Evaluator(EvalConfig(timing_mode="vibes"))
