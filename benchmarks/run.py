@@ -38,6 +38,10 @@ def main():
     ap.add_argument("--bench-eval-throughput", action="store_true",
                     help="also measure serial-vs-parallel evaluation "
                          "throughput and write BENCH_eval_throughput.json")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the serving benchmark (fixed-batch dense vs "
+                         "continuous+paged) through the shared --timing "
+                         "flag and write BENCH_serve_throughput.json")
     ap.add_argument("--distributed", action="store_true",
                     help="run the sweep as one work-stealing driver over "
                          "the shared results file (start the same command "
@@ -55,6 +59,17 @@ def main():
         table7_speedup_dist,
         table8_aice,
     )
+
+    if args.serve:
+        from benchmarks import serve_throughput
+
+        print("\n### Serving throughput (fixed vs continuous, dense vs paged) ###")
+        serve_throughput.run(
+            argparse.Namespace(
+                timing=args.timing, timing_runs=3, seed=0, page_size=None,
+                out="BENCH_serve_throughput.json",
+            )
+        )
 
     if args.bench_eval_throughput:
         from benchmarks import eval_throughput

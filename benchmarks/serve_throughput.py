@@ -1,0 +1,210 @@
+"""Serving throughput: fixed-batch dense engine vs continuous+paged.
+
+Drives the three serving configurations over one seeded mixed-length
+request trace and reports decode tokens/sec two ways:
+
+* **simulated clock** (deterministic, the CI gate): every batch-wide
+  decode step costs one tick regardless of host speed, so the metric
+  ``tokens per slot-step`` isolates the *scheduling* win — the
+  fixed-batch engine burns slot-steps idling finished lanes until the
+  batch's longest request completes, continuous batching recycles them.
+  The ratio is a pure function of the trace and ``sync_interval``.
+* **wall clock** (`repro.evaluation.timing.WallClockTiming`): the full
+  run measured with warmup + IQR outlier rejection, noise floor
+  reported beside every number (two configs within the floor are
+  indistinguishable — say so, don't rank them).
+
+The paged arm also reports KV-cache memory: the dense layout pays
+``slots * max_len`` per layer up front, paging pays only the pages the
+trace actually touched (peak), plus the null page.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput \
+        [--timing {simulated,wall}] [--out BENCH_serve_throughput.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from typing import Dict, List
+
+import numpy as np
+
+# mixed-length trace: high variance in max_new is exactly the shape that
+# starves a fixed batch (one 32-token straggler pins three finished lanes)
+TRACE_NEW_TOKENS = [32, 2, 24, 4, 16, 6, 28, 8, 2, 32, 4, 20, 6, 24, 2, 12]
+PROMPT_LEN = 8
+SLOTS = 4
+SYNC_INTERVAL = 2
+
+
+def build_trace(cfg, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(
+        0, cfg.vocab_size, (len(TRACE_NEW_TOKENS), PROMPT_LEN), dtype=np.int64
+    )
+    return prompts, list(TRACE_NEW_TOKENS)
+
+
+def _dense_cache_bytes(cfg, slots: int, max_len: int) -> int:
+    import jax
+
+    from repro.models.transformer import cache_specs
+
+    leaves = jax.tree_util.tree_leaves(cache_specs(cfg, slots, max_len))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves)
+
+
+def run(ns) -> Dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.evaluation.timing import WallClockTiming
+    from repro.models.transformer import init_params
+    from repro.serve.engine import ServeEngine
+    from repro.serve.scheduler import ContinuousBatchingEngine, Request
+
+    cfg = dataclasses.replace(
+        get_config("qwen25_32b", smoke=True), compute_dtype="float32"
+    )
+    params = init_params(jax.random.key(0), cfg)
+    prompts, lens = build_trace(cfg, seed=ns.seed)
+    n_req = len(lens)
+    max_len = PROMPT_LEN + max(lens) + 1
+    total_tokens = sum(lens)
+    # the tuned flash_decode genome is sized for the paper decode shape
+    # (8k contexts); at this smoke-scale trace a page would swallow the
+    # whole horizon, so default to a trace-proportionate page size
+    page_size = ns.page_size or 8
+
+    reqs = [
+        Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
+        for i in range(n_req)
+    ]
+
+    # one engine per configuration, shared across timing runs — a fresh
+    # engine per run would re-jit and charge compilation to the wall clock
+    fixed_eng = ServeEngine(cfg, params, max_len=max_len)
+
+    def run_fixed() -> int:
+        """Seed engine: waves of SLOTS requests, each wave runs to its
+        longest request.  Returns slot-steps consumed."""
+        steps = 0
+        for i in range(0, n_req, SLOTS):
+            chunk = list(range(i, min(i + SLOTS, n_req)))
+            fixed_eng.generate(
+                jnp.asarray(prompts[chunk]), steps=max(lens[j] for j in chunk)
+            )
+            # charge the lanes the wave actually ran (a short final wave
+            # runs a smaller batch, not SLOTS idle lanes)
+            steps += fixed_eng.last_stats["decode_steps"] * len(chunk)
+        return steps
+
+    engines: Dict[str, Dict] = {}
+    engines["fixed_dense"] = {"slot_steps": run_fixed()}
+
+    cont: Dict[str, ContinuousBatchingEngine] = {}
+    for layout in ("dense", "paged"):
+        cbe = ContinuousBatchingEngine(
+            cfg, params, slots=SLOTS, max_len=max_len, cache_layout=layout,
+            page_size=page_size, sync_interval=SYNC_INTERVAL,
+        )
+        comps = cbe.run(reqs)
+        assert sum(len(c.tokens) for c in comps) == total_tokens
+        cont[layout] = cbe
+        engines[f"continuous_{layout}"] = {
+            "slot_steps": cbe.stats["decode_steps"] * SLOTS,
+            "prefills": cbe.stats["prefills"],
+        }
+
+    for name, rec in engines.items():
+        rec["tokens"] = total_tokens
+        rec["tokens_per_slot_step"] = round(total_tokens / rec["slot_steps"], 4)
+
+    base = engines["fixed_dense"]["tokens_per_slot_step"]
+    speedup_sim = engines["continuous_paged"]["tokens_per_slot_step"] / base
+
+    # KV memory: dense slabs vs pages actually touched
+    paged_stats = cont["paged"].stats
+    per_token = _dense_cache_bytes(cfg, SLOTS, max_len) / (SLOTS * max_len)
+    mem = {
+        "dense_cache_bytes": _dense_cache_bytes(cfg, SLOTS, max_len),
+        "paged_peak_pages": paged_stats["peak_pages"],
+        "page_size": paged_stats["page_size"],
+        "paged_peak_bytes_est": int(
+            (1 + paged_stats["peak_pages"]) * paged_stats["page_size"] * per_token
+        ),
+    }
+
+    out = {
+        "bench": "serve_throughput",
+        "arch": cfg.name,
+        "timing": ns.timing,
+        "trace": {
+            "requests": n_req,
+            "prompt_len": PROMPT_LEN,
+            "new_tokens": lens,
+            "slots": SLOTS,
+            "sync_interval": SYNC_INTERVAL,
+            "seed": ns.seed,
+        },
+        "engines": engines,
+        "memory": mem,
+        "speedup_simulated": round(speedup_sim, 3),
+    }
+
+    if ns.timing == "wall":
+        timer = WallClockTiming(timing_runs=ns.timing_runs, warmup_runs=1)
+        from repro.evaluation.timing import TimingRequest
+
+        def wall(thunk):
+            m = timer.measure(TimingRequest(thunk=thunk))
+            return {
+                "wall_s": round(m.runtime_us / 1e6, 4),
+                "noise_floor_s": round(m.noise_floor_us / 1e6, 4),
+                "runs": m.runs,
+                "kept": m.kept,
+                "tokens_per_s": round(total_tokens / (m.runtime_us / 1e6), 2),
+            }
+
+        engines["fixed_dense"].update(wall(run_fixed))
+        for layout in ("dense", "paged"):
+            engines[f"continuous_{layout}"].update(
+                wall(lambda layout=layout: cont[layout].run(reqs))
+            )
+        fw = engines["fixed_dense"]["wall_s"]
+        pw = engines["continuous_paged"]["wall_s"]
+        out["speedup_wall"] = round(fw / pw, 3)
+        floor = max(
+            engines["fixed_dense"]["noise_floor_s"],
+            engines["continuous_paged"]["noise_floor_s"],
+        )
+        out["wall_distinguishable"] = bool(abs(fw - pw) > floor)
+
+    print(json.dumps(out, indent=2))
+    if ns.out:
+        with open(ns.out, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timing", choices=["simulated", "wall"], default="simulated",
+                    help="simulated = deterministic slot-step accounting "
+                         "(the CI gate); wall = measured end-to-end with "
+                         "outlier rejection + noise floor")
+    ap.add_argument("--timing-runs", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="override the tuned flash_decode page size")
+    ap.add_argument("--out", default="BENCH_serve_throughput.json")
+    args = ap.parse_args(argv)
+    return run(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -285,8 +285,36 @@ def model_wkv6(g, *, s=8192, h=32, kd=64, b=8):
     return max(flops / peak / max(util, 1e-3), bytes_ / bw), vmem
 
 
+def model_flash_decode(g, *, b=32, s=8192, h=32, kvh=8, d=128):
+    """Paged flash-decode at the serving shape: one query token per
+    sequence against an s-token paged KV history.  Decode attention is
+    HBM-bound, so the model is a bandwidth term plus two overheads the
+    genome actually trades off: per-page DMA issue cost (small pages ->
+    more descriptors) and per-grid-step cost (small tiles -> longer
+    sequential split-K sweep), with a tail-waste factor for the
+    partially-filled last tile of each sequence."""
+    peak, bw = _peaks()
+    ps, bp = g["page_size"], g["block_pages"]
+    if s % ps or (s // ps) % bp:
+        return None
+    tile = ps * bp
+    grp = h // kvh
+    # K+V bf16 traffic, read once per kv head (the GQA-grouped grid)
+    t_memory = b * kvh * (2 * s * d * 2) * (1.0 + tile / (2.0 * s)) / bw
+    flops = b * h * s * d * 2 * 2
+    util = min(tile, 128) / 128 * min(grp, 128) / 128
+    t_compute = flops / peak / max(util, 1e-3)
+    n_tiles = b * kvh * (s // tile)
+    n_pages = b * kvh * (s // ps)
+    t_overhead = n_tiles * 150e-9 + n_pages * 2 * 30e-9
+    # gather buffers (pool dtype) + fp32 softmax state per group
+    vmem = 2 * tile * d * 2 + grp * (d + 2) * 4
+    return max(t_compute, t_memory) + t_overhead, vmem
+
+
 ROOFLINE_MODELS = {
     "flash": model_flash,
+    "flash_decode": model_flash_decode,
     "matmul": model_matmul,
     "wkv6": model_wkv6,
 }

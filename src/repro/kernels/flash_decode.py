@@ -1,0 +1,198 @@
+"""Pallas flash-decode: single-query attention over a *paged* KV cache.
+
+Serving decode is the one attention shape the training kernels cannot
+serve well: one new query token per sequence against a long, ragged,
+append-only KV history.  A dense cache pads every sequence to the decode
+horizon and re-reads the padding every step; this kernel instead reads a
+page pool — fixed-size pages shared by all sequences, wired together by a
+per-sequence *block table* (the vLLM layout) — so HBM traffic per step is
+proportional to the tokens actually cached.
+
+Structure (the TPU paged-attention idiom):
+
+* Pools stay in HBM (``memory_space=ANY``): shape (KV, P, page_size, D),
+  contiguous per (kv head, page) so a page fetch is one simple DMA.
+* The block table and per-sequence lengths ride in as *scalar prefetch*
+  arguments (`pltpu.PrefetchScalarGridSpec`) — available before the body
+  runs, exactly what the DMA source indices need.
+* Grid is (B * KV_heads, num_page_chunks) with the page-chunk axis
+  innermost and sequential: a split-K sweep over the sequence.  Each step
+  gathers ``block_pages`` pages into a VMEM buffer with per-page async
+  copies, then runs one online-softmax update; the (m, l, acc) state
+  lives in VMEM scratch across chunks and is finalized on the last chunk
+  (the same merge structure as flash_attention.py).
+* GQA is zero-copy by construction: one grid step loads a kv head's
+  pages ONCE and applies all ``h // kv_heads`` query heads of the group
+  against them as rows of a single (g, page_tokens) dot — the decode-side
+  analogue of flash_attention.py's ``bh // group`` index_map trick
+  (there: g query-head programs share one kv tile; here: one program
+  carries the g query rows).  Nothing ever materializes repeated K/V.
+* Chunks entirely past a sequence's length are skipped (`pl.when`), so
+  short sequences cost proportionally less even inside a long grid.
+
+``(page_size, block_pages)`` is the kernel genome: page_size sets the
+allocator granularity and DMA size, block_pages how many pages are fused
+into one compute tile.  `launch/autotune.py --kernel flash_decode`
+searches both (roofline model in `repro.evaluation.timing`, measured
+wall-clock on hardware) and `repro.kernels.tuned` persists the winners.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_decode_kernel(
+    bt_ref,      # scalar prefetch: (B, MP) int32 block tables
+    len_ref,     # scalar prefetch: (B,) int32 valid lengths
+    q_ref,       # (1, g, d) query rows of one kv group
+    k_hbm,       # (KV, P, ps, d) page pool, HBM-resident
+    v_hbm,       # (KV, P, ps, dv) page pool, HBM-resident
+    o_ref,       # (1, g, dv)
+    k_buf,       # VMEM (bp*ps, d) gather buffer
+    v_buf,       # VMEM (bp*ps, dv)
+    m_scr,       # VMEM (g, 1) running max
+    l_scr,       # VMEM (g, 1) running denom
+    acc_scr,     # VMEM (g, dv) output accumulator
+    k_sem,
+    v_sem,
+    *,
+    bp: int,
+    ps: int,
+    kvh: int,
+    scale: float,
+    cap: Optional[float],
+    nc: int,
+):
+    i = pl.program_id(0)  # b * kvh + kv
+    c = pl.program_id(1)  # page chunk (sequential split-K axis)
+    b = i // kvh
+    kv = i % kvh
+
+    @pl.when(c == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ln = len_ref[b]
+    start = c * bp * ps
+
+    # chunks entirely past this sequence's history contribute nothing:
+    # skip the DMAs and the update, leave the scratch state untouched
+    @pl.when(start < ln)
+    def _body():
+        for j in range(bp):  # static unroll: per-page gather DMAs
+            pg = bt_ref[b, c * bp + j]
+            ck = pltpu.make_async_copy(
+                k_hbm.at[kv, pg], k_buf.at[pl.ds(j * ps, ps)], k_sem
+            )
+            cv = pltpu.make_async_copy(
+                v_hbm.at[kv, pg], v_buf.at[pl.ds(j * ps, ps)], v_sem
+            )
+            ck.start()
+            cv.start()
+            ck.wait()
+            cv.wait()
+        q = q_ref[0]  # (g, d)
+        s = jax.lax.dot_general(
+            q, k_buf[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * scale
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        tpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tpos < ln, s, NEG_INF)
+        # chunk 0 always holds token 0, so by the time a fully-masked tile
+        # could update the state, m is already finite — exp(NEG_INF - m)
+        # underflows to exactly 0 and masked slots never pollute l/acc.
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_buf.dtype), v_buf[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+
+    @pl.when(c == nc - 1)
+    def _finalize():
+        # a never-admitted slot (length 0) skipped every chunk: l == 0 and
+        # the guarded divide emits exact zeros instead of NaN
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_decode_pallas(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    logit_cap: Optional[float] = None,
+    block_pages: int = 4,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, 1, H, D); pools: (KV, P, page_size, D); block_tables:
+    (B, max_pages) int32 page ids (0 = the reserved null page); lengths:
+    (B,) valid token counts.  Returns (B, 1, H, Dv)."""
+    b, one, h, d = q.shape
+    assert one == 1, q.shape
+    kvh, _, ps, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    mp = block_tables.shape[1]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    bp = min(block_pages, mp)
+    assert mp % bp == 0, (mp, bp)
+    nc = mp // bp
+
+    # heads of one kv group are contiguous in H, so the (B*KV, g, d) view
+    # is a pure reshape — no transpose, no copy
+    qf = q.reshape(b * kvh, g, d)
+
+    kernel = functools.partial(
+        _flash_decode_kernel,
+        bp=bp, ps=ps, kvh=kvh, scale=d**-0.5, cap=logit_cap, nc=nc,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * kvh, nc),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, c, bt, ln: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, g, dv), lambda i, c, bt, ln: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bp * ps, d), k_pages.dtype),
+            pltpu.VMEM((bp * ps, dv), v_pages.dtype),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, g, dv), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qf,
+      k_pages, v_pages)
+    return out.reshape(b, 1, h, dv)

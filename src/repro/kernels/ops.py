@@ -17,6 +17,7 @@ the values are static, so each (shape, genome) signature compiles once.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -25,11 +26,31 @@ from repro.kernels import ref as _ref
 from repro.kernels import tuned as _tuned
 from repro.kernels.blocked_matmul import matmul_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.rglru import rglru_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.wkv6 import wkv6_pallas
 
-_INTERPRET = True  # flip to False on real TPU hardware
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def _interpret() -> bool:
+    """Interpret iff no real accelerator is attached — the same rule
+    `launch/autotune.py` uses for its bench thunks (the old hand-flipped
+    module constant silently ran the Python interpreter on TPUs).  The
+    ``REPRO_PALLAS_INTERPRET`` env var (0/1) overrides for tests.
+
+    Resolution happens at *trace* time, like the tuned-genome defaults:
+    a signature the jit wrappers already compiled keeps its baked-in
+    interpret flag, so an env change mid-process only affects call
+    signatures not yet traced (``jax.clear_caches()`` forces
+    re-resolution)."""
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "")
+    from repro.evaluation.timing import has_accelerator
+
+    return not has_accelerator()
 
 
 def _dispatch(backend: str):
@@ -61,9 +82,36 @@ def flash_attention(q, k, v, *, logit_cap=None, block_q=None, block_k=None, back
     if _dispatch(backend):
         return flash_attention_pallas(
             q, k, v, logit_cap=logit_cap, block_q=block_q, block_k=block_k,
-            interpret=_INTERPRET,
+            interpret=_interpret(),
         )
     return _ref.flash_attention_ref(q, k, v, logit_cap=logit_cap)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("logit_cap", "block_pages", "backend")
+)
+def flash_decode(
+    q, k_pages, v_pages, block_tables, lengths, *,
+    logit_cap=None, block_pages=None, backend="pallas_interpret",
+):
+    """Paged single-query decode attention.  q: (B, 1, H, D); pools:
+    (KV, P, page_size, D); block_tables: (B, max_pages); lengths: (B,).
+
+    ``block_pages`` (pages fused per compute tile) resolves through the
+    tuned registry and degrades to a divisor of max_pages; ``page_size``
+    is a *layout* knob — it is baked into the pool shapes by
+    `serve.paged_cache`, which reads the same tuned genome."""
+    mp = block_tables.shape[1]
+    block_pages = _fit("flash_decode", "block_pages", block_pages, 4, mp)
+    if _dispatch(backend):
+        return flash_decode_pallas(
+            q, k_pages, v_pages, block_tables, lengths,
+            logit_cap=logit_cap, block_pages=block_pages,
+            interpret=_interpret(),
+        )
+    return _ref.flash_decode_ref(
+        q, k_pages, v_pages, block_tables, lengths, logit_cap=logit_cap
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "backend"))
@@ -74,7 +122,7 @@ def matmul(a, b, *, block_m=None, block_n=None, block_k=None, backend="pallas_in
     if _dispatch(backend):
         return matmul_pallas(
             a, b, block_m=block_m, block_n=block_n, block_k=block_k,
-            interpret=_INTERPRET,
+            interpret=_interpret(),
         )
     return _ref.matmul_ref(a, b)
 
@@ -85,7 +133,7 @@ def rmsnorm(x, scale, *, eps=1e-6, block_rows=None, backend="pallas_interpret"):
     block_rows = _tuned.resolve("rmsnorm", "block_rows", block_rows, 128)
     if _dispatch(backend):
         return rmsnorm_pallas(
-            x, scale, eps=eps, block_rows=block_rows, interpret=_INTERPRET
+            x, scale, eps=eps, block_rows=block_rows, interpret=_interpret()
         )
     return _ref.rmsnorm_ref(x, scale, eps=eps)
 
@@ -94,7 +142,7 @@ def rmsnorm(x, scale, *, eps=1e-6, block_rows=None, backend="pallas_interpret"):
 def wkv6(r, k, v, log_w, u, *, chunk=None, backend="pallas_interpret"):
     chunk = _fit("wkv6", "chunk", chunk, 64, r.shape[1])
     if _dispatch(backend):
-        return wkv6_pallas(r, k, v, log_w, u, chunk=chunk, interpret=_INTERPRET)
+        return wkv6_pallas(r, k, v, log_w, u, chunk=chunk, interpret=_interpret())
     return _ref.wkv6_ref(r, k, v, log_w, u, chunk=chunk)
 
 
@@ -102,5 +150,5 @@ def wkv6(r, k, v, log_w, u, *, chunk=None, backend="pallas_interpret"):
 def rglru(a, b, *, chunk=None, backend="pallas_interpret"):
     chunk = _fit("rglru", "chunk", chunk, 64, a.shape[1])
     if _dispatch(backend):
-        return rglru_pallas(a, b, chunk=chunk, interpret=_INTERPRET)
+        return rglru_pallas(a, b, chunk=chunk, interpret=_interpret())
     return _ref.rglru_ref(a, b)

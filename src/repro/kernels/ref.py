@@ -14,6 +14,30 @@ def flash_attention_ref(q, k, v, *, logit_cap: Optional[float] = None):
     return full_attention(q, k, v, causal=True, logit_cap=logit_cap)
 
 
+def flash_decode_ref(
+    q, k_pages, v_pages, block_tables, lengths, *, logit_cap: Optional[float] = None
+):
+    """Gather-then-attend oracle for the paged decode kernel.
+
+    q: (B, 1, H, D); pools: (KV, P, page_size, D); block_tables: (B, MP)
+    int32; lengths: (B,).  The gather reconstructs each sequence's cache
+    in page order, so when max_pages * page_size equals a dense cache's
+    max_len this path is bit-identical to `decode_attention` over the
+    dense cache (the paged==dense parity contract).
+    """
+    from repro.models.attention import decode_attention
+
+    kvh, _, ps, d = k_pages.shape
+    b, mp = block_tables.shape
+    # (KV, B, MP, ps, D) -> (B, MP*ps, KV, D): token order within a page
+    # and page order within the table both preserved
+    k = k_pages[:, block_tables].transpose(1, 2, 3, 0, 4).reshape(b, mp * ps, kvh, d)
+    v = v_pages[:, block_tables].transpose(1, 2, 3, 0, 4).reshape(
+        b, mp * ps, kvh, v_pages.shape[-1]
+    )
+    return decode_attention(q, k, v, lengths=lengths, logit_cap=logit_cap)
+
+
 def matmul_ref(a, b):
     return jnp.dot(a, b, preferred_element_type=a.dtype)
 

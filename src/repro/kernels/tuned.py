@@ -53,6 +53,9 @@ _DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "tuned_genomes.json")
 
 _BUILTIN: Dict[str, Dict[str, Any]] = {
     "flash": {"block_q": 128, "block_k": 128},
+    # page_size is consumed by serve.paged_cache at cache-construction
+    # time; block_pages by the ops.flash_decode dispatch at trace time
+    "flash_decode": {"page_size": 64, "block_pages": 4},
     "matmul": {"block_m": 256, "block_n": 256, "block_k": 256},
     "wkv6": {"chunk": 64},
     "rmsnorm": {"block_rows": 128},

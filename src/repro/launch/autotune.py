@@ -48,6 +48,7 @@ from repro.evaluation.timing import (
 # repro.evaluation.timing.ROOFLINE_MODELS)
 SPACES: Dict[str, Dict[str, list]] = {
     "flash": {"block_q": [64, 128, 256, 512], "block_k": [64, 128, 256, 512]},
+    "flash_decode": {"page_size": [16, 32, 64, 128], "block_pages": [1, 2, 4, 8]},
     "matmul": {"block_m": [64, 128, 256, 512], "block_n": [64, 128, 256, 512], "block_k": [64, 128, 256, 512]},
     "wkv6": {"chunk": [16, 32, 64, 128, 256]},
 }
@@ -58,11 +59,13 @@ SPACES: Dict[str, Dict[str, list]] = {
 BENCH_SHAPES: Dict[str, Dict[str, Dict[str, int]]] = {
     "paper": {
         "flash": dict(b=1, s=8192, h=32, d=128),
+        "flash_decode": dict(b=32, s=8192, h=32, kvh=8, d=128),
         "matmul": dict(m=8192, n=8192, k=8192),
         "wkv6": dict(b=8, s=8192, h=32, kd=64),
     },
     "small": {
         "flash": dict(b=1, s=256, h=2, d=32),
+        "flash_decode": dict(b=2, s=128, h=4, kvh=2, d=16),
         "matmul": dict(m=256, n=256, k=256),
         "wkv6": dict(b=1, s=256, h=2, kd=16),
     },
@@ -74,9 +77,9 @@ def _bench_thunk(kernel: str, genome: Dict[str, Any], shapes: Dict[str, int]) ->
     at the benchmark shape (blocking until the result is ready), or
     ``None`` when the genome does not tile the shape.
 
-    The Pallas kernels are called directly (not through the ops wrappers,
-    whose module-level ``_INTERPRET`` flag governs interpret mode) with
-    ``interpret`` resolved from the attached backend: compiled on a real
+    The Pallas kernels are called directly (not through the ops wrappers)
+    with ``interpret`` resolved from the attached backend — the same rule
+    as ``ops._interpret()``, minus its env override: compiled on a real
     accelerator, interpreter on CPU — a TPU "measured" entry must time
     the compiled kernel, never the Python interpreter."""
     import jax
@@ -103,6 +106,33 @@ def _bench_thunk(kernel: str, genome: Dict[str, Any], shapes: Dict[str, int]) ->
             )
         )
         return lambda: jax.block_until_ready(fn(q, k, v))
+    if kernel == "flash_decode":
+        from repro.kernels.flash_decode import flash_decode_pallas
+
+        b, s, h, kvh, d = (
+            shapes["b"], shapes["s"], shapes["h"], shapes["kvh"], shapes["d"]
+        )
+        ps, bp = genome["page_size"], genome["block_pages"]
+        if s % ps or (s // ps) % bp:
+            return None
+        mp = s // ps
+        # every sequence fully cached: pools laid out page-contiguous per
+        # sequence (page 0 reserved as null), identity-ish block tables
+        q = jax.random.normal(key, (b, 1, h, d), jnp.float32)
+        kp = jax.random.normal(
+            jax.random.fold_in(key, 1), (kvh, 1 + b * mp, ps, d), jnp.float32
+        )
+        vp = jax.random.normal(
+            jax.random.fold_in(key, 2), (kvh, 1 + b * mp, ps, d), jnp.float32
+        )
+        bt = 1 + jnp.arange(b * mp, dtype=jnp.int32).reshape(b, mp)
+        lengths = jnp.full((b,), s, jnp.int32)
+        fn = jax.jit(
+            lambda q, kp, vp, bt, ln: flash_decode_pallas(
+                q, kp, vp, bt, ln, block_pages=bp, interpret=interpret
+            )
+        )
+        return lambda: jax.block_until_ready(fn(q, kp, vp, bt, lengths))
     if kernel == "matmul":
         m, n, k_ = shapes["m"], shapes["n"], shapes["k"]
         if m % genome["block_m"] or n % genome["block_n"] or k_ % genome["block_k"]:

@@ -360,11 +360,31 @@ def forward(
 # KV / state caches
 # ==========================================================================
 def _unit_cache_spec(
-    cfg: C.ModelConfig, mixer: str, mlp: str, batch: int, max_len: int
+    cfg: C.ModelConfig,
+    mixer: str,
+    mlp: str,
+    batch: int,
+    max_len: int,
+    layout: str = "dense",
+    num_pages: Optional[int] = None,
+    page_size: Optional[int] = None,
 ) -> dict:
     dtype = _dtype(cfg)
     spec: Dict[str, Any] = {}
-    if mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
+    if mixer == C.GLOBAL_ATTN and layout == "paged":
+        # shared page pool + per-sequence block tables instead of a dense
+        # (batch, max_len) slab: (KV, P, page_size, D), contiguous per
+        # (kv head, page) so the flash-decode kernel fetches a page with
+        # one simple DMA.  The same page ids index every layer's pool.
+        spec["k_pages"] = jnp.zeros(
+            (cfg.num_kv_heads, num_pages, page_size, cfg.head_dim), dtype
+        )
+        spec["v_pages"] = jnp.zeros(
+            (cfg.num_kv_heads, num_pages, page_size, cfg.head_dim), dtype
+        )
+    elif mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
+        # local attention keeps its per-slot ring buffer in both layouts —
+        # the window already bounds it, paging would buy nothing
         s_cache = max_len if mixer == C.GLOBAL_ATTN else min(max_len, cfg.window)
         spec["k"] = jnp.zeros((batch, s_cache, cfg.num_kv_heads, cfg.head_dim), dtype)
         spec["v"] = jnp.zeros((batch, s_cache, cfg.num_kv_heads, cfg.head_dim), dtype)
@@ -385,26 +405,64 @@ def _unit_cache_spec(
     return spec
 
 
-def init_cache(cfg: C.ModelConfig, batch: int, max_len: int) -> dict:
-    """Zero cache pytree.  Stacked (n_blocks, ...) leading dim for scan."""
+def init_cache(
+    cfg: C.ModelConfig,
+    batch: int,
+    max_len: int,
+    *,
+    layout: str = "dense",
+    num_pages: Optional[int] = None,
+    page_size: Optional[int] = None,
+) -> dict:
+    """Zero cache pytree.  Stacked (n_blocks, ...) leading dim for scan.
+
+    ``layout="paged"`` swaps every global-attention unit's dense
+    (batch, max_len) K/V slab for a shared page pool addressed through
+    per-sequence block tables (see `repro.serve.paged_cache`); all other
+    cache kinds are unchanged.  The dense layout is byte-identical to the
+    historical cache.
+    """
+    if layout not in ("dense", "paged"):
+        raise ValueError(layout)
+    if layout == "paged" and (num_pages is None or page_size is None):
+        raise ValueError("paged cache needs num_pages and page_size")
     cache: Dict[str, Any] = {}
     if cfg.n_blocks > 0:
         def one_block(_):
             return {
-                f"u{i}": _unit_cache_spec(cfg, mixer, mlp, batch, max_len)
+                f"u{i}": _unit_cache_spec(
+                    cfg, mixer, mlp, batch, max_len,
+                    layout, num_pages, page_size,
+                )
                 for i, (mixer, mlp) in enumerate(cfg.pattern)
             }
         cache["blocks"] = jax.vmap(one_block)(jnp.arange(cfg.n_blocks))
     if cfg.n_remainder > 0:
         cache["rem"] = {
-            f"r{i}": _unit_cache_spec(cfg, *cfg.pattern[i], batch, max_len)
+            f"r{i}": _unit_cache_spec(
+                cfg, *cfg.pattern[i], batch, max_len,
+                layout, num_pages, page_size,
+            )
             for i in range(cfg.n_remainder)
         }
     return cache
 
 
-def cache_specs(cfg: C.ModelConfig, batch: int, max_len: int) -> dict:
-    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+def cache_specs(
+    cfg: C.ModelConfig,
+    batch: int,
+    max_len: int,
+    *,
+    layout: str = "dense",
+    num_pages: Optional[int] = None,
+    page_size: Optional[int] = None,
+) -> dict:
+    return jax.eval_shape(
+        lambda: init_cache(
+            cfg, batch, max_len,
+            layout=layout, num_pages=num_pages, page_size=page_size,
+        )
+    )
 
 
 # ==========================================================================
@@ -417,47 +475,95 @@ def _unit_decode(
     ucache: dict,
     x: jax.Array,
     pos: jax.Array,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, dict]:
-    """x: (B, 1, D); pos: scalar int32 position of the new token."""
+    """x: (B, 1, D); pos: scalar int32 position of the new token, or a
+    (B,) vector of per-sequence positions (continuous batching — each
+    slot may be at a different decode offset).  ``block_tables`` (B, MP)
+    routes paged global-attention caches; dense caches ignore it."""
     mixer, mlp = unit
     dtype = _dtype(cfg)
     rope_args = (cfg.rope_theta, cfg.rope_scaling)
     b = x.shape[0]
     new_cache = dict(ucache)
-    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    ragged = getattr(pos, "ndim", 0) == 1
+    if ragged:
+        positions = pos[:, None]
+        rows = jnp.arange(b)
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
 
     h = L.rmsnorm(p["norm_mix"], x, eps=cfg.norm_eps)
     if mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
         q, k, v = attn.project_qkv(
             p["mixer"], h, dtype=dtype, rope_args=rope_args, positions=positions
         )
-        s_cache = ucache["k"].shape[1]
-        slot = pos % s_cache if mixer == C.LOCAL_ATTN else pos
-        k_cache = jax.lax.dynamic_update_slice(
-            ucache["k"], k.astype(ucache["k"].dtype), (0, slot, 0, 0)
-        )
-        v_cache = jax.lax.dynamic_update_slice(
-            ucache["v"], v.astype(ucache["v"].dtype), (0, slot, 0, 0)
-        )
-        lengths = jnp.minimum(pos + 1, s_cache)
-        o = attn.decode_attention(
-            q, k_cache, v_cache,
-            lengths=jnp.broadcast_to(lengths, (b,)),
-            logit_cap=cfg.attn_logit_softcap,
-        )
-        mo = attn.attention_out(p["mixer"], o, dtype=dtype)
-        new_cache["k"], new_cache["v"] = k_cache, v_cache
+        if "k_pages" in ucache:
+            # paged pool: alloc-on-write happened host-side (the block
+            # table already names a page for `pos`); scatter the token
+            # into (page, offset) and attend through the block table
+            assert ragged and block_tables is not None
+            ps = ucache["k_pages"].shape[2]
+            page_id = block_tables[rows, pos // ps]
+            off = pos % ps
+            k_pages = ucache["k_pages"].at[:, page_id, off].set(
+                k[:, 0].transpose(1, 0, 2).astype(ucache["k_pages"].dtype)
+            )
+            v_pages = ucache["v_pages"].at[:, page_id, off].set(
+                v[:, 0].transpose(1, 0, 2).astype(ucache["v_pages"].dtype)
+            )
+            from repro.kernels import ops as kops
+
+            o = kops.flash_decode(
+                q, k_pages, v_pages, block_tables, pos + 1,
+                logit_cap=cfg.attn_logit_softcap, backend=cfg.kernel_backend,
+            )
+            mo = attn.attention_out(p["mixer"], o, dtype=dtype)
+            new_cache["k_pages"], new_cache["v_pages"] = k_pages, v_pages
+        else:
+            s_cache = ucache["k"].shape[1]
+            slot = pos % s_cache if mixer == C.LOCAL_ATTN else pos
+            if ragged:
+                k_cache = ucache["k"].at[rows, slot].set(
+                    k[:, 0].astype(ucache["k"].dtype)
+                )
+                v_cache = ucache["v"].at[rows, slot].set(
+                    v[:, 0].astype(ucache["v"].dtype)
+                )
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    ucache["k"], k.astype(ucache["k"].dtype), (0, slot, 0, 0)
+                )
+                v_cache = jax.lax.dynamic_update_slice(
+                    ucache["v"], v.astype(ucache["v"].dtype), (0, slot, 0, 0)
+                )
+            lengths = jnp.minimum(pos + 1, s_cache)
+            o = attn.decode_attention(
+                q, k_cache, v_cache,
+                lengths=jnp.broadcast_to(lengths, (b,)),
+                logit_cap=cfg.attn_logit_softcap,
+            )
+            mo = attn.attention_out(p["mixer"], o, dtype=dtype)
+            new_cache["k"], new_cache["v"] = k_cache, v_cache
     elif mixer == C.MLA_ATTN:
         ckv_new, kr_new = mla_mod.mla_new_token_latents(
             p["mixer"], h, cfg.mla, dtype=dtype, positions=positions,
             rope_theta=cfg.rope_theta, rope_scaling=cfg.rope_scaling,
         )
-        ckv = jax.lax.dynamic_update_slice(
-            ucache["ckv"], ckv_new.astype(ucache["ckv"].dtype), (0, pos, 0)
-        )
-        kr = jax.lax.dynamic_update_slice(
-            ucache["kr"], kr_new.astype(ucache["kr"].dtype), (0, pos, 0)
-        )
+        if ragged:
+            ckv = ucache["ckv"].at[rows, pos].set(
+                ckv_new[:, 0].astype(ucache["ckv"].dtype)
+            )
+            kr = ucache["kr"].at[rows, pos].set(
+                kr_new[:, 0].astype(ucache["kr"].dtype)
+            )
+        else:
+            ckv = jax.lax.dynamic_update_slice(
+                ucache["ckv"], ckv_new.astype(ucache["ckv"].dtype), (0, pos, 0)
+            )
+            kr = jax.lax.dynamic_update_slice(
+                ucache["kr"], kr_new.astype(ucache["kr"].dtype), (0, pos, 0)
+            )
         mo = mla_mod.mla_decode(
             p["mixer"], h, ckv, kr, cfg.mla, dtype=dtype,
             lengths=jnp.broadcast_to(pos + 1, (b,)),
@@ -502,8 +608,14 @@ def decode_step(
     cache: dict,
     tokens: jax.Array,
     pos: jax.Array,
+    *,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, dict]:
-    """One decode step.  tokens: (B, 1) (or (B, 1, C)); pos: scalar int32.
+    """One decode step.  tokens: (B, 1) (or (B, 1, C)); pos: scalar int32
+    for the classic lock-step batch, or a (B,) int32 vector of
+    per-sequence positions for continuous batching (paged or dense).
+    ``block_tables`` (B, max_pages) is required iff `cache` was built
+    with ``layout="paged"``.
 
     Returns (logits (B, 1, V) or (B, 1, C, V), new_cache).
     """
@@ -525,7 +637,7 @@ def decode_step(
             nbc = {}
             for i, unit in enumerate(cfg.pattern):
                 h, nbc[f"u{i}"] = _unit_decode(
-                    cfg, unit, bp[f"u{i}"], bc[f"u{i}"], h, pos
+                    cfg, unit, bp[f"u{i}"], bc[f"u{i}"], h, pos, block_tables
                 )
             blocks_cache = jax.tree.map(
                 lambda c, n: jax.lax.dynamic_update_index_in_dim(
@@ -545,7 +657,8 @@ def decode_step(
         new_cache["rem"] = {}
         for i in range(cfg.n_remainder):
             x, nc = _unit_decode(
-                cfg, cfg.pattern[i], params["rem"][f"r{i}"], cache["rem"][f"r{i}"], x, pos
+                cfg, cfg.pattern[i], params["rem"][f"r{i}"], cache["rem"][f"r{i}"],
+                x, pos, block_tables,
             )
             new_cache["rem"][f"r{i}"] = nc
 
@@ -576,8 +689,10 @@ class Transformer:
     def __call__(self, params, tokens, **kw):
         return forward(self.cfg, params, tokens, **kw)
 
-    def decode(self, params, cache, tokens, pos):
-        return decode_step(self.cfg, params, cache, tokens, pos)
+    def decode(self, params, cache, tokens, pos, *, block_tables=None):
+        return decode_step(
+            self.cfg, params, cache, tokens, pos, block_tables=block_tables
+        )
 
-    def init_cache(self, batch, max_len):
-        return init_cache(self.cfg, batch, max_len)
+    def init_cache(self, batch, max_len, **kw):
+        return init_cache(self.cfg, batch, max_len, **kw)

@@ -1,5 +1,29 @@
-"""Serving substrate: KV-cache engine, prefill/decode steps, batched loop."""
+"""Serving substrate: KV-cache engines, prefill/decode steps, paging.
 
-from repro.serve.engine import ServeEngine, make_decode_step, make_prefill_step
+Two generation loops share the model's decode step and sampling rule:
+`ServeEngine` (fixed batch, dense cache — the lock-step baseline) and
+`ContinuousBatchingEngine` (admission queue + slot recycling over a
+paged or dense cache — the production loop).
+"""
 
-__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step"]
+from repro.serve.engine import (
+    ServeEngine,
+    make_decode_step,
+    make_prefill_step,
+    sample_tokens,
+)
+from repro.serve.paged_cache import BlockTables, PageAllocator, required_pages
+from repro.serve.scheduler import Completion, ContinuousBatchingEngine, Request
+
+__all__ = [
+    "BlockTables",
+    "Completion",
+    "ContinuousBatchingEngine",
+    "PageAllocator",
+    "Request",
+    "ServeEngine",
+    "make_decode_step",
+    "make_prefill_step",
+    "required_pages",
+    "sample_tokens",
+]

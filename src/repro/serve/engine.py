@@ -72,19 +72,50 @@ def make_decode_step(cfg: C.ModelConfig):
     return step
 
 
+def sample_tokens(
+    logits: jax.Array,
+    *,
+    vocab_size: int,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Greedy/temperature sampling with padded-vocab masking — the one
+    sampling rule shared by the fixed-batch engine and the continuous-
+    batching scheduler (token-level equivalence between the two depends
+    on it)."""
+    if logits.shape[-1] != vocab_size:  # mask padded vocab ids
+        valid = jnp.arange(logits.shape[-1]) < vocab_size
+        logits = jnp.where(valid, logits, -jnp.inf)
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class ServeEngine:
-    """Batched greedy/temperature generation over a fixed request batch."""
+    """Batched greedy/temperature generation over a fixed request batch.
+
+    Per-sequence stop handling stays on device: a ``done`` mask freezes
+    finished sequences (they emit ``pad_id`` instead of live samples) and
+    the host only checks for all-done every ``sync_interval`` steps — the
+    old per-token ``bool(done.all())`` blocked the dispatch queue on a
+    device->host transfer between every two decode steps.  ``last_stats``
+    records the decode-step count of the most recent `generate` call (the
+    serve benchmark's simulated-clock tick counter).
+    """
 
     cfg: C.ModelConfig
     params: Any
     max_len: int
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    pad_id: Optional[int] = None  # defaults to eos_id
+    sync_interval: int = 8
 
     def __post_init__(self):
         self._prefill = jax.jit(make_prefill_step(self.cfg, max_len=self.max_len))
         self._decode = jax.jit(make_decode_step(self.cfg))
+        self.last_stats: Dict[str, int] = {}
 
     def generate(
         self,
@@ -94,7 +125,8 @@ class ServeEngine:
         key: Optional[jax.Array] = None,
         image_embeds: Optional[jax.Array] = None,
     ) -> jax.Array:
-        """tokens: (B, S0) prompt.  Returns (B, S0+steps) completed tokens."""
+        """tokens: (B, S0) prompt.  Returns (B, S0+steps) completed tokens
+        (fewer when every sequence hit eos at a sync point)."""
         cfg = self.cfg
         b, s0 = tokens.shape[0], tokens.shape[1]
         if image_embeds is not None:
@@ -102,27 +134,34 @@ class ServeEngine:
         else:
             last, cache = self._prefill(self.params, tokens)
         pos0 = s0 + cfg.num_prefix_embeds
+        pad = self.pad_id if self.pad_id is not None else self.eos_id
         out = [tokens]
         done = jnp.zeros((b,), bool)
         cur = self._sample(last, key, 0)
+        if self.eos_id is not None:
+            done = done | (cur == self.eos_id)
+        t = 0
         for t in range(steps):
             nt = cur[:, None] if cfg.num_codebooks == 1 else cur[:, None, :]
-            out.append(cur[:, None] if cfg.num_codebooks == 1 else cur[:, None, :])
+            out.append(nt)
             logits, cache = self._decode(
                 self.params, cache, nt, jnp.int32(pos0 + t)
             )
             cur = self._sample(logits[:, 0], key, t + 1)
             if self.eos_id is not None:
+                # past-eos sequences emit pad, not live samples; the eos
+                # reduction stays on device — the host sync is hoisted to
+                # every sync_interval steps
+                cur = jnp.where(done, jnp.int32(pad), cur)
                 done = done | (cur == self.eos_id)
-                if bool(done.all()):
+                if (t + 1) % self.sync_interval == 0 and bool(done.all()):
                     break
+        self.last_stats = {"decode_steps": t + 1 if steps else 0, "batch": b}
         return jnp.concatenate(out, axis=1)
 
     def _sample(self, logits: jax.Array, key, t: int) -> jax.Array:
-        if logits.shape[-1] != self.cfg.vocab_size:  # mask padded vocab ids
-            valid = jnp.arange(logits.shape[-1]) < self.cfg.vocab_size
-            logits = jnp.where(valid, logits, -jnp.inf)
-        if self.temperature <= 0.0 or key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(key, t)
-        return jax.random.categorical(k, logits / self.temperature).astype(jnp.int32)
+        k = None if key is None else jax.random.fold_in(key, t)
+        return sample_tokens(
+            logits, vocab_size=self.cfg.vocab_size,
+            temperature=self.temperature, key=k,
+        )

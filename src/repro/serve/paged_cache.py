@@ -1,0 +1,133 @@
+"""Paged KV cache bookkeeping: free-list allocator + per-slot block tables.
+
+The device side of paging lives in `models/transformer.py` (pool-shaped
+cache leaves) and `kernels/flash_decode.py` (the attention kernel); this
+module is the *host* side — the part that decides which physical page
+holds which token.  It is deliberately plain Python: allocation decisions
+are made once per page (amortized over ``page_size`` tokens and every
+layer, which share one block table), so there is nothing to win by
+putting them on device, and a synchronous free list is trivially
+deterministic — the same admission order always produces the same page
+assignment, which the paged==dense parity tests rely on.
+
+Conventions:
+
+* Page 0 is the reserved **null page**: never allocated, and every empty
+  block-table entry points at it.  Dead batch slots park at position 0,
+  so their (masked) decode writes land in the null page instead of a
+  live sequence's memory.
+* ``alloc`` hands out the lowest free page id (heap-ordered) —
+  deterministic under any completion order.
+* Alloc-on-write: `ensure(slot, pos)` grows a slot's table just-in-time
+  when decode crosses a page boundary; `release(slot)` returns every
+  page on eos/retirement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold `tokens` cache entries (at least one, so even
+    an empty admission owns a distinct write target)."""
+    return max(1, -(-tokens // page_size))
+
+
+def required_pages(slots: int, max_len: int, page_size: int) -> int:
+    """Pool size (pages, incl. the null page) that can never OOM: every
+    slot simultaneously at the full decode horizon."""
+    return 1 + slots * pages_for(max_len, page_size)
+
+
+class PageAllocator:
+    """Lowest-id-first free-list allocator over ``num_pages`` pages."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least one allocatable page beyond the null page")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(1, num_pages))  # 0 = null page
+        heapq.heapify(self._free)
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: asked {n}, {len(self._free)} free "
+                f"of {self.num_pages} (size the pool with required_pages())"
+            )
+        return [heapq.heappop(self._free) for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert p != NULL_PAGE, "freeing the null page"
+            heapq.heappush(self._free, p)
+
+
+@dataclasses.dataclass
+class BlockTables:
+    """Per-slot block tables over a shared `PageAllocator`.
+
+    ``table`` is the (slots, max_pages) int32 host mirror handed to the
+    device each step (empty entries = NULL_PAGE); ``owned[slot]`` lists
+    the pages a slot holds, in position order.
+    """
+
+    slots: int
+    max_len: int
+    page_size: int
+    allocator: PageAllocator
+
+    def __post_init__(self):
+        self.max_pages = pages_for(self.max_len, self.page_size)
+        self.table = np.zeros((self.slots, self.max_pages), np.int32)
+        self.owned: List[List[int]] = [[] for _ in range(self.slots)]
+
+    @classmethod
+    def with_pool(cls, slots: int, max_len: int, page_size: int,
+                  num_pages: int) -> "BlockTables":
+        return cls(slots, max_len, page_size, PageAllocator(num_pages))
+
+    def admit(self, slot: int, prompt_len: int) -> List[int]:
+        """Allocate pages covering a prompt of `prompt_len` tokens plus
+        the first decode write (position `prompt_len`)."""
+        assert not self.owned[slot], f"slot {slot} not released"
+        n = pages_for(prompt_len + 1, self.page_size)
+        pages = self.allocator.alloc(n)
+        self.owned[slot] = pages
+        self.table[slot, :n] = pages
+        return pages
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Alloc-on-write: make sure position `pos` has a page.  Returns
+        True when the table changed (the device copy is stale)."""
+        needed = pos // self.page_size + 1
+        assert needed <= self.max_pages, (pos, self.max_len)
+        grew = False
+        while len(self.owned[slot]) < needed:
+            (page,) = self.allocator.alloc(1)
+            self.table[slot, len(self.owned[slot])] = page
+            self.owned[slot].append(page)
+            grew = True
+        return grew
+
+    def release(self, slot: int) -> None:
+        """Return a finished slot's pages to the pool (eos/retirement)."""
+        if self.owned[slot]:
+            self.allocator.free(self.owned[slot])
+        self.owned[slot] = []
+        self.table[slot, :] = NULL_PAGE
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self.owned)

@@ -1,0 +1,390 @@
+"""Continuous-batching serve loop: admission queue, slot recycling, paging.
+
+The fixed-batch `ServeEngine` stalls the whole batch on its longest
+request: a slot that finishes early sits idle until everyone is done, and
+the next batch cannot start until then.  This scheduler instead treats
+the batch as ``slots`` independent lanes:
+
+* **Admission queue** — requests wait in arrival order; whenever a slot
+  is free (at startup or after a retirement) the next request is
+  prefilled (batch-of-1, exact prompt length — no padding) and its cache
+  is scattered into the slot.
+* **Prefill/decode interleaving** — admissions happen at sync points
+  between decode windows, so prefills and decode steps share the device
+  serially, and the decode hot loop itself stays free of host syncs.
+* **Slot recycling** — a sequence that hits eos or its token budget is
+  frozen device-side by the ``done`` mask (it emits pad and stops
+  advancing), retired at the next sync, its pages freed, and its slot
+  handed to the admission queue — no whole-batch stall.
+* **Device-side stop handling** — the eos reduction lives in the jitted
+  step; the host looks at ``done``/``gen`` only every ``sync_interval``
+  steps.  A finished slot therefore idles for at most
+  ``sync_interval - 1`` steps before its lane is recycled: the
+  throughput/latency knob of the whole engine.
+
+``cache_layout="paged"`` stores global-attention K/V in a shared page
+pool (`repro.serve.paged_cache` block tables + the
+`kernels/flash_decode.py` kernel); ``"dense"`` keeps per-slot dense
+slabs with the same scheduling (the ablation arm of
+`benchmarks/serve_throughput.py`).  With greedy sampling both layouts
+produce token streams identical to the fixed-batch engine — per-request
+decode is batching-invariant — which is the scheduler's correctness
+gate in tests/test_serve_paged.py.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import config as C
+from repro.models.transformer import decode_step, forward, init_cache
+from repro.serve.engine import sample_tokens
+from repro.serve.paged_cache import BlockTables, pages_for, required_pages
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    uid: int
+    prompt: Any  # (S0,) int array
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    prompt_len: int
+    tokens: List[int]  # generated tokens, eos included when hit
+
+
+@dataclasses.dataclass
+class _SlotState:
+    uid: int
+    prompt_len: int
+    max_new: int
+
+
+# --------------------------------------------------------------------------
+# cache insertion: scatter one prefilled request into a batch slot
+# --------------------------------------------------------------------------
+def _set_row(dst, src, slot, stacked):
+    """dst (L?, B, *rest), src (L?, 1, *rest'): pad rest' up to rest with
+    zeros (end-padding, matching `_pad_cache_to`) and overwrite the whole
+    slot row — recycled slots must not leak the previous occupant."""
+    off = 1 if stacked else 0
+    widths = [(0, 0)] * src.ndim
+    for ax in range(off + 1, src.ndim):
+        widths[ax] = (0, dst.shape[ax] - src.shape[ax])
+    row = jnp.pad(src, widths)
+    row = row[:, 0] if stacked else row[0]
+    if stacked:
+        return dst.at[:, slot].set(row.astype(dst.dtype))
+    return dst.at[slot].set(row.astype(dst.dtype))
+
+
+def _scatter_pages(pool, row, pages, stacked):
+    """pool (L?, KV, P, ps, D), row (L?, 1, S0, KV, D): write the prompt's
+    K/V into the allocated pages (zero-padded to whole pages)."""
+    ps = pool.shape[-2]
+    n = pages.shape[0]
+    if stacked:
+        nl, _, s0, kv, d = row.shape
+        r = jnp.pad(row[:, 0], ((0, 0), (0, n * ps - s0), (0, 0), (0, 0)))
+        r = r.reshape(nl, n, ps, kv, d).transpose(0, 3, 1, 2, 4)
+        return pool.at[:, :, pages].set(r.astype(pool.dtype))
+    _, s0, kv, d = row.shape
+    r = jnp.pad(row[0], ((0, n * ps - s0), (0, 0), (0, 0)))
+    r = r.reshape(n, ps, kv, d).transpose(2, 0, 1, 3)
+    return pool.at[:, pages].set(r.astype(pool.dtype))
+
+
+def _insert_unit(dst: dict, src: dict, slot, pages, stacked):
+    out = {}
+    for key, leaf in dst.items():
+        if key in ("k_pages", "v_pages"):
+            out[key] = _scatter_pages(leaf, src[key[0]], pages, stacked)
+        else:
+            out[key] = _set_row(leaf, src[key], slot, stacked)
+    return out
+
+
+def _insert_prefill(cache: dict, pre: dict, slot, pages):
+    out: Dict[str, Any] = {}
+    if "blocks" in cache:
+        out["blocks"] = {
+            uk: _insert_unit(cache["blocks"][uk], pre["blocks"][uk], slot, pages, True)
+            for uk in cache["blocks"]
+        }
+    if "rem" in cache:
+        out["rem"] = {
+            rk: _insert_unit(cache["rem"][rk], pre["rem"][rk], slot, pages, False)
+            for rk in cache["rem"]
+        }
+    return out
+
+
+# --------------------------------------------------------------------------
+# engine
+# --------------------------------------------------------------------------
+class ContinuousBatchingEngine:
+    """Continuous-batching generation over a request queue.
+
+    Restrictions vs the research model surface: text-only
+    (``num_codebooks == 1``, no prefix embeds), and every request must
+    satisfy ``prompt_len + max_new_tokens <= max_len``.
+
+    `run(requests)` is self-resetting — the engine (and its compiled
+    steps) can be reused across runs; prefill/insert functions retrace
+    per distinct prompt length, so traces amortize across requests and
+    runs.
+    """
+
+    def __init__(
+        self,
+        cfg: C.ModelConfig,
+        params: Any,
+        *,
+        slots: int,
+        max_len: int,
+        cache_layout: str = "paged",
+        page_size: Optional[int] = None,
+        num_pages: Optional[int] = None,
+        temperature: float = 0.0,
+        eos_id: Optional[int] = None,
+        pad_id: int = 0,
+        sync_interval: int = 8,
+        seed: int = 0,
+    ):
+        assert cfg.num_codebooks == 1 and cfg.num_prefix_embeds == 0, (
+            "continuous batching serves text-only configs"
+        )
+        if cache_layout not in ("paged", "dense"):
+            raise ValueError(cache_layout)
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache_layout = cache_layout
+        if cache_layout == "paged":
+            if page_size is None:
+                from repro.kernels import tuned
+
+                page_size = int(tuned.get_tuned("flash_decode")["page_size"])
+            if num_pages is None:
+                # worst case plus per-slot sync-lag over-allocation slack
+                num_pages = required_pages(slots, max_len, page_size) + slots
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.sync_interval = max(1, sync_interval)
+        self.key = jax.random.key(seed)
+        self.stats: Dict[str, Any] = {}
+
+        self._prefill = jax.jit(
+            lambda p, t: forward(cfg, p, t, return_cache=True, last_only=True)
+        )
+        self._insert = jax.jit(_insert_prefill, donate_argnums=(0,))
+        self._step = self._make_step()
+
+    # -- jitted decode step ------------------------------------------------
+    def _make_step(self):
+        cfg = self.cfg
+        paged = self.cache_layout == "paged"
+        temperature = self.temperature
+        eos_id = self.eos_id
+        pad_id = self.pad_id
+
+        def step(params, cache, cur, pos, done, gen, max_new, uids, bt, key):
+            logits, cache = decode_step(
+                cfg, params, cache, cur[:, None], pos,
+                block_tables=bt if paged else None,
+            )
+            lg = logits[:, 0]
+            if temperature > 0.0:
+                keys = jax.vmap(
+                    lambda u, g: jax.random.fold_in(jax.random.fold_in(key, u), g)
+                )(uids, gen)
+                nxt = jax.vmap(
+                    lambda k_, l_: sample_tokens(
+                        l_, vocab_size=cfg.vocab_size,
+                        temperature=temperature, key=k_,
+                    )
+                )(keys, lg)
+            else:
+                nxt = sample_tokens(lg, vocab_size=cfg.vocab_size)
+            live = ~done
+            emit = jnp.where(live, nxt, jnp.int32(pad_id))
+            gen1 = gen + live
+            done1 = done | (live & (gen1 >= max_new))
+            if eos_id is not None:
+                done1 = done1 | (live & (emit == eos_id))
+            cur1 = jnp.where(done1, jnp.int32(pad_id), emit)
+            pos1 = pos + live
+            return cache, emit, cur1, pos1, done1, gen1
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    # -- host loop ---------------------------------------------------------
+    def run(self, requests: List[Request]) -> List[Completion]:
+        cfg, b = self.cfg, self.slots
+        for r in requests:
+            assert len(r.prompt) + r.max_new_tokens <= self.max_len, (
+                r.uid, len(r.prompt), r.max_new_tokens, self.max_len
+            )
+            assert r.max_new_tokens >= 1, r.uid
+
+        paged = self.cache_layout == "paged"
+        if paged:
+            tables = BlockTables.with_pool(
+                b, self.max_len, self.page_size, self.num_pages
+            )
+            cache = init_cache(
+                cfg, b, self.max_len, layout="paged",
+                num_pages=self.num_pages, page_size=self.page_size,
+            )
+            bt_dev = jnp.asarray(tables.table)
+        else:
+            tables = None
+            cache = init_cache(cfg, b, self.max_len)
+            bt_dev = jnp.zeros((b, 1), jnp.int32)  # unused placeholder
+
+        pos = jnp.zeros((b,), jnp.int32)
+        done = jnp.ones((b,), bool)  # empty slots are frozen
+        gen = jnp.zeros((b,), jnp.int32)
+        max_new = jnp.ones((b,), jnp.int32)
+        uids = jnp.zeros((b,), jnp.int32)
+        cur = jnp.full((b,), self.pad_id, jnp.int32)
+
+        queue = collections.deque(requests)
+        active: List[Optional[_SlotState]] = [None] * b
+        free = list(range(b - 1, -1, -1))  # pop() yields lowest slot first
+        results: Dict[int, List[int]] = {}
+        pos_h = np.zeros(b, np.int64)  # optimistic host mirror of pos
+        gen_prev = np.zeros(b, np.int64)
+        decode_steps = prefills = 0
+        peak_pages = 0
+        step_key = jax.random.fold_in(self.key, 1)  # per-row keys fold uid/gen
+
+        def admit(slot: int, req: Request):
+            nonlocal cache, pos, done, gen, max_new, uids, cur, bt_dev, prefills
+            prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
+            s0 = prompt.shape[1]
+            last, _, pre = self._prefill(self.params, prompt)
+            if paged:
+                pages = jnp.asarray(
+                    np.asarray(tables.admit(slot, s0), np.int32)
+                )
+                bt_dev = jnp.asarray(tables.table)
+            else:
+                pages = jnp.zeros((0,), jnp.int32)
+            cache = self._insert(cache, pre, slot, pages)
+            if self.temperature > 0.0:
+                k0 = jax.random.fold_in(
+                    jax.random.fold_in(self.key, req.uid), 0
+                )
+            else:
+                k0 = None
+            tok0 = sample_tokens(
+                last[0, -1], vocab_size=cfg.vocab_size,
+                temperature=self.temperature, key=k0,
+            )
+            t0 = int(tok0)
+            finished = (req.max_new_tokens <= 1) or (
+                self.eos_id is not None and t0 == self.eos_id
+            )
+            pos = pos.at[slot].set(s0)
+            done = done.at[slot].set(finished)
+            gen = gen.at[slot].set(1)
+            max_new = max_new.at[slot].set(req.max_new_tokens)
+            uids = uids.at[slot].set(req.uid)
+            cur = cur.at[slot].set(self.pad_id if finished else t0)
+            active[slot] = _SlotState(req.uid, s0, req.max_new_tokens)
+            results[req.uid] = [t0]
+            pos_h[slot] = s0
+            gen_prev[slot] = 1
+            prefills += 1
+
+        while queue or any(s is not None for s in active):
+            # admissions at the sync boundary: prefill into every free
+            # slot — unless the page pool cannot hold the prompt yet, in
+            # which case the request waits for a retirement to free pages
+            while queue and free:
+                need = pages_for(len(queue[0].prompt) + 1, self.page_size or 1)
+                if paged and tables.allocator.available < need:
+                    if not any(s is not None for s in active):
+                        raise RuntimeError(
+                            f"request {queue[0].uid} needs {need} pages but "
+                            f"only {tables.allocator.available} exist free "
+                            "with no active sequences to retire — pool too "
+                            "small (see paged_cache.required_pages)"
+                        )
+                    break
+                admit(free.pop(), queue.popleft())
+            if paged:
+                peak_pages = max(peak_pages, tables.pages_in_use)
+
+            emits = []
+            for _ in range(self.sync_interval):
+                if paged:
+                    grew = False
+                    for slot, st in enumerate(active):
+                        if st is None:
+                            continue
+                        # alloc-on-write: the next decode writes at pos;
+                        # clamp covers done-but-unretired slots whose host
+                        # mirror over-advanced past the horizon
+                        wpos = min(int(pos_h[slot]), self.max_len - 1)
+                        grew |= tables.ensure(slot, wpos)
+                    if grew:
+                        bt_dev = jnp.asarray(tables.table)
+                        peak_pages = max(peak_pages, tables.pages_in_use)
+                cache, emit, cur, pos, done, gen = self._step(
+                    self.params, cache, cur, pos, done, gen, max_new,
+                    uids, bt_dev, step_key,
+                )
+                decode_steps += 1
+                emits.append(emit)
+                for slot, st in enumerate(active):
+                    if st is not None:
+                        pos_h[slot] += 1
+
+            # sync: pull the window's verdicts, distribute tokens, retire
+            done_h = np.asarray(done)
+            gen_h = np.asarray(gen)
+            pos_dev = np.asarray(pos)
+            em = np.stack([np.asarray(e) for e in emits])  # (W, B)
+            for slot, st in enumerate(active):
+                if st is None:
+                    continue
+                n_new = int(gen_h[slot] - gen_prev[slot])
+                results[st.uid].extend(int(t) for t in em[:n_new, slot])
+                gen_prev[slot] = gen_h[slot]
+                pos_h[slot] = int(pos_dev[slot])
+                if done_h[slot]:
+                    if paged:
+                        tables.release(slot)
+                    active[slot] = None
+                    free.append(slot)
+                    free.sort(reverse=True)
+
+        self.stats = {
+            "decode_steps": decode_steps,
+            "prefills": prefills,
+            "emitted_tokens": sum(len(t) for t in results.values()),
+            "slots": b,
+            "sync_interval": self.sync_interval,
+            "cache_layout": self.cache_layout,
+            "peak_pages": peak_pages,
+            "page_size": self.page_size,
+        }
+        return [
+            Completion(r.uid, len(r.prompt), results[r.uid]) for r in requests
+        ]

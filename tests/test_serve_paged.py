@@ -1,0 +1,311 @@
+"""Serve-path tests: paged KV cache, flash-decode kernel, continuous batching.
+
+Contracts:
+* paged decode logits == dense decode logits BIT-FOR-BIT, per step, for
+  every cache family (KV+ring, MLA latents, recurrent state), including
+  ragged per-sequence positions and page-boundary crossings;
+* the Pallas flash-decode kernel matches the gather oracle across GQA
+  group sizes and non-multiple-of-page lengths;
+* continuous batching (paged and dense) is token-level equivalent to the
+  fixed-batch engine on a seeded greedy trace;
+* the allocator is a real free list: lowest-first, recycling, OOM.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+)
+from repro.serve.engine import ServeEngine
+from repro.serve.paged_cache import (
+    BlockTables,
+    PageAllocator,
+    pages_for,
+    required_pages,
+)
+from repro.serve.scheduler import ContinuousBatchingEngine, Request
+
+KEY = jax.random.key(0)
+
+
+def _smoke(arch):
+    return dataclasses.replace(get_config(arch, smoke=True), compute_dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# page allocator / block tables
+# ---------------------------------------------------------------------------
+def test_allocator_lowest_first_and_recycles():
+    a = PageAllocator(8)  # pages 1..7 allocatable, 0 reserved
+    assert a.alloc(3) == [1, 2, 3]
+    a.free([2])
+    assert a.alloc(2) == [2, 4]  # freed page reused, lowest id first
+    assert a.available == 3
+
+
+def test_allocator_oom_raises():
+    a = PageAllocator(4)
+    a.alloc(3)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc(1)
+
+
+def test_block_tables_alloc_on_write_and_release():
+    bt = BlockTables.with_pool(slots=2, max_len=16, page_size=4, num_pages=16)
+    pages = bt.admit(0, prompt_len=5)  # positions 0..5 -> 2 pages
+    assert len(pages) == pages_for(6, 4) == 2
+    assert list(bt.table[0, :2]) == pages and bt.table[0, 2] == 0
+    # decode crosses into page 2 at position 8
+    assert not bt.ensure(0, 7)
+    assert bt.ensure(0, 8)
+    assert bt.table[0, 2] != 0
+    used = bt.pages_in_use
+    bt.release(0)
+    assert bt.pages_in_use == used - 3
+    assert (bt.table[0] == 0).all()
+    # slot 1 unaffected throughout
+    p1 = bt.admit(1, prompt_len=1)
+    assert p1[0] not in (0,)
+
+
+def test_required_pages_covers_full_horizon():
+    assert required_pages(3, 16, 4) == 1 + 3 * 4
+
+
+# ---------------------------------------------------------------------------
+# flash-decode kernel vs gather oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,h,kvh,d,ps,mp,bp,cap",
+    [
+        (3, 4, 2, 16, 4, 6, 2, None),    # GQA g=2
+        (2, 6, 2, 8, 8, 4, 4, 30.0),     # g=3 + logit cap
+        (1, 2, 2, 8, 4, 3, 3, None),     # g=1 (MHA)
+        (4, 8, 1, 16, 2, 8, 1, None),    # MQA, single-page tiles
+    ],
+)
+def test_flash_decode_matches_ref(b, h, kvh, d, ps, mp, bp, cap):
+    p = 1 + b * mp
+    kp = jax.random.normal(jax.random.fold_in(KEY, 1), (kvh, p, ps, d))
+    vp = jax.random.normal(jax.random.fold_in(KEY, 2), (kvh, p, ps, d))
+    q = jax.random.normal(jax.random.fold_in(KEY, 3), (b, 1, h, d))
+    # shuffled block tables over the non-null pages: physical page order
+    # must not matter
+    perm = jax.random.permutation(jax.random.fold_in(KEY, 4), p - 1)[: b * mp] + 1
+    bt = perm.reshape(b, mp).astype(jnp.int32)
+    # ragged, non-multiple-of-page lengths (>= 1; empty slots never reach
+    # the kernel with length 0 plus a live query)
+    lengths = jnp.asarray([1 + (7 * i + 3) % (mp * ps) for i in range(b)], jnp.int32)
+    want = ref.flash_decode_ref(q, kp, vp, bt, lengths, logit_cap=cap)
+    got = flash_decode_pallas(q, kp, vp, bt, lengths, logit_cap=cap, block_pages=bp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_zero_length_slot_is_nan_free():
+    kvh, p, ps, d = 2, 5, 4, 8
+    kp = jax.random.normal(jax.random.fold_in(KEY, 5), (kvh, p, ps, d))
+    vp = jax.random.normal(jax.random.fold_in(KEY, 6), (kvh, p, ps, d))
+    q = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 1, 4, d))
+    bt = jnp.zeros((2, 2), jnp.int32)
+    out = flash_decode_pallas(q, kp, vp, bt, jnp.asarray([0, 3], jnp.int32))
+    got = np.asarray(out)
+    assert np.isfinite(got).all()
+    np.testing.assert_array_equal(got[0], 0.0)  # skipped slot: exact zeros
+
+
+def test_ops_dispatch_resolves_and_degrades_block_pages():
+    # tuned block_pages must degrade to a divisor of max_pages
+    bp = ops._fit("flash_decode", "block_pages", None, 4, 6)
+    assert 6 % bp == 0
+    assert ops._fit("flash_decode", "block_pages", 3, 4, 6) == 3  # explicit wins
+
+
+def test_ops_flash_decode_backends_agree():
+    kvh, p, ps, d, b, h = 2, 7, 4, 8, 3, 4
+    kp = jax.random.normal(jax.random.fold_in(KEY, 8), (kvh, p, ps, d))
+    vp = jax.random.normal(jax.random.fold_in(KEY, 9), (kvh, p, ps, d))
+    q = jax.random.normal(jax.random.fold_in(KEY, 10), (b, 1, h, d))
+    bt = (1 + jnp.arange(b * 2, dtype=jnp.int32)).reshape(b, 2)
+    lens = jnp.asarray([5, 8, 2], jnp.int32)
+    a = ops.flash_decode(q, kp, vp, bt, lens, backend="pallas_interpret")
+    c = ops.flash_decode(q, kp, vp, bt, lens, backend="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-5, atol=2e-5)
+
+
+def test_interpret_env_override(monkeypatch):
+    monkeypatch.setenv(ops.INTERPRET_ENV, "1")
+    assert ops._interpret() is True
+    monkeypatch.setenv(ops.INTERPRET_ENV, "0")
+    assert ops._interpret() is False
+    monkeypatch.delenv(ops.INTERPRET_ENV)
+    # unset: backend-aware (CPU test runner -> interpret)
+    from repro.evaluation.timing import has_accelerator
+
+    assert ops._interpret() == (not has_accelerator())
+
+
+# ---------------------------------------------------------------------------
+# paged == dense, bit for bit, per step
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "arch", ["gemma3_27b", "deepseek_v2_lite_16b", "rwkv6_1b6"]
+)
+def test_paged_decode_matches_dense_bitwise(arch):
+    """Every cache family: scalar-pos dense (the legacy path, untouched)
+    vs vector-pos paged, identical logits bit-for-bit across steps that
+    cross page boundaries."""
+    cfg = _smoke(arch)
+    params = init_params(jax.random.key(0), cfg)
+    b, s, ps = 2, 10, 4
+    max_len = 16  # multiple of the page size: gather shape == dense shape
+    mp = max_len // ps
+    toks = jax.random.randint(jax.random.fold_in(KEY, 11), (b, s), 0, cfg.vocab_size)
+    dense = init_cache(cfg, b, max_len)
+    paged = init_cache(
+        cfg, b, max_len, layout="paged", num_pages=1 + b * mp, page_size=ps
+    )
+    bt = (1 + jnp.arange(b * mp, dtype=jnp.int32)).reshape(b, mp)
+    dstep = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    pstep = jax.jit(
+        lambda p, c, t, pos, bt: decode_step(cfg, p, c, t, pos, block_tables=bt)
+    )
+    for t in range(s):
+        nt = toks[:, t : t + 1]
+        ld, dense = dstep(params, dense, nt, jnp.int32(t))
+        lp, paged = pstep(params, paged, nt, jnp.full((b,), t, jnp.int32), bt)
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp)), (arch, t)
+
+
+def test_paged_ragged_positions_match_per_sequence_dense():
+    """Sequences at *different* offsets in one paged batch produce the
+    same logits as each sequence decoded alone in a dense batch."""
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(1), cfg)
+    ps, max_len = 4, 16
+    mp = max_len // ps
+    lens = [3, 7, 5]  # ragged prompt lengths
+    b = len(lens)
+    toks = [
+        jax.random.randint(jax.random.fold_in(KEY, 20 + i), (1, n), 0, cfg.vocab_size)
+        for i, n in enumerate(lens)
+    ]
+    # paged batch: each slot prefillled by replaying its prompt via decode
+    paged = init_cache(
+        cfg, b, max_len, layout="paged", num_pages=1 + b * mp, page_size=ps
+    )
+    bt = (1 + jnp.arange(b * mp, dtype=jnp.int32)).reshape(b, mp)
+    pstep = jax.jit(
+        lambda p, c, t, pos, bt: decode_step(cfg, p, c, t, pos, block_tables=bt)
+    )
+    # replay prompts token by token at ragged per-slot positions (slots
+    # that already ran out replay their last token at a parked position —
+    # their logits are ignored)
+    outs = {}
+    for t in range(max(lens)):
+        nt = jnp.stack(
+            [toks[i][0, min(t, lens[i] - 1)] for i in range(b)]
+        )[:, None]
+        pos = jnp.asarray([min(t, lens[i] - 1) for i in range(b)], jnp.int32)
+        lg, paged = pstep(params, paged, nt, pos, bt)
+        for i in range(b):
+            if t == lens[i] - 1:
+                outs[i] = np.asarray(lg[i, 0])
+    # reference: each prompt alone through the dense scalar-pos path
+    for i, n in enumerate(lens):
+        dense = init_cache(cfg, 1, max_len)
+        dstep = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+        for t in range(n):
+            lg, dense = dstep(params, dense, toks[i][:, t : t + 1], jnp.int32(t))
+        np.testing.assert_allclose(outs[i], np.asarray(lg[0, 0]), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching == fixed batch (token level)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_continuous_matches_fixed_batch_tokens(layout):
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(7)
+    n_req, s0 = 5, 6
+    prompts = rng.integers(0, cfg.vocab_size, (n_req, s0))
+    lens = [3, 9, 2, 7, 5]
+    max_len = s0 + max(lens) + 1
+    fixed = ServeEngine(cfg, params, max_len=max_len)
+    out = fixed.generate(jnp.asarray(prompts), steps=max(lens))
+    cbe = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=max_len, cache_layout=layout,
+        page_size=4, sync_interval=2,
+    )
+    comps = cbe.run(
+        [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i]) for i in range(n_req)]
+    )
+    for c in comps:
+        assert len(c.tokens) == lens[c.uid]
+        np.testing.assert_array_equal(
+            np.asarray(c.tokens), np.asarray(out[c.uid, s0 : s0 + lens[c.uid]])
+        )
+    # 2 slots < 5 requests: recycling really happened
+    assert cbe.stats["prefills"] == n_req
+    if layout == "paged":
+        assert cbe.stats["peak_pages"] > 0
+
+
+def test_continuous_eos_frees_slot_and_emits_padding_free_tokens():
+    """Force an eos mid-stream: the request stops at eos (inclusive), its
+    pages are freed, and a queued request takes the slot."""
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 5))
+    max_len = 24
+    fixed = ServeEngine(cfg, params, max_len=max_len)
+    ref_out = np.asarray(fixed.generate(jnp.asarray(prompts), steps=12))[:, 5:]
+    # pick the token the first sequence emits at step 3 as "eos"
+    eos = int(ref_out[0, 3])
+    cbe = ContinuousBatchingEngine(
+        cfg, params, slots=1, max_len=max_len, cache_layout="paged",
+        page_size=4, sync_interval=2, eos_id=eos,
+    )
+    comps = cbe.run(
+        [Request(uid=i, prompt=prompts[i], max_new_tokens=12) for i in range(3)]
+    )
+    for c in comps:
+        want = ref_out[c.uid]
+        stop = np.where(want == eos)[0]
+        n = int(stop[0]) + 1 if len(stop) else 12
+        assert len(c.tokens) == n, (c.uid, c.tokens, want)
+        np.testing.assert_array_equal(np.asarray(c.tokens), want[:n])
+    # all pages back in the pool after the run
+    assert cbe.stats["peak_pages"] > 0
+
+
+def test_serve_engine_eos_emits_pad_and_syncs_on_interval():
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 30), (2, 5), 0, cfg.vocab_size)
+    plain = ServeEngine(cfg, params, max_len=20)
+    base = np.asarray(plain.generate(prompts, steps=8))[:, 5:]
+    eos = int(base[0, 2])  # row 0 hits "eos" at step 2
+    eng = ServeEngine(cfg, params, max_len=20, eos_id=eos, sync_interval=4)
+    out = np.asarray(eng.generate(prompts, steps=8))[:, 5:]
+    row = out[0]
+    k = int(np.where(row == eos)[0][0])
+    # everything after the first eos is pad (== eos by default), not live
+    np.testing.assert_array_equal(row[k:], eos)
+    # a row that never hit eos is untouched
+    if not (base[1] == eos).any():
+        np.testing.assert_array_equal(out[1][: base.shape[1]], base[1])
+    assert eng.last_stats["decode_steps"] % eng.sync_interval == 0 or \
+        eng.last_stats["decode_steps"] == 8
