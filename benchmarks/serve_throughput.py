@@ -18,8 +18,15 @@ The paged arm also reports KV-cache memory: the dense layout pays
 ``slots * max_len`` per layer up front, paging pays only the pages the
 trace actually touched (peak), plus the null page.
 
+With ``--fleet N`` the run adds a fault-tolerant-fleet scenario: the same
+trace served by N worker subprocesses over a shared lease/journal root
+(`repro.serve.fleet`), reporting wall time and whether the merged token
+streams are byte-identical to a single-engine serial run (they must be).
+The default output and the committed BENCH json are unchanged.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput \
-        [--timing {simulated,wall}] [--out BENCH_serve_throughput.json]
+        [--timing {simulated,wall}] [--fleet N] \
+        [--out BENCH_serve_throughput.json]
 """
 
 from __future__ import annotations
@@ -27,6 +34,11 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
 from typing import Dict, List
 
 import numpy as np
@@ -183,12 +195,65 @@ def run(ns) -> Dict:
         )
         out["wall_distinguishable"] = bool(abs(fw - pw) > floor)
 
+    if ns.fleet:
+        out["fleet"] = run_fleet_scenario(ns, page_size)
+
     print(json.dumps(out, indent=2))
     if ns.out:
         with open(ns.out, "w") as f:
             json.dump(out, f, indent=2)
             f.write("\n")
     return out
+
+
+def run_fleet_scenario(ns, page_size: int) -> Dict:
+    """Serve the trace with N leased fleet workers and check the merged
+    journals against the serial reference (`repro.serve.fleet`)."""
+    from repro.serve.fleet import (
+        FleetSpec,
+        merge_streams,
+        publish_spec,
+        serve_serial,
+    )
+
+    spec = FleetSpec(
+        arch="qwen25_32b",
+        prompt_lens=tuple([PROMPT_LEN] * len(TRACE_NEW_TOKENS)),
+        max_new_tokens=tuple(TRACE_NEW_TOKENS),
+        seed=ns.seed, slots=SLOTS, max_len=PROMPT_LEN + max(TRACE_NEW_TOKENS) + 1,
+        page_size=page_size, sync_interval=SYNC_INTERVAL,
+    )
+    root = tempfile.mkdtemp(prefix="bench-serve-fleet-")
+    publish_spec(root, spec)
+    t0 = time.time()
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-m", "repro.serve.fleet", "run",
+             "--root", root, "--owner", f"bench-w{i}"],
+            env=dict(os.environ),
+        )
+        for i in range(ns.fleet)
+    ]
+    codes = [p.wait() for p in procs]
+    wall_s = time.time() - t0
+    streams, info = merge_streams(root, strict=True)
+    ref = serve_serial(spec)
+    serial_equiv = all(
+        streams.get(u, {}).get("complete")
+        and streams[u]["tokens"] == ref[u]["tokens"]
+        and streams[u]["status"] == ref[u]["status"]
+        for u in ref
+    )
+    tok = sum(len(s["tokens"]) for s in streams.values() if s["complete"])
+    return {
+        "workers": ns.fleet,
+        "wall_s": round(wall_s, 3),
+        "tokens": tok,
+        "tokens_per_s": round(tok / wall_s, 2) if wall_s else None,
+        "exit_codes": codes,
+        "journal": info,
+        "serial_equivalent": bool(serial_equiv),
+    }
 
 
 def main(argv=None):
@@ -201,6 +266,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--page-size", type=int, default=None,
                     help="override the tuned flash_decode page size")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="also serve the trace with N leased fleet worker "
+                         "subprocesses and verify serial equivalence")
     ap.add_argument("--out", default="BENCH_serve_throughput.json")
     args = ap.parse_args(argv)
     return run(args)

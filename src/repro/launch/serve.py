@@ -5,11 +5,18 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
         --continuous --requests 12 --slots 4 --cache-layout paged
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
+        --fleet 3 --requests 12 --slots 2
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -19,6 +26,45 @@ import numpy as np
 from repro.configs import ALIASES, get_config
 from repro.models.transformer import init_params
 from repro.serve.engine import ServeEngine
+
+
+def run_fleet(args, arch: str) -> None:
+    """Spawn N worker subprocesses over one shared fleet root and merge."""
+    from repro.serve.fleet import FleetSpec, merge_streams, publish_spec
+
+    rng = np.random.default_rng(args.seed)
+    lens = [int(x) for x in rng.integers(2, args.steps + 1, args.requests)]
+    spec = FleetSpec(
+        arch=arch, smoke=args.smoke,
+        prompt_lens=tuple([args.prompt_len] * args.requests),
+        max_new_tokens=tuple(lens), seed=args.seed, slots=args.slots,
+        max_len=args.prompt_len + args.steps + 1,
+        temperature=args.temperature, sync_interval=args.sync_interval,
+    )
+    root = args.fleet_root or tempfile.mkdtemp(prefix="serve-fleet-")
+    publish_spec(root, spec)
+    t0 = time.time()
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-m", "repro.serve.fleet", "run",
+             "--root", root, "--owner", f"w{i}"],
+            env=dict(os.environ),
+        )
+        for i in range(args.fleet)
+    ]
+    codes = [p.wait() for p in procs]
+    dt = time.time() - t0
+    streams, info = merge_streams(root, strict=True)
+    complete = sum(s["complete"] for s in streams.values())
+    tok = sum(len(s["tokens"]) for s in streams.values() if s["complete"])
+    print(
+        f"fleet of {args.fleet} workers served {complete}/{args.requests} "
+        f"requests ({tok} tokens) in {dt:.2f}s incl. per-worker compile — "
+        f"journals: {info['records']} records, {info['conflicts']} conflicts, "
+        f"{info['partial']} partial lines (root: {root})"
+    )
+    if any(codes) or complete < args.requests:
+        raise SystemExit(f"fleet incomplete: exit codes {codes}")
 
 
 def main() -> None:
@@ -41,7 +87,16 @@ def main() -> None:
                     help="--continuous: concurrent decode lanes")
     ap.add_argument("--cache-layout", choices=["paged", "dense"], default="paged")
     ap.add_argument("--sync-interval", type=int, default=8)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="spawn N leased fleet workers (repro.serve.fleet) "
+                         "over one shared root instead of serving in-process")
+    ap.add_argument("--fleet-root", default=None,
+                    help="--fleet: shared storage root (default: a tempdir)")
     args = ap.parse_args()
+
+    if args.fleet:
+        run_fleet(args, ALIASES.get(args.arch, args.arch))
+        return
 
     cfg = get_config(ALIASES.get(args.arch, args.arch), smoke=args.smoke)
     params = init_params(jax.random.key(args.seed), cfg)

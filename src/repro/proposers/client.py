@@ -63,7 +63,15 @@ class Completion:
 
 
 class TransportError(RuntimeError):
-    """Retryable transport fault (network error, 429, 5xx)."""
+    """Retryable transport fault (network error, 408/429/529, 5xx).
+
+    ``retry_after_s`` carries the server's ``Retry-After`` hint when one
+    was present (429/529/503 responses typically set it); the retry loop
+    honors it as a floor under its own backoff."""
+
+    def __init__(self, message: str, retry_after_s: Optional[float] = None):
+        super().__init__(message)
+        self.retry_after_s = retry_after_s
 
 
 class TokenBudgetExceeded(RuntimeError):
@@ -81,6 +89,14 @@ class RetryPolicy:
     ``default_rng((seed, r, a))`` — a pure function of the coordinates, so
     the delay schedule is reproducible across runs and independent of
     thread interleaving (a shared RNG cursor would not be).
+
+    Two bounds keep a request from outliving its usefulness:
+    ``total_deadline_s`` caps the *whole* retry loop (first byte of
+    attempt 1 to the last backoff sleep) — once the next sleep would
+    cross the deadline the loop gives up with the last error instead of
+    sleeping through it; ``sleep_cap_s`` clamps any single sleep (after
+    the server's ``Retry-After`` floor is applied), so a pathological
+    hint can't park a worker thread for minutes.
     """
 
     max_attempts: int = 4
@@ -88,12 +104,20 @@ class RetryPolicy:
     max_delay_s: float = 30.0
     jitter: float = 0.5  # uniform [0, jitter) * backoff added on top
     seed: int = 0
+    total_deadline_s: Optional[float] = None  # None: attempts bound only
+    sleep_cap_s: float = 60.0
 
-    def delay_s(self, request_id: int, attempt: int) -> float:
-        """Sleep before retry number ``attempt`` (1-based) of a request."""
+    def delay_s(self, request_id: int, attempt: int,
+                retry_after_s: Optional[float] = None) -> float:
+        """Sleep before retry number ``attempt`` (1-based) of a request.
+        A server ``Retry-After`` hint acts as a floor under the computed
+        backoff; ``sleep_cap_s`` clamps the result either way."""
         backoff = min(self.max_delay_s, self.base_delay_s * (2.0 ** (attempt - 1)))
         rng = np.random.default_rng((self.seed, request_id, attempt))
-        return backoff * (1.0 + self.jitter * float(rng.random()))
+        delay = backoff * (1.0 + self.jitter * float(rng.random()))
+        if retry_after_s is not None:
+            delay = max(delay, retry_after_s)
+        return min(delay, self.sleep_cap_s)
 
 
 class RateLimiter:
@@ -197,10 +221,15 @@ class LLMClient:
         retry: Optional[RetryPolicy] = None,
         rate_limiter: Optional[RateLimiter] = None,
         budget_gate: Optional[TokenBudgetGate] = None,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         self.retry = retry or RetryPolicy()
         self.rate_limiter = rate_limiter
         self.budget_gate = budget_gate
+        # injectable for deterministic timeout tests (scripted clock)
+        self._clock = clock
+        self._sleep = sleep
 
     # -- overridden by concrete transports --------------------------------
     def _send(self, request: CompletionRequest) -> Completion:
@@ -256,7 +285,11 @@ class LLMClient:
                 self.budget_gate.settle(est, actual)
 
     def _complete_with_retry(self, request: CompletionRequest) -> Completion:
-        t0 = time.monotonic()
+        t0 = self._clock()
+        deadline = (
+            None if self.retry.total_deadline_s is None
+            else t0 + self.retry.total_deadline_s
+        )
         last: Optional[TransportError] = None
         for attempt in range(1, self.retry.max_attempts + 1):
             if self.rate_limiter is not None:
@@ -266,13 +299,24 @@ class LLMClient:
             except TransportError as e:
                 last = e
                 if attempt < self.retry.max_attempts:
-                    time.sleep(self.retry.delay_s(request.request_id, attempt))
+                    delay = self.retry.delay_s(
+                        request.request_id, attempt,
+                        retry_after_s=e.retry_after_s,
+                    )
+                    if deadline is not None and self._clock() + delay > deadline:
+                        raise TransportError(
+                            f"request {request.request_id} abandoned after "
+                            f"{attempt} attempt(s): next retry would cross the "
+                            f"{self.retry.total_deadline_s:.1f}s deadline "
+                            f"(last error: {last})"
+                        ) from last
+                    self._sleep(delay)
                 continue
             if not comp.tokens_in:
                 comp.tokens_in = count_tokens(request.prompt)
             if not comp.tokens_out:
                 comp.tokens_out = count_tokens(comp.text)
-            comp.latency_s = time.monotonic() - t0
+            comp.latency_s = self._clock() - t0
             comp.attempts = attempt
             return comp
         raise TransportError(
@@ -369,14 +413,33 @@ class OpenAIClient(LLMClient):
 _RETRYABLE_HTTP = {408, 409, 429, 500, 502, 503, 504, 529}
 
 
+def _retry_after_s(headers) -> Optional[float]:
+    """Parse a ``Retry-After`` header's delay-seconds form (the HTTP-date
+    form is rare on API endpoints and not worth a date parser; it reads
+    as "no hint")."""
+    if headers is None:
+        return None
+    raw = headers.get("Retry-After")
+    if raw is None:
+        return None
+    try:
+        return max(0.0, float(raw))
+    except (TypeError, ValueError):
+        return None
+
+
 def _http_json(req: urllib.request.Request, timeout_s: float) -> Dict[str, Any]:
-    """POST and decode, mapping transient failures to `TransportError`."""
+    """POST and decode, mapping transient failures to `TransportError`
+    (including 408 timeouts and 529 overloads, carrying any ``Retry-After``
+    hint for the retry loop)."""
     try:
         with urllib.request.urlopen(req, timeout=timeout_s) as resp:
             return json.loads(resp.read())
     except urllib.error.HTTPError as e:
         if e.code in _RETRYABLE_HTTP:
-            raise TransportError(f"HTTP {e.code}") from e
+            raise TransportError(
+                f"HTTP {e.code}", retry_after_s=_retry_after_s(e.headers)
+            ) from e
         raise
     except (urllib.error.URLError, TimeoutError, OSError) as e:
         raise TransportError(str(e)) from e

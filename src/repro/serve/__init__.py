@@ -3,27 +3,44 @@
 Two generation loops share the model's decode step and sampling rule:
 `ServeEngine` (fixed batch, dense cache — the lock-step baseline) and
 `ContinuousBatchingEngine` (admission queue + slot recycling over a
-paged or dense cache — the production loop).
+paged or dense cache — the production loop).  `fleet` scales the latter
+to N leased worker processes on shared storage with crash-safe token
+journals (`repro.serve.fleet`).
 """
 
 from repro.serve.engine import (
     ServeEngine,
+    StepWatchdog,
     make_decode_step,
     make_prefill_step,
     sample_tokens,
 )
+from repro.serve.fleet import FleetSpec, FleetWorker, merge_streams, serve_serial
 from repro.serve.paged_cache import BlockTables, PageAllocator, required_pages
-from repro.serve.scheduler import Completion, ContinuousBatchingEngine, Request
+from repro.serve.scheduler import (
+    AdmissionTimeout,
+    Completion,
+    ContinuousBatchingEngine,
+    EngineHooks,
+    Request,
+)
 
 __all__ = [
+    "AdmissionTimeout",
     "BlockTables",
     "Completion",
     "ContinuousBatchingEngine",
+    "EngineHooks",
+    "FleetSpec",
+    "FleetWorker",
     "PageAllocator",
     "Request",
     "ServeEngine",
+    "StepWatchdog",
     "make_decode_step",
     "make_prefill_step",
+    "merge_streams",
     "required_pages",
     "sample_tokens",
+    "serve_serial",
 ]

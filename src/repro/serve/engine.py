@@ -13,13 +13,93 @@ sampling) with per-sequence stop handling — the minimal production loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import config as C
 from repro.models.transformer import decode_step, forward, init_cache
+
+
+class StepWatchdog:
+    """Detect wedged decode windows and fire a callback *before* lease TTL.
+
+    A serving worker that hangs inside a decode window (device fault,
+    deadlocked transfer) would otherwise sit on its request leases until
+    they time out — the fleet's reaper frees them only after TTL.  The
+    watchdog arms around each window; a background thread fires
+    ``on_wedged`` once a window has been open longer than
+    ``step_timeout_s``, letting the worker release its leases immediately
+    so another worker can steal the requests without waiting out the TTL.
+
+    ``on_wedged`` runs on the watchdog thread while the worker thread is
+    (by hypothesis) stuck, so it must touch only thread-safe state —
+    releasing lease files and setting flags is fine; JAX calls are not.
+    Fires at most once per arm(); a disarm() re-arms eligibility.
+    ``clock`` is injectable for deterministic tests.
+    """
+
+    def __init__(
+        self,
+        step_timeout_s: float,
+        on_wedged: Callable[[float], None],
+        *,
+        poll_s: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if step_timeout_s <= 0:
+            raise ValueError("step_timeout_s must be positive")
+        self.step_timeout_s = step_timeout_s
+        self.on_wedged = on_wedged
+        self.poll_s = poll_s if poll_s is not None else min(0.05, step_timeout_s / 4)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._armed_at: Optional[float] = None
+        self._fired = False
+        self.fired_count = 0
+        self._halt = threading.Event()
+        self._thread = threading.Thread(target=self._watch, daemon=True)
+        self._thread.start()
+
+    def arm(self) -> None:
+        """A window is starting: begin the countdown."""
+        with self._lock:
+            self._armed_at = self._clock()
+            self._fired = False
+
+    def disarm(self) -> None:
+        """The window completed in time: stop the countdown."""
+        with self._lock:
+            self._armed_at = None
+
+    def stop(self) -> None:
+        self._halt.set()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "StepWatchdog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _watch(self) -> None:
+        while not self._halt.wait(self.poll_s):
+            fire_with: Optional[float] = None
+            with self._lock:
+                if self._armed_at is not None and not self._fired:
+                    waited = self._clock() - self._armed_at
+                    if waited > self.step_timeout_s:
+                        self._fired = True
+                        self.fired_count += 1
+                        fire_with = waited
+            if fire_with is not None:
+                try:
+                    self.on_wedged(fire_with)
+                except Exception:
+                    pass  # a crashing handler must not kill the watchdog
 
 
 def _pad_cache_to(cfg: C.ModelConfig, cache: Any, batch: int, max_len: int) -> Any:

@@ -1,0 +1,606 @@
+"""Fault-tolerant serving fleet: leased requests + crash-safe token journals.
+
+N independent worker processes on shared storage serve one request set
+with no coordinator.  Each worker loops: scan the merged journals for
+streams that are already complete, lease a batch of the remaining
+requests (`repro.sweep.lease` — TTL + heartbeat + steal-with-readback),
+serve them through its own `ContinuousBatchingEngine`, and append every
+emitted token chunk to a private per-worker journal using the
+`repro.sweep.merge` O_APPEND torn-tail-healing discipline.  A worker that
+dies mid-stream simply stops heartbeating; any other worker steals the
+expired lease and replays the request *from scratch* — that is the reaper
+path, it needs no dedicated process.
+
+Correctness is determinism + merge, not mutual exclusion:
+
+* decoding is deterministic (greedy, or per-uid-seeded sampling keyed off
+  the spec seed), and per-request streams are batching-invariant, so any
+  worker — or two workers racing the same request through the lease
+  layer's documented TOCTOU window — produces the *same* token at the
+  same ``(uid, token_index)``;
+* `merge_streams` assembles streams cell-by-cell with last-write-wins
+  dedup by ``(uid, token_index)``; duplicated work collapses, a dead
+  worker's prefix is subsumed by its thief's replay, and the merged
+  output is byte-identical to a single-engine serial run
+  (`serve_serial`) — the fleet's chaos gate.
+
+Inside each worker, three degradation paths keep one bad request or one
+sick device from taking the worker (or its peers' requests) down:
+
+* a `StepWatchdog` (`repro.serve.engine`) detects a wedged decode window
+  and immediately releases the worker's leases — peers steal the
+  requests now instead of after TTL — then cancels its own streams per
+  the lost-ownership contract (`repro.sweep.lease`);
+* page-pool exhaustion sheds the starved admission with a retryable
+  ``status="shed"`` (no journal record, lease released → re-admitted
+  later) instead of spinning (`AdmissionTimeout`, ``on_starved="shed"``);
+* non-finite logits retire the poisoned slot with a terminal
+  ``status="error"`` journal record — deterministically, so every worker
+  agrees the request is poison and nobody retries it forever.
+
+CLI: ``python -m repro.serve.fleet {run,merge,status}`` (see `main`).
+Importing this module stays light; the jax/engine stack loads only when
+a worker actually serves.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.ioutil import tmp_suffix
+from repro.sweep.lease import LeaseStore
+from repro.sweep.merge import append_jsonl, read_jsonl
+
+SPEC_NAME = "fleet.json"
+LEASE_DIR = "leases"
+JOURNAL_PREFIX = "journal-"
+
+
+# --------------------------------------------------------------------------
+# spec: the one JSON every worker must agree on
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Deterministic request-set + engine description.
+
+    Everything a worker needs to rebuild the exact engine and request
+    list: prompts are generated per-uid from ``default_rng((seed, uid))``
+    and params from ``jax.random.key(seed)``, so every worker — and the
+    serial reference — sees identical inputs.  ``num_pages=None`` sizes
+    the pool so it can never starve; a small explicit pool exercises the
+    shed/backpressure path.
+    """
+
+    arch: str
+    prompt_lens: Tuple[int, ...]
+    max_new_tokens: Tuple[int, ...]
+    seed: int = 0
+    slots: int = 2
+    max_len: int = 32
+    page_size: int = 4
+    sync_interval: int = 2
+    temperature: float = 0.0
+    num_pages: Optional[int] = None
+    smoke: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt_lens", tuple(self.prompt_lens))
+        object.__setattr__(self, "max_new_tokens", tuple(self.max_new_tokens))
+        if len(self.prompt_lens) != len(self.max_new_tokens):
+            raise ValueError("prompt_lens and max_new_tokens must align")
+        for s0, mn in zip(self.prompt_lens, self.max_new_tokens):
+            if s0 + mn > self.max_len:
+                raise ValueError(f"request ({s0}+{mn}) exceeds max_len {self.max_len}")
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.prompt_lens)
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FleetSpec":
+        return cls(**d)
+
+
+def spec_path(root: str) -> str:
+    return os.path.join(root, SPEC_NAME)
+
+
+def publish_spec(root: str, spec: FleetSpec) -> FleetSpec:
+    """Create-or-verify: first writer wins atomically (temp + os.link);
+    later writers must agree byte-for-byte with the published spec, so a
+    fleet can never split-brain on what the request set is."""
+    os.makedirs(root, exist_ok=True)
+    path = spec_path(root)
+    tmp = path + tmp_suffix()
+    with open(tmp, "w") as f:
+        json.dump(spec.to_dict(), f, indent=1, sort_keys=True)
+    try:
+        os.link(tmp, path)
+        return spec
+    except FileExistsError:
+        pass
+    finally:
+        try:
+            os.unlink(tmp)
+        except FileNotFoundError:
+            pass
+    existing = load_spec(root)
+    if existing != spec:
+        raise RuntimeError(f"fleet root {root} already holds a different spec")
+    return existing
+
+
+def load_spec(root: str) -> FleetSpec:
+    with open(spec_path(root)) as f:
+        return FleetSpec.from_dict(json.load(f))
+
+
+def request_slug(uid: int) -> str:
+    return f"req-{uid:05d}"
+
+
+def journal_path(root: str, owner: str) -> str:
+    return os.path.join(root, f"{JOURNAL_PREFIX}{owner}.jsonl")
+
+
+def journal_paths(root: str) -> List[str]:
+    try:
+        names = sorted(os.listdir(root))
+    except FileNotFoundError:
+        return []
+    return [
+        os.path.join(root, n)
+        for n in names
+        if n.startswith(JOURNAL_PREFIX) and n.endswith(".jsonl")
+    ]
+
+
+# --------------------------------------------------------------------------
+# engine construction + the serial reference
+# --------------------------------------------------------------------------
+def build_engine(spec: FleetSpec, *, params: Any = None,
+                 admission_timeout_s: Optional[float] = 5.0,
+                 on_starved: str = "shed"):
+    """(cfg, params, engine) for a spec — identical on every worker.
+    ``params`` overrides the seeded init (tests inject poisoned params)."""
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import init_params
+    from repro.serve.scheduler import ContinuousBatchingEngine
+
+    cfg = get_config(spec.arch, smoke=spec.smoke)
+    if spec.smoke:
+        cfg = _dc.replace(cfg, compute_dtype="float32")
+    if params is None:
+        params = init_params(jax.random.key(spec.seed), cfg)
+    engine = ContinuousBatchingEngine(
+        cfg, params, slots=spec.slots, max_len=spec.max_len,
+        cache_layout="paged", page_size=spec.page_size,
+        num_pages=spec.num_pages, temperature=spec.temperature,
+        sync_interval=spec.sync_interval, seed=spec.seed,
+        admission_timeout_s=admission_timeout_s, on_starved=on_starved,
+    )
+    return cfg, params, engine
+
+
+def build_requests(spec: FleetSpec, vocab_size: int, uids: Optional[List[int]] = None):
+    """The spec's deterministic request list (optionally a uid subset)."""
+    from repro.serve.scheduler import Request
+
+    out = []
+    for uid in uids if uids is not None else range(spec.n_requests):
+        rng = np.random.default_rng((spec.seed, uid))
+        prompt = rng.integers(0, vocab_size, spec.prompt_lens[uid])
+        out.append(Request(uid=uid, prompt=prompt,
+                           max_new_tokens=spec.max_new_tokens[uid]))
+    return out
+
+
+def completion_record(comp, prompt_len: int) -> Dict:
+    return {
+        "uid": comp.uid,
+        "prompt_len": prompt_len,
+        "status": comp.status,
+        "error": comp.error,
+        "n": len(comp.tokens),
+        "tokens": [int(t) for t in comp.tokens],
+    }
+
+
+def serve_serial(spec: FleetSpec, *, params: Any = None) -> Dict[int, Dict]:
+    """The reference: one engine, every request, uid order.  The pool is
+    sized to never starve (token streams are pool-size-invariant, so this
+    matches any fleet worker's streams byte-for-byte)."""
+    ample = dataclasses.replace(spec, num_pages=None)
+    cfg, _, engine = build_engine(
+        ample, params=params, admission_timeout_s=None, on_starved="raise"
+    )
+    reqs = build_requests(spec, cfg.vocab_size)
+    comps = engine.run(reqs)
+    return {c.uid: completion_record(c, len(reqs[c.uid].prompt)) for c in comps}
+
+
+# --------------------------------------------------------------------------
+# journal merge: (uid, token_index) cells -> streams
+# --------------------------------------------------------------------------
+def merge_streams(root: str, *, strict: bool = False) -> Tuple[Dict[int, Dict], Dict]:
+    """Merge every worker journal under `root` into per-uid streams.
+
+    Token chunks expand into ``(uid, token_index)`` cells, deduped
+    last-write-wins in (sorted file, line) order; terminal records dedupe
+    by uid the same way.  Determinism means duplicates are identical —
+    ``conflicts`` counts the times they were not (and with ``strict``
+    raises instead), which is the divergence alarm the chaos tests
+    assert stays at zero.  A stream is ``complete`` only when its
+    terminal record exists and every cell ``0..n-1`` is present.
+    """
+    cells: Dict[Tuple[int, int], int] = {}
+    ends: Dict[int, Dict] = {}
+    conflicts = partial = nrecords = 0
+
+    def note_conflict(what: str) -> None:
+        nonlocal conflicts
+        conflicts += 1
+        if strict:
+            raise RuntimeError(f"divergent fleet journals: {what}")
+
+    for path in journal_paths(root):
+        records, p = read_jsonl(path)
+        partial += p
+        for rec in records:
+            if not isinstance(rec, dict):
+                partial += 1
+                continue
+            kind, uid = rec.get("kind"), rec.get("uid")
+            if not isinstance(uid, int):
+                partial += 1
+                continue
+            nrecords += 1
+            if kind == "tokens":
+                start, toks = rec.get("start", 0), rec.get("toks", [])
+                for i, tok in enumerate(toks):
+                    key = (uid, start + i)
+                    if key in cells and cells[key] != tok:
+                        note_conflict(
+                            f"uid {uid} token {start + i}: "
+                            f"{cells[key]} vs {tok} ({path})"
+                        )
+                    cells[key] = tok
+            elif kind == "end":
+                prev = ends.get(uid)
+                if prev is not None and (
+                    prev.get("n") != rec.get("n")
+                    or prev.get("status") != rec.get("status")
+                ):
+                    note_conflict(f"uid {uid} terminal records disagree ({path})")
+                ends[uid] = rec
+            else:
+                partial += 1
+
+    streams: Dict[int, Dict] = {}
+    for uid in sorted(set(ends) | {u for u, _ in cells}):
+        end = ends.get(uid)
+        n = end.get("n") if end else None
+        toks = [cells.get((uid, i)) for i in range(n)] if n is not None else [
+            cells[k] for k in sorted(cells) if k[0] == uid
+        ]
+        complete = end is not None and all(t is not None for t in toks)
+        streams[uid] = {
+            "uid": uid,
+            "prompt_len": end.get("prompt_len") if end else None,
+            "status": end.get("status") if end else None,
+            "error": end.get("error") if end else None,
+            "n": n,
+            "tokens": toks,
+            "complete": complete,
+        }
+    info = {"records": nrecords, "conflicts": conflicts, "partial": partial}
+    return streams, info
+
+
+def done_uids(root: str) -> set:
+    streams, _ = merge_streams(root)
+    return {u for u, s in streams.items() if s["complete"]}
+
+
+# --------------------------------------------------------------------------
+# worker
+# --------------------------------------------------------------------------
+class FleetWorker:
+    """One serving worker: lease, serve, journal, repeat until the fleet
+    is done.
+
+    Fault-injection knobs (tests only): ``throttle_s`` sleeps between
+    decode windows (slows a victim so a SIGKILL lands mid-stream);
+    ``wedge_uid``/``wedge_s`` fakes one wedged window while that uid is
+    being served (exercises the watchdog); ``max_batches`` bounds the
+    loop.
+    """
+
+    def __init__(
+        self,
+        root: str,
+        owner: Optional[str] = None,
+        *,
+        ttl: float = 30.0,
+        heartbeat_s: float = 1.0,
+        poll_s: float = 0.2,
+        step_timeout_s: Optional[float] = None,
+        admission_timeout_s: Optional[float] = 5.0,
+        throttle_s: float = 0.0,
+        wedge_uid: Optional[int] = None,
+        wedge_s: float = 0.0,
+        max_batches: Optional[int] = None,
+        params: Any = None,
+    ):
+        self.root = root
+        self.owner = owner or f"worker{tmp_suffix()}"
+        self.spec = load_spec(root)
+        self.store = LeaseStore(os.path.join(root, LEASE_DIR), self.owner, ttl)
+        self.journal = journal_path(root, self.owner)
+        self.heartbeat_s = heartbeat_s
+        self.poll_s = poll_s
+        self.step_timeout_s = step_timeout_s
+        self.admission_timeout_s = admission_timeout_s
+        self.throttle_s = throttle_s
+        self.wedge_uid = wedge_uid
+        self.wedge_s = wedge_s
+        self.wedge_pending = wedge_uid is not None and wedge_s > 0
+        self.max_batches = max_batches
+        self._params = params
+        self._engine = None
+        self._cfg = None
+        self.stats = {
+            "batches": 0, "ok": 0, "error": 0, "shed": 0,
+            "cancelled": 0, "watchdog_fired": 0, "stolen_from_us": 0,
+        }
+
+    # ------------------------------------------------------------------
+    def _ensure_engine(self):
+        if self._engine is None:
+            self._cfg, self._params, self._engine = build_engine(
+                self.spec, params=self._params,
+                admission_timeout_s=self.admission_timeout_s,
+                on_starved="shed",
+            )
+        return self._cfg, self._engine
+
+    def _claim(self, done: set) -> List[int]:
+        claimed = []
+        for uid in range(self.spec.n_requests):
+            if len(claimed) >= self.spec.slots:
+                break
+            if uid in done:
+                continue
+            if self.store.try_acquire(request_slug(uid)):
+                claimed.append(uid)
+        if claimed:
+            # recheck-done: someone may have finished a uid between our
+            # scan and the acquire — drop it rather than re-serve
+            done2 = done_uids(self.root)
+            for uid in [u for u in claimed if u in done2]:
+                self.store.release(request_slug(uid))
+                claimed.remove(uid)
+        return claimed
+
+    def _serve_batch(self, claimed: List[int]) -> None:
+        from repro.serve.engine import StepWatchdog
+        from repro.serve.scheduler import EngineHooks
+
+        cfg, engine = self._ensure_engine()
+        reqs = build_requests(self.spec, cfg.vocab_size, claimed)
+        prompt_lens = {r.uid: len(r.prompt) for r in reqs}
+        lost: set = set()
+        lost_lock = threading.Lock()
+
+        def mark_lost(uid: int) -> None:
+            with lost_lock:
+                lost.add(uid)
+
+        # heartbeat thread: a False bump means the lease was stolen — the
+        # lost-ownership contract (sweep.lease) says stop emitting NOW
+        halt = threading.Event()
+
+        def beat() -> None:
+            while not halt.wait(self.heartbeat_s):
+                for uid in claimed:
+                    with lost_lock:
+                        if uid in lost:
+                            continue
+                    if not self.store.heartbeat(request_slug(uid)):
+                        mark_lost(uid)
+                        self.stats["stolen_from_us"] += 1
+
+        def on_wedged(waited: float) -> None:
+            # wedged decode window: free the requests for stealing right
+            # away instead of making peers wait out the TTL, and cancel
+            # our own streams if the window ever unwedges
+            self.stats["watchdog_fired"] += 1
+            for uid in claimed:
+                mark_lost(uid)
+                self.store.release(request_slug(uid))
+
+        watchdog = (
+            StepWatchdog(self.step_timeout_s, on_wedged)
+            if self.step_timeout_s is not None
+            else None
+        )
+
+        def on_window_start() -> None:
+            if watchdog is not None:
+                watchdog.arm()
+            if self.wedge_pending and self.wedge_uid in claimed:
+                self.wedge_pending = False
+                time.sleep(self.wedge_s)
+
+        def on_window_end() -> None:
+            if watchdog is not None:
+                watchdog.disarm()
+            if self.throttle_s > 0:
+                time.sleep(self.throttle_s)
+
+        def on_tokens(uid: int, start: int, toks: List[int]) -> None:
+            with lost_lock:
+                if uid in lost:
+                    return
+            append_jsonl(self.journal, {
+                "kind": "tokens", "uid": uid, "start": start,
+                "toks": [int(t) for t in toks],
+            })
+
+        def should_cancel(uid: int) -> bool:
+            with lost_lock:
+                return uid in lost
+
+        def on_retire(comp) -> None:
+            self.stats[comp.status] = self.stats.get(comp.status, 0) + 1
+            with lost_lock:
+                if comp.uid in lost:
+                    return
+            if comp.status in ("ok", "error"):
+                append_jsonl(self.journal, {
+                    "kind": "end", "uid": comp.uid, "n": len(comp.tokens),
+                    "status": comp.status, "error": comp.error,
+                    "prompt_len": prompt_lens[comp.uid],
+                })
+            # "shed" / "cancelled": no record — the request stays pending
+            # and is re-admitted by whoever leases it next
+
+        hooks = EngineHooks(
+            on_tokens=on_tokens, should_cancel=should_cancel,
+            on_retire=on_retire, on_window_start=on_window_start,
+            on_window_end=on_window_end,
+        )
+        hb = threading.Thread(target=beat, daemon=True)
+        hb.start()
+        try:
+            engine.run(reqs, hooks=hooks)
+        finally:
+            halt.set()
+            hb.join(timeout=10.0)
+            if watchdog is not None:
+                watchdog.stop()
+            for uid in claimed:
+                self.store.release(request_slug(uid))  # no-op if stolen
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict:
+        """Serve until every stream is complete (or max_batches).  Returns
+        the worker's stats."""
+        while True:
+            done = done_uids(self.root)
+            if len(done) >= self.spec.n_requests:
+                break
+            if (
+                self.max_batches is not None
+                and self.stats["batches"] >= self.max_batches
+            ):
+                break
+            claimed = self._claim(done)
+            if not claimed:
+                time.sleep(self.poll_s)  # live leases elsewhere: wait/steal
+                continue
+            self.stats["batches"] += 1
+            self._serve_batch(claimed)
+        return dict(self.stats)
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+def _cmd_run(args) -> int:
+    if args.spec:
+        with open(args.spec) as f:
+            publish_spec(args.root, FleetSpec.from_dict(json.load(f)))
+    worker = FleetWorker(
+        args.root, args.owner, ttl=args.ttl, heartbeat_s=args.heartbeat,
+        poll_s=args.poll, step_timeout_s=args.step_timeout,
+        admission_timeout_s=args.admission_timeout,
+        throttle_s=args.throttle, wedge_uid=args.wedge_uid,
+        wedge_s=args.wedge_s, max_batches=args.max_batches,
+    )
+    stats = worker.run()
+    print(json.dumps({"owner": worker.owner, **stats}))
+    return 0
+
+
+def _cmd_merge(args) -> int:
+    streams, info = merge_streams(args.root, strict=args.strict)
+    out = {"streams": [streams[u] for u in sorted(streams)], "info": info}
+    if args.out:
+        from repro.ioutil import atomic_write
+
+        atomic_write(args.out, lambda f: json.dump(out, f, indent=1), mode="w")
+    print(json.dumps(out["info"] | {
+        "streams": len(streams),
+        "complete": sum(s["complete"] for s in streams.values()),
+    }))
+    return 0
+
+
+def _cmd_status(args) -> int:
+    spec = load_spec(args.root)
+    done = done_uids(args.root)
+    store = LeaseStore(os.path.join(args.root, LEASE_DIR), "<status>", 1.0,
+                       create=False)
+    leases = store.all_leases()
+    print(json.dumps({
+        "requests": spec.n_requests,
+        "complete": len(done),
+        "leased": len(leases),
+        "expired": sum(l.expired() for l in leases),
+        "owners": sorted({l.owner for l in leases}),
+    }))
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(prog="repro.serve.fleet", description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    r = sub.add_parser("run", help="run one serving worker to completion")
+    r.add_argument("--root", required=True)
+    r.add_argument("--owner", default=None)
+    r.add_argument("--spec", default=None, help="publish this spec JSON first")
+    r.add_argument("--ttl", type=float, default=30.0)
+    r.add_argument("--heartbeat", type=float, default=1.0)
+    r.add_argument("--poll", type=float, default=0.2)
+    r.add_argument("--step-timeout", type=float, default=None)
+    r.add_argument("--admission-timeout", type=float, default=5.0)
+    r.add_argument("--throttle", type=float, default=0.0)
+    r.add_argument("--wedge-uid", type=int, default=None)
+    r.add_argument("--wedge-s", type=float, default=0.0)
+    r.add_argument("--max-batches", type=int, default=None)
+    r.set_defaults(fn=_cmd_run)
+
+    m = sub.add_parser("merge", help="merge worker journals into streams")
+    m.add_argument("--root", required=True)
+    m.add_argument("--out", default=None)
+    m.add_argument("--strict", action="store_true")
+    m.set_defaults(fn=_cmd_merge)
+
+    s = sub.add_parser("status", help="fleet progress + lease health")
+    s.add_argument("--root", required=True)
+    s.set_defaults(fn=_cmd_status)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

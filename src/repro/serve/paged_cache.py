@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List
+from typing import List, Set
 
 import numpy as np
 
@@ -47,7 +47,14 @@ def required_pages(slots: int, max_len: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Lowest-id-first free-list allocator over ``num_pages`` pages."""
+    """Lowest-id-first free-list allocator over ``num_pages`` pages.
+
+    Tracks the held set alongside the free heap so grant/return bugs fail
+    at the faulty call instead of corrupting a live sequence's memory:
+    allocating a page that is already held (double-grant) or freeing one
+    that isn't (double-free / foreign page) raises immediately, and
+    ``held + available == capacity`` is a checkable invariant at every
+    point (the serving fleet's paged_cache fuzz leans on it)."""
 
     def __init__(self, num_pages: int):
         if num_pages < 2:
@@ -55,10 +62,22 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: List[int] = list(range(1, num_pages))  # 0 = null page
         heapq.heapify(self._free)
+        self._held: Set[int] = set()
 
     @property
     def available(self) -> int:
         return len(self._free)
+
+    @property
+    def held(self) -> int:
+        """Pages currently granted and not yet returned."""
+        return len(self._held)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (the pool minus the reserved null page) —
+        the ceiling admission backpressure checks a prompt against."""
+        return self.num_pages - 1
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
@@ -66,11 +85,22 @@ class PageAllocator:
                 f"KV page pool exhausted: asked {n}, {len(self._free)} free "
                 f"of {self.num_pages} (size the pool with required_pages())"
             )
-        return [heapq.heappop(self._free) for _ in range(n)]
+        pages = [heapq.heappop(self._free) for _ in range(n)]
+        for p in pages:
+            if p == NULL_PAGE or p in self._held:
+                raise RuntimeError(f"allocator double-granted page {p}")
+        self._held.update(pages)
+        return pages
 
     def free(self, pages: List[int]) -> None:
         for p in pages:
-            assert p != NULL_PAGE, "freeing the null page"
+            if p == NULL_PAGE:
+                raise RuntimeError("freeing the null page")
+            if p not in self._held:
+                raise RuntimeError(
+                    f"freeing page {p} that is not held (double-free?)"
+                )
+            self._held.discard(p)
             heapq.heappush(self._free, p)
 
 

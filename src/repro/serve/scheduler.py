@@ -30,6 +30,27 @@ slabs with the same scheduling (the ablation arm of
 produce token streams identical to the fixed-batch engine — per-request
 decode is batching-invariant — which is the scheduler's correctness
 gate in tests/test_serve_paged.py.
+
+**Graceful degradation** (the serving fleet's requirements, usable
+standalone):
+
+* *Typed admission failure* — a request the page pool can never hold
+  fails immediately, and one starved past ``admission_timeout_s`` fails
+  on its deadline, both as `AdmissionTimeout` (no bare spin loops).
+  ``on_starved="shed"`` converts the failure into a `Completion` with a
+  retryable ``status="shed"`` (or terminal ``"error"`` when the request
+  could never fit) instead of raising, so one oversized request cannot
+  take down the worker's other streams.
+* *Non-finite-logit detection* — the jitted step flags rows whose logits
+  went NaN/inf; at the next sync the poisoned slot is retired with
+  ``status="error"`` and the garbage token is dropped, instead of
+  streaming it.  Deterministic: a poisoned request errors identically in
+  a serial run and on any fleet worker.
+* *Streaming hooks* (`EngineHooks`) — per-sync token callbacks, a
+  cancellation predicate consulted at every sync (the lease
+  lost-ownership contract: stop emitting immediately), and window
+  start/end callbacks a watchdog can arm against (`serve/engine.py`
+  `StepWatchdog`).
 """
 
 from __future__ import annotations
@@ -37,7 +58,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +83,57 @@ class Completion:
     uid: int
     prompt_len: int
     tokens: List[int]  # generated tokens, eos included when hit
+    # "ok" | "error" (terminal: poisoned logits / impossible admission) |
+    # "shed" (retryable: admission starved past its deadline) |
+    # "cancelled" (caller's should_cancel — e.g. a lost lease)
+    status: str = "ok"
+    error: Optional[str] = None
+
+
+class AdmissionTimeout(RuntimeError):
+    """Admission could not be satisfied: the prompt needs more pages than
+    the pool will ever have (``reason="impossible"``), every holder
+    retired and there is still not enough (``"starved"``), or the
+    configured ``admission_timeout_s`` elapsed first (``"timeout"``)."""
+
+    def __init__(self, uid: int, needed: int, available: int, reason: str,
+                 waited_s: float = 0.0):
+        self.uid = uid
+        self.needed = needed
+        self.available = available
+        self.reason = reason
+        self.waited_s = waited_s
+        detail = {
+            "impossible": f"needs {needed} page(s) but the pool only ever has "
+                          f"{available} allocatable",
+            "starved": f"needs {needed} page(s), {available} free with no "
+                       "active sequences left to retire",
+            "timeout": f"needs {needed} page(s), {available} free after "
+                       f"waiting {waited_s:.2f}s (admission_timeout_s)",
+        }[reason]
+        super().__init__(f"admission of request {uid} failed ({reason}): {detail}")
+
+
+@dataclasses.dataclass
+class EngineHooks:
+    """Streaming integration points for `ContinuousBatchingEngine.run`.
+
+    All callbacks fire on the host loop thread at sync granularity; every
+    field is optional.  ``on_tokens(uid, start, tokens)`` reports the
+    tokens newly finalized for a stream (``start`` = index of the first
+    one, so a journal can dedupe by ``(uid, token_index)``);
+    ``should_cancel(uid)`` is consulted per stream at every sync and at
+    admission — True drops the stream immediately with no further
+    ``on_tokens`` (the lease lost-ownership contract); ``on_retire``
+    fires once per request with its final `Completion`;
+    ``on_window_start``/``on_window_end`` bracket one admission + decode
+    window + sync pass (arm a `StepWatchdog` across them)."""
+
+    on_tokens: Optional[Callable[[int, int, List[int]], None]] = None
+    should_cancel: Optional[Callable[[int], bool]] = None
+    on_retire: Optional[Callable[[Completion], None]] = None
+    on_window_start: Optional[Callable[[], None]] = None
+    on_window_end: Optional[Callable[[], None]] = None
 
 
 @dataclasses.dataclass
@@ -160,6 +233,9 @@ class ContinuousBatchingEngine:
         pad_id: int = 0,
         sync_interval: int = 8,
         seed: int = 0,
+        admission_timeout_s: Optional[float] = None,
+        on_starved: str = "raise",
+        clock: Callable[[], float] = time.monotonic,
     ):
         assert cfg.num_codebooks == 1 and cfg.num_prefix_embeds == 0, (
             "continuous batching serves text-only configs"
@@ -186,6 +262,11 @@ class ContinuousBatchingEngine:
         self.pad_id = pad_id
         self.sync_interval = max(1, sync_interval)
         self.key = jax.random.key(seed)
+        if on_starved not in ("raise", "shed"):
+            raise ValueError(on_starved)
+        self.admission_timeout_s = admission_timeout_s
+        self.on_starved = on_starved
+        self._clock = clock
         self.stats: Dict[str, Any] = {}
 
         self._prefill = jax.jit(
@@ -208,6 +289,11 @@ class ContinuousBatchingEngine:
                 block_tables=bt if paged else None,
             )
             lg = logits[:, 0]
+            live = ~done
+            # poisoned rows: NaN/inf logits on a live lane.  The flag rides
+            # back to the host with the window's emits; the sync pass drops
+            # the garbage token and retires the slot with a typed error.
+            bad = live & ~jnp.isfinite(lg).all(axis=-1)
             if temperature > 0.0:
                 keys = jax.vmap(
                     lambda u, g: jax.random.fold_in(jax.random.fold_in(key, u), g)
@@ -220,20 +306,25 @@ class ContinuousBatchingEngine:
                 )(keys, lg)
             else:
                 nxt = sample_tokens(lg, vocab_size=cfg.vocab_size)
-            live = ~done
             emit = jnp.where(live, nxt, jnp.int32(pad_id))
             gen1 = gen + live
-            done1 = done | (live & (gen1 >= max_new))
+            done1 = done | (live & (gen1 >= max_new)) | bad
             if eos_id is not None:
                 done1 = done1 | (live & (emit == eos_id))
             cur1 = jnp.where(done1, jnp.int32(pad_id), emit)
             pos1 = pos + live
-            return cache, emit, cur1, pos1, done1, gen1
+            return cache, emit, bad, cur1, pos1, done1, gen1
 
         return jax.jit(step, donate_argnums=(1,))
 
     # -- host loop ---------------------------------------------------------
-    def run(self, requests: List[Request]) -> List[Completion]:
+    def run(
+        self,
+        requests: List[Request],
+        *,
+        hooks: Optional[EngineHooks] = None,
+    ) -> List[Completion]:
+        hooks = hooks or EngineHooks()
         cfg, b = self.cfg, self.slots
         for r in requests:
             assert len(r.prompt) + r.max_new_tokens <= self.max_len, (
@@ -267,17 +358,67 @@ class ContinuousBatchingEngine:
         active: List[Optional[_SlotState]] = [None] * b
         free = list(range(b - 1, -1, -1))  # pop() yields lowest slot first
         results: Dict[int, List[int]] = {}
+        comps: Dict[int, Completion] = {}
+        reported: Dict[int, int] = {}  # tokens already handed to on_tokens
+        prompt_lens = {r.uid: len(r.prompt) for r in requests}
         pos_h = np.zeros(b, np.int64)  # optimistic host mirror of pos
         gen_prev = np.zeros(b, np.int64)
         decode_steps = prefills = 0
-        peak_pages = 0
+        peak_pages = shed = cancelled = errors = 0
+        wait_uid: Optional[int] = None  # head-of-queue starvation tracking
+        wait_t0 = 0.0
         step_key = jax.random.fold_in(self.key, 1)  # per-row keys fold uid/gen
 
-        def admit(slot: int, req: Request):
+        def emit_tokens(uid: int) -> None:
+            """Report any not-yet-reported tokens of a stream."""
+            cur_n = reported.get(uid, 0)
+            full = results[uid]
+            if hooks.on_tokens is not None and len(full) > cur_n:
+                hooks.on_tokens(uid, cur_n, list(full[cur_n:]))
+            reported[uid] = len(full)
+
+        def finish(uid: int, status: str, error: Optional[str] = None) -> None:
+            nonlocal shed, cancelled, errors
+            if status in ("ok", "error"):
+                emit_tokens(uid)
+            shed += status == "shed"
+            cancelled += status == "cancelled"
+            errors += status == "error"
+            comp = Completion(
+                uid, prompt_lens[uid], results.setdefault(uid, []), status, error
+            )
+            comps[uid] = comp
+            if hooks.on_retire is not None:
+                hooks.on_retire(comp)
+
+        def cancel_requested(uid: int) -> bool:
+            return hooks.should_cancel is not None and hooks.should_cancel(uid)
+
+        def starve(req: Request, reason: str, need: int, avail: int,
+                   waited: float) -> None:
+            """A request admission cannot satisfy: raise, or shed it with a
+            retryable (timeout/starved) or terminal (impossible) status."""
+            if self.on_starved == "raise":
+                raise AdmissionTimeout(req.uid, need, avail, reason, waited)
+            err = AdmissionTimeout(req.uid, need, avail, reason, waited)
+            queue.popleft()
+            finish(req.uid, "error" if reason == "impossible" else "shed", str(err))
+
+        def admit(slot: int, req: Request) -> None:
             nonlocal cache, pos, done, gen, max_new, uids, cur, bt_dev, prefills
             prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
             s0 = prompt.shape[1]
             last, _, pre = self._prefill(self.params, prompt)
+            prefills += 1
+            last_row = last[0, -1]
+            if not np.isfinite(np.asarray(last_row)).all():
+                # poisoned before the first token: typed error, slot unused
+                results[req.uid] = []
+                finish(req.uid, "error",
+                       f"non-finite prefill logits for request {req.uid}")
+                free.append(slot)
+                free.sort(reverse=True)
+                return
             if paged:
                 pages = jnp.asarray(
                     np.asarray(tables.admit(slot, s0), np.int32)
@@ -293,7 +434,7 @@ class ContinuousBatchingEngine:
             else:
                 k0 = None
             tok0 = sample_tokens(
-                last[0, -1], vocab_size=cfg.vocab_size,
+                last_row, vocab_size=cfg.vocab_size,
                 temperature=self.temperature, key=k0,
             )
             t0 = int(tok0)
@@ -310,28 +451,56 @@ class ContinuousBatchingEngine:
             results[req.uid] = [t0]
             pos_h[slot] = s0
             gen_prev[slot] = 1
-            prefills += 1
 
         while queue or any(s is not None for s in active):
+            if hooks.on_window_start is not None:
+                hooks.on_window_start()
             # admissions at the sync boundary: prefill into every free
             # slot — unless the page pool cannot hold the prompt yet, in
             # which case the request waits for a retirement to free pages
+            # (bounded by admission_timeout_s / reachability, never a bare
+            # spin: see AdmissionTimeout)
             while queue and free:
-                need = pages_for(len(queue[0].prompt) + 1, self.page_size or 1)
+                req = queue[0]
+                if cancel_requested(req.uid):
+                    queue.popleft()
+                    finish(req.uid, "cancelled")
+                    continue
+                need = pages_for(len(req.prompt) + 1, self.page_size or 1)
+                if paged and need > tables.allocator.capacity:
+                    starve(req, "impossible", need, tables.allocator.capacity, 0.0)
+                    wait_uid = None
+                    continue
                 if paged and tables.allocator.available < need:
+                    now = self._clock()
+                    if wait_uid != req.uid:
+                        wait_uid, wait_t0 = req.uid, now
+                    avail = tables.allocator.available
                     if not any(s is not None for s in active):
-                        raise RuntimeError(
-                            f"request {queue[0].uid} needs {need} pages but "
-                            f"only {tables.allocator.available} exist free "
-                            "with no active sequences to retire — pool too "
-                            "small (see paged_cache.required_pages)"
-                        )
-                    break
+                        starve(req, "starved", need, avail, now - wait_t0)
+                        wait_uid = None
+                        continue
+                    if (
+                        self.admission_timeout_s is not None
+                        and now - wait_t0 > self.admission_timeout_s
+                    ):
+                        starve(req, "timeout", need, avail, now - wait_t0)
+                        wait_uid = None
+                        continue
+                    break  # wait for a retirement to free pages
                 admit(free.pop(), queue.popleft())
+                wait_uid = None
             if paged:
                 peak_pages = max(peak_pages, tables.pages_in_use)
+            if not any(s is not None for s in active):
+                # everything shed/cancelled/errored at admission; nothing
+                # on device to step
+                if hooks.on_window_end is not None:
+                    hooks.on_window_end()
+                continue
 
             emits = []
+            bads = []
             for _ in range(self.sync_interval):
                 if paged:
                     grew = False
@@ -346,12 +515,13 @@ class ContinuousBatchingEngine:
                     if grew:
                         bt_dev = jnp.asarray(tables.table)
                         peak_pages = max(peak_pages, tables.pages_in_use)
-                cache, emit, cur, pos, done, gen = self._step(
+                cache, emit, bad, cur, pos, done, gen = self._step(
                     self.params, cache, cur, pos, done, gen, max_new,
                     uids, bt_dev, step_key,
                 )
                 decode_steps += 1
                 emits.append(emit)
+                bads.append(bad)
                 for slot, st in enumerate(active):
                     if st is not None:
                         pos_h[slot] += 1
@@ -361,11 +531,30 @@ class ContinuousBatchingEngine:
             gen_h = np.asarray(gen)
             pos_dev = np.asarray(pos)
             em = np.stack([np.asarray(e) for e in emits])  # (W, B)
+            bm = np.stack([np.asarray(x) for x in bads])  # (W, B)
             for slot, st in enumerate(active):
                 if st is None:
                     continue
+                if cancel_requested(st.uid):
+                    # lost-ownership contract: drop the stream NOW — the
+                    # window's tokens are never reported, the device lane
+                    # is frozen and recycled
+                    if paged:
+                        tables.release(slot)
+                    done = done.at[slot].set(True)
+                    cur = cur.at[slot].set(self.pad_id)
+                    active[slot] = None
+                    free.append(slot)
+                    free.sort(reverse=True)
+                    finish(st.uid, "cancelled")
+                    continue
                 n_new = int(gen_h[slot] - gen_prev[slot])
-                results[st.uid].extend(int(t) for t in em[:n_new, slot])
+                toks = em[:n_new, slot]
+                badw = bm[:n_new, slot]
+                poisoned = bool(badw.any())
+                if poisoned:
+                    toks = toks[: int(np.argmax(badw))]  # drop garbage token(s)
+                results[st.uid].extend(int(t) for t in toks)
                 gen_prev[slot] = gen_h[slot]
                 pos_h[slot] = int(pos_dev[slot])
                 if done_h[slot]:
@@ -374,6 +563,18 @@ class ContinuousBatchingEngine:
                     active[slot] = None
                     free.append(slot)
                     free.sort(reverse=True)
+                    if poisoned:
+                        finish(
+                            st.uid, "error",
+                            f"non-finite logits for request {st.uid} at "
+                            f"token index {len(results[st.uid])}",
+                        )
+                    else:
+                        finish(st.uid, "ok")
+                else:
+                    emit_tokens(st.uid)
+            if hooks.on_window_end is not None:
+                hooks.on_window_end()
 
         self.stats = {
             "decode_steps": decode_steps,
@@ -384,7 +585,8 @@ class ContinuousBatchingEngine:
             "cache_layout": self.cache_layout,
             "peak_pages": peak_pages,
             "page_size": self.page_size,
+            "shed": shed,
+            "cancelled": cancelled,
+            "errors": errors,
         }
-        return [
-            Completion(r.uid, len(r.prompt), results[r.uid]) for r in requests
-        ]
+        return [comps[r.uid] for r in requests]

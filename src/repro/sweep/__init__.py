@@ -35,11 +35,14 @@ _EXPORTS = {
     "SweepDriver": "repro.sweep.driver",
     "SweepManifest": "repro.sweep.manifest",
     "WorkUnit": "repro.sweep.manifest",
+    "append_jsonl": "repro.sweep.merge",
     "append_record": "repro.sweep.merge",
     "build_manifest": "repro.sweep.manifest",
+    "dedupe_last_wins": "repro.sweep.merge",
     "join_fleet": "repro.sweep.driver",
     "load_records": "repro.sweep.merge",
     "quick_subset": "repro.sweep.manifest",
+    "read_jsonl": "repro.sweep.merge",
     "read_records": "repro.sweep.merge",
     "record_key": "repro.sweep.merge",
     "run_unit": "repro.sweep.driver",
@@ -60,11 +63,14 @@ __all__ = [
     "SweepDriver",
     "SweepManifest",
     "WorkUnit",
+    "append_jsonl",
     "append_record",
     "build_manifest",
+    "dedupe_last_wins",
     "join_fleet",
     "load_records",
     "quick_subset",
+    "read_jsonl",
     "read_records",
     "record_key",
     "run_unit",

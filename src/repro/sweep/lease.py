@@ -19,6 +19,25 @@ last-write-wins dedup by unit key at merge time (`repro.sweep.merge`).
 Expiry is judged against the lease's own recorded TTL (so a mixed fleet
 honors each writer's contract) using wall-clock time; shared-storage
 fleets should keep TTL comfortably above host clock skew.
+
+**Lost-ownership contract.**  ``heartbeat()`` returning False means the
+lease is gone or owned by someone else — the unit was stolen while we
+worked on it.  What the holder must do next depends on how its output is
+merged:
+
+* *Batch writers* (the sweep driver): finishing anyway is harmless.  The
+  unit's single record is appended when done; the thief's duplicate is
+  byte-identical (engine determinism) and dedups at merge.
+* *Streaming writers* (the serving fleet, `repro.serve.fleet`): the
+  holder must **stop emitting for this request immediately** — cancel the
+  slot at the next sync point and write no further journal records for
+  it, not even a terminal one.  The thief replays the stream from
+  scratch; tokens the loser already journaled are a prefix of the
+  replay and dedup by ``(uid, token_index)``.  Emitting past the loss
+  would be benign only while the loser stays healthy — the reason its
+  lease expired is usually that it is *not* (wedged sync, dying host),
+  and a half-dead worker's late writes are exactly the ones that must
+  not be able to extend a stream another worker now owns.
 """
 
 from __future__ import annotations
@@ -144,8 +163,10 @@ class LeaseStore:
     def heartbeat(self, slug: str) -> bool:
         """Bump our lease's heartbeat.  False when the lease is gone or
         owned by someone else — i.e. it expired and was stolen — in which
-        case the caller has lost the unit (finishing anyway is harmless:
-        the duplicate record dedups at merge)."""
+        case the caller has lost the unit.  Batch callers may finish
+        anyway (the duplicate record dedups at merge); streaming callers
+        must stop emitting immediately — see the module docstring's
+        lost-ownership contract."""
         current = self.read(slug)
         if current is None or current.owner != self.owner:
             return False

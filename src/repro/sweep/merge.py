@@ -1,23 +1,26 @@
-"""Crash-tolerant JSONL results: append, read, dedupe, merge.
+"""Crash-tolerant JSONL journals: append, read, dedupe, merge.
 
-The results file is the existing table-4 resume protocol — one JSON
-record per ``task x method x seed`` unit, appended by any number of
-concurrent writers on shared storage.  This module owns the two failure
-modes a distributed sweep adds:
+The generic layer (`append_jsonl` / `read_jsonl` / `dedupe_last_wins`) is
+the crash-safety discipline shared by every concurrent JSONL writer on
+shared storage — the table-4 sweep results below, and the serving fleet's
+per-worker token journals (`repro.serve.fleet`).  It owns the two failure
+modes a distributed appender adds:
 
 * **Torn trailing lines.**  A SIGKILLed appender can leave a partial
-  final line.  `append_record` writes each record as a single
+  final line.  `append_jsonl` writes each record as a single
   ``O_APPEND`` write *and* prepends a newline when the file doesn't end
   in one, so a torn tail never swallows the next good record; readers
   skip-and-count unparseable lines instead of crashing the summary.
 * **Duplicate records.**  Work stealing plus the lease layer's documented
-  TOCTOU window means a unit can legitimately be run twice.  The engine
-  is deterministic, so duplicates are identical in content; `load_records`
-  dedupes last-write-wins by unit key regardless.
+  TOCTOU window means a unit can legitimately be run twice.  The engines
+  are deterministic, so duplicates are identical in content;
+  `dedupe_last_wins` keeps exactly one per key regardless.
 
-Every summarizer reads through `load_records`, so the "merged view" needs
-no separate file — but ``python -m repro.sweep merge`` can materialize a
-clean, canonically-sorted copy for archival.
+The table-4 layer (`append_record` / `load_records` / …) specializes this
+to one JSON record per ``task x method x seed`` unit.  Every summarizer
+reads through `load_records`, so the "merged view" needs no separate
+file — but ``python -m repro.sweep merge`` can materialize a clean,
+canonically-sorted copy for archival.
 """
 
 from __future__ import annotations
@@ -25,7 +28,7 @@ from __future__ import annotations
 import json
 import os
 import sys
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.ioutil import atomic_write
 
@@ -54,7 +57,7 @@ def _ends_with_newline(path: str) -> bool:
         return True
 
 
-def append_record(path: str, rec: Dict) -> None:
+def append_jsonl(path: str, rec: Dict) -> None:
     """Append one record as a single O_APPEND write, healing a torn tail
     left by a killed writer with a leading newline.  (The heal check races
     with concurrent appenders in the worst case into an extra blank line,
@@ -70,9 +73,14 @@ def append_record(path: str, rec: Dict) -> None:
         os.close(fd)
 
 
-def read_records(path: str) -> Tuple[List[Dict], int]:
-    """All parseable records in file order plus the count of skipped
-    partial/corrupt lines.  Missing file reads as empty."""
+# the table-4 results file uses the generic journal discipline verbatim
+append_record = append_jsonl
+
+
+def read_jsonl(path: str) -> Tuple[List[Dict], int]:
+    """All parseable JSON lines in file order plus the count of skipped
+    partial/corrupt lines.  Missing file reads as empty.  Schema-agnostic:
+    any parseable JSON value counts as a record."""
     records: List[Dict] = []
     partial = 0
     try:
@@ -85,15 +93,35 @@ def read_records(path: str) -> Tuple[List[Dict], int]:
             if not line:
                 continue
             try:
-                rec = json.loads(line)
+                records.append(json.loads(line))
             except json.JSONDecodeError:
                 partial += 1
-                continue
-            if record_key(rec) is None:
-                partial += 1
-                continue
-            records.append(rec)
     return records, partial
+
+
+def dedupe_last_wins(records: List[Dict], key_fn: Callable) -> List[Dict]:
+    """Dedupe by ``key_fn(rec)`` last-write-wins, in first-appearance
+    order; records whose key is None are dropped.  Safe whenever writers
+    are deterministic — duplicates are then identical in content and
+    which one survives is immaterial."""
+    merged: Dict = {}
+    order: List = []
+    for rec in records:
+        key = key_fn(rec)
+        if key is None:
+            continue
+        if key not in merged:
+            order.append(key)
+        merged[key] = rec
+    return [merged[k] for k in order]
+
+
+def read_records(path: str) -> Tuple[List[Dict], int]:
+    """All parseable *unit* records in file order plus the count of
+    skipped partial/corrupt/keyless lines.  Missing file reads as empty."""
+    raw, partial = read_jsonl(path)
+    records = [r for r in raw if record_key(r) is not None]
+    return records, partial + (len(raw) - len(records))
 
 
 def load_records(path: str, warn: bool = True) -> List[Dict]:
@@ -107,14 +135,7 @@ def load_records(path: str, warn: bool = True) -> List[Dict]:
             f"[sweep] {path}: skipped {partial} partial/corrupt line(s) "
             "(torn append from a killed writer?)\n"
         )
-    merged: Dict[Tuple[str, str, int], Dict] = {}
-    order: List[Tuple[str, str, int]] = []
-    for rec in records:
-        key = record_key(rec)
-        if key not in merged:
-            order.append(key)
-        merged[key] = rec
-    return [merged[k] for k in order]
+    return dedupe_last_wins(records, record_key)
 
 
 def completed_keys(path: str) -> set:

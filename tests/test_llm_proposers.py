@@ -105,6 +105,87 @@ def test_http_429_maps_to_retryable_transport_error(monkeypatch):
         client.complete(CompletionRequest(prompt="p"))
 
 
+@pytest.mark.parametrize("code", [408, 529])
+def test_http_timeout_and_overload_are_retryable_with_retry_after(
+    monkeypatch, code
+):
+    """408/529 map to TransportError and the Retry-After hint rides along
+    for the backoff floor."""
+    seen = []
+
+    def deny(req, timeout):
+        seen.append(1)
+        raise urllib.error.HTTPError(
+            req.full_url, code, "transient", {"Retry-After": "3"}, None
+        )
+
+    monkeypatch.setattr("urllib.request.urlopen", deny)
+    client = AnthropicClient(api_key="k", retry=FAST_RETRY)
+    with pytest.raises(TransportError):
+        client.complete(CompletionRequest(prompt="p"))
+    assert len(seen) == FAST_RETRY.max_attempts  # retried, not fatal
+    from repro.proposers.client import _http_json
+    import urllib.request as _ur
+
+    with pytest.raises(TransportError) as ei:
+        _http_json(_ur.Request("https://x.invalid/v1"), timeout_s=1.0)
+    assert ei.value.retry_after_s == 3.0
+
+
+def test_retry_after_floors_backoff_and_sleep_cap_clamps():
+    pol = RetryPolicy(base_delay_s=0.001, jitter=0.0, sleep_cap_s=2.0)
+    assert pol.delay_s(0, 1) == pytest.approx(0.001)
+    assert pol.delay_s(0, 1, retry_after_s=0.7) == pytest.approx(0.7)
+    # a pathological server hint cannot park a worker past the cap
+    assert pol.delay_s(0, 1, retry_after_s=500.0) == 2.0
+    assert pol.delay_s(0, 30) == 2.0  # cap binds plain backoff too
+
+
+class ScriptedClock:
+    """Deterministic time: advances only when the client sleeps."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def clock(self):
+        return self.t
+
+    def sleep(self, d):
+        self.sleeps.append(d)
+        self.t += d
+
+
+def test_total_deadline_abandons_before_overshooting():
+    """With a 2.5s total deadline and 1s/2s backoffs, the second retry
+    sleep would cross the deadline — the client gives up *before*
+    sleeping, with a typed deadline error, after exactly 2 wire attempts."""
+    sc = ScriptedClock()
+    client = MockClient(
+        failures={0: 99},
+        retry=RetryPolicy(max_attempts=10, base_delay_s=1.0, jitter=0.0,
+                          total_deadline_s=2.5),
+        clock=sc.clock, sleep=sc.sleep,
+    )
+    with pytest.raises(TransportError, match="deadline"):
+        client.complete(CompletionRequest(prompt="p", request_id=0))
+    assert len(client.calls) == 2
+    assert sc.sleeps == [1.0]  # only the first backoff actually slept
+
+
+def test_deadline_generous_enough_lets_retries_proceed():
+    sc = ScriptedClock()
+    client = MockClient(
+        failures={0: 2},
+        retry=RetryPolicy(max_attempts=4, base_delay_s=1.0, jitter=0.0,
+                          total_deadline_s=60.0),
+        clock=sc.clock, sleep=sc.sleep,
+    )
+    comp = client.complete(CompletionRequest(prompt="p", request_id=0))
+    assert comp.attempts == 3
+    assert sc.sleeps == [1.0, 2.0]
+
+
 # ---------------------------------------------------------------------------
 # rate limiting
 # ---------------------------------------------------------------------------

@@ -1,0 +1,616 @@
+"""Fault-injection suite for the fault-tolerant serving fleet.
+
+The determinism bar under test: N racing serving workers — surviving a
+SIGKILL mid-decode, duplicate workers racing one request, and torn final
+journal lines — must produce, after journal merge, token streams
+byte-identical to a single-engine serial run.  The chaos scenario spawns
+real ``python -m repro.serve.fleet`` subprocesses; lease/journal/engine
+degradation semantics are covered in-process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro
+from repro.serve.engine import StepWatchdog
+from repro.serve.fleet import (
+    FleetSpec,
+    FleetWorker,
+    build_engine,
+    build_requests,
+    done_uids,
+    journal_path,
+    load_spec,
+    merge_streams,
+    publish_spec,
+    request_slug,
+    serve_serial,
+)
+from repro.serve.scheduler import (
+    AdmissionTimeout,
+    ContinuousBatchingEngine,
+    EngineHooks,
+    Request,
+)
+from repro.sweep.merge import append_jsonl
+
+SRC_DIR = str(Path(repro.__file__).resolve().parents[1])
+
+SPEC = FleetSpec(
+    arch="qwen25_32b", prompt_lens=(5, 6, 4, 5), max_new_tokens=(4, 6, 3, 5),
+    seed=3, slots=2, max_len=16, page_size=4, sync_interval=2,
+)
+
+CHAOS_SPEC = FleetSpec(
+    arch="qwen25_32b", prompt_lens=(6,) * 6,
+    max_new_tokens=(8, 4, 6, 10, 4, 6),
+    seed=11, slots=2, max_len=17, page_size=4, sync_interval=2,
+)
+
+
+@pytest.fixture(scope="module")
+def serial_ref():
+    return serve_serial(SPEC)
+
+
+@pytest.fixture(scope="module")
+def chaos_serial():
+    return serve_serial(CHAOS_SPEC)
+
+
+def assert_fleet_matches_serial(root, ref):
+    streams, info = merge_streams(root, strict=True)
+    assert info["conflicts"] == 0
+    for uid, want in ref.items():
+        got = streams.get(uid)
+        assert got is not None and got["complete"], (uid, got, info)
+        assert got["tokens"] == want["tokens"], uid
+        assert got["status"] == want["status"], uid
+        assert got["prompt_len"] == want["prompt_len"], uid
+
+
+# ---------------------------------------------------------------------------
+# spec + journal merge semantics (no jax)
+# ---------------------------------------------------------------------------
+def test_spec_publish_create_or_verify(tmp_path):
+    root = str(tmp_path)
+    publish_spec(root, SPEC)
+    publish_spec(root, SPEC)  # idempotent for an identical spec
+    assert load_spec(root) == SPEC
+    other = FleetSpec(
+        arch="qwen25_32b", prompt_lens=(5,), max_new_tokens=(4,), max_len=16
+    )
+    with pytest.raises(RuntimeError, match="different spec"):
+        publish_spec(root, other)
+
+
+def test_spec_rejects_overlong_request():
+    with pytest.raises(ValueError, match="max_len"):
+        FleetSpec(arch="qwen25_32b", prompt_lens=(10,), max_new_tokens=(10,),
+                  max_len=16)
+
+
+def test_merge_streams_dedupes_by_uid_index(tmp_path):
+    root = str(tmp_path)
+    a, b = journal_path(root, "a"), journal_path(root, "b")
+    # worker a: full stream for uid 0
+    append_jsonl(a, {"kind": "tokens", "uid": 0, "start": 0, "toks": [7, 8]})
+    append_jsonl(a, {"kind": "tokens", "uid": 0, "start": 2, "toks": [9]})
+    append_jsonl(a, {"kind": "end", "uid": 0, "n": 3, "status": "ok",
+                     "error": None, "prompt_len": 4})
+    # worker b: a duplicate replay (dead worker's thief) — identical cells
+    append_jsonl(b, {"kind": "tokens", "uid": 0, "start": 0, "toks": [7]})
+    append_jsonl(b, {"kind": "tokens", "uid": 0, "start": 1, "toks": [8, 9]})
+    append_jsonl(b, {"kind": "end", "uid": 0, "n": 3, "status": "ok",
+                     "error": None, "prompt_len": 4})
+    streams, info = merge_streams(root, strict=True)
+    assert info["conflicts"] == 0
+    assert streams[0]["complete"] and streams[0]["tokens"] == [7, 8, 9]
+    assert done_uids(root) == {0}
+
+
+def test_merge_streams_flags_divergence(tmp_path):
+    root = str(tmp_path)
+    append_jsonl(journal_path(root, "a"),
+                 {"kind": "tokens", "uid": 0, "start": 0, "toks": [7]})
+    append_jsonl(journal_path(root, "b"),
+                 {"kind": "tokens", "uid": 0, "start": 0, "toks": [8]})
+    _, info = merge_streams(root)
+    assert info["conflicts"] == 1
+    with pytest.raises(RuntimeError, match="divergent"):
+        merge_streams(root, strict=True)
+
+
+def test_merge_incomplete_stream_not_done(tmp_path):
+    root = str(tmp_path)
+    j = journal_path(root, "a")
+    # tokens but no terminal record: a worker died mid-stream
+    append_jsonl(j, {"kind": "tokens", "uid": 1, "start": 0, "toks": [5, 6]})
+    # terminal record but a missing cell: journal gap must not read as done
+    append_jsonl(j, {"kind": "tokens", "uid": 2, "start": 0, "toks": [1]})
+    append_jsonl(j, {"kind": "end", "uid": 2, "n": 3, "status": "ok",
+                     "error": None, "prompt_len": 4})
+    streams, _ = merge_streams(root)
+    assert not streams[1]["complete"]
+    assert not streams[2]["complete"]
+    assert done_uids(root) == set()
+
+
+def test_merge_heals_torn_final_line(tmp_path):
+    root = str(tmp_path)
+    j = journal_path(root, "a")
+    append_jsonl(j, {"kind": "tokens", "uid": 0, "start": 0, "toks": [7]})
+    with open(j, "ab") as f:  # SIGKILLed appender: torn, newline-less tail
+        f.write(b'{"kind": "tokens", "uid": 0, "st')
+    # the next append heals the tail; the torn fragment is skip-and-counted
+    append_jsonl(j, {"kind": "tokens", "uid": 0, "start": 1, "toks": [8]})
+    append_jsonl(j, {"kind": "end", "uid": 0, "n": 2, "status": "ok",
+                     "error": None, "prompt_len": 4})
+    streams, info = merge_streams(root, strict=True)
+    assert info["partial"] == 1
+    assert streams[0]["complete"] and streams[0]["tokens"] == [7, 8]
+
+
+# ---------------------------------------------------------------------------
+# watchdog (no jax)
+# ---------------------------------------------------------------------------
+def _wait_for(pred, timeout=5.0, interval=0.01):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+def test_step_watchdog_fires_on_wedged_window_only():
+    clk = {"t": 0.0}
+    fired = []
+    wd = StepWatchdog(1.0, fired.append, poll_s=0.005, clock=lambda: clk["t"])
+    try:
+        # a window that completes in time never fires
+        wd.arm()
+        clk["t"] = 0.5
+        wd.disarm()
+        clk["t"] = 100.0
+        time.sleep(0.05)
+        assert fired == []
+        # a wedged window fires exactly once, with the waited duration
+        wd.arm()
+        clk["t"] = 102.5
+        assert _wait_for(lambda: len(fired) == 1)
+        time.sleep(0.05)
+        assert len(fired) == 1  # no refire while still armed
+        assert fired[0] > 1.0
+        # re-arming restores fire eligibility
+        wd.arm()
+        clk["t"] = 110.0
+        assert _wait_for(lambda: len(fired) == 2)
+        assert wd.fired_count == 2
+    finally:
+        wd.stop()
+
+
+def test_step_watchdog_rejects_bad_timeout():
+    with pytest.raises(ValueError):
+        StepWatchdog(0.0, lambda w: None)
+
+
+# ---------------------------------------------------------------------------
+# engine degradation: typed admission failure, hooks, poisoned logits
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def smoke_model():
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import init_params
+
+    cfg = dc.replace(get_config("qwen25_32b", smoke=True),
+                     compute_dtype="float32")
+    return cfg, init_params(jax.random.key(0), cfg)
+
+
+class FakeClock:
+    """One second per reading — deterministic admission-wait accounting."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def _prompts(cfg, shape, seed=7):
+    return np.random.default_rng(seed).integers(0, cfg.vocab_size, shape)
+
+
+def test_admission_impossible_fails_fast(smoke_model):
+    """A prompt the pool can never hold raises typed, immediately — no
+    spinning, no decode steps burned (the no-hang gate)."""
+    cfg, params = smoke_model
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=16, page_size=4, num_pages=4,  # cap 3
+        sync_interval=2, clock=FakeClock(),
+    )
+    reqs = [Request(uid=0, prompt=_prompts(cfg, (12,)), max_new_tokens=1)]
+    with pytest.raises(AdmissionTimeout) as ei:
+        eng.run(reqs)
+    assert ei.value.reason == "impossible"
+    assert ei.value.uid == 0 and ei.value.needed == 4
+
+
+def test_admission_timeout_is_typed_and_bounded(smoke_model):
+    """A queue starved behind a page-holder fails on its deadline with
+    AdmissionTimeout instead of waiting unboundedly."""
+    cfg, params = smoke_model
+    clock = FakeClock()
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=16, page_size=4, num_pages=5,  # cap 4
+        sync_interval=2, admission_timeout_s=2.5, clock=clock,
+    )
+    reqs = [
+        Request(uid=0, prompt=_prompts(cfg, (4,)), max_new_tokens=10),
+        Request(uid=1, prompt=_prompts(cfg, (9,)), max_new_tokens=4),  # 3 pages
+    ]
+    with pytest.raises(AdmissionTimeout) as ei:
+        eng.run(reqs)
+    assert ei.value.reason == "timeout"
+    assert ei.value.uid == 1
+    assert ei.value.waited_s > 2.5
+
+
+def test_admission_shed_keeps_other_streams(smoke_model):
+    """on_starved='shed': the starved request retires with a retryable
+    status while the page-holder's stream completes untouched."""
+    cfg, params = smoke_model
+    ample = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=16, page_size=4, sync_interval=2,
+    )
+    req0 = Request(uid=0, prompt=_prompts(cfg, (4,)), max_new_tokens=10)
+    want = ample.run([req0])[0].tokens
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=16, page_size=4, num_pages=5,
+        sync_interval=2, admission_timeout_s=2.5, on_starved="shed",
+        clock=FakeClock(),
+    )
+    comps = eng.run([req0, Request(uid=1, prompt=_prompts(cfg, (9,)),
+                                   max_new_tokens=4)])
+    assert comps[0].status == "ok" and comps[0].tokens == want
+    assert comps[1].status == "shed" and "timeout" in (comps[1].error or "")
+    assert eng.stats["shed"] == 1
+
+
+def test_hooks_stream_tokens_and_cancel_mid_stream(smoke_model):
+    """on_tokens streams exactly the completion's tokens; should_cancel
+    drops a stream at the next sync with no further emission — the
+    lost-ownership contract as seen from the engine."""
+    cfg, params = smoke_model
+    prompts = _prompts(cfg, (2, 5), seed=9)
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=8) for i in range(2)]
+    ref = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=16, page_size=4, sync_interval=2,
+    ).run(reqs)
+
+    got = {0: [], 1: []}
+    windows = {"n": 0}
+
+    def on_tokens(uid, start, toks):
+        assert start == len(got[uid])  # contiguous, dedupable by index
+        got[uid].extend(toks)
+
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=16, page_size=4, sync_interval=2,
+    )
+    hooks = EngineHooks(
+        on_tokens=on_tokens,
+        should_cancel=lambda uid: uid == 1 and len(got[1]) >= 2,
+        on_window_start=lambda: windows.__setitem__("n", windows["n"] + 1),
+    )
+    comps = eng.run(reqs, hooks=hooks)
+    assert windows["n"] > 0
+    assert comps[0].status == "ok" and comps[0].tokens == ref[0].tokens
+    assert got[0] == ref[0].tokens
+    c1 = comps[1]
+    assert c1.status == "cancelled"
+    assert got[1] == c1.tokens  # nothing emitted past the cancellation
+    assert len(c1.tokens) < len(ref[1].tokens)
+    assert c1.tokens == ref[1].tokens[: len(c1.tokens)]  # clean prefix
+    assert eng.stats["cancelled"] == 1
+
+
+def _poison_embed(params, token):
+    import jax.numpy as jnp
+
+    p2 = dict(params)
+    p2["embed"] = dict(params["embed"])
+    p2["embed"]["table"] = params["embed"]["table"].at[int(token)].set(jnp.nan)
+    return p2
+
+
+def _pick_poison_step(stream, *avoid):
+    """(k, T): poisoning token T NaNs the decode step that produces token
+    index k, and nothing earlier (first occurrence, absent from prompts)."""
+    banned = set()
+    for a in avoid:
+        banned.update(int(x) for x in a)
+    for k in range(1, len(stream)):
+        t = int(stream[k - 1])
+        if t not in banned and t not in [int(x) for x in stream[: k - 1]]:
+            return k, t
+    pytest.skip("no unambiguous poison token in this stream")
+
+
+def test_nonfinite_decode_logits_retire_with_error(smoke_model):
+    """NaN-poison one embedding row so a known decode step goes non-finite:
+    the stream truncates before the garbage token and retires with
+    status='error'; the co-scheduled request is untouched."""
+    cfg, params = smoke_model
+    prompts = _prompts(cfg, (2, 5), seed=13)
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=8) for i in range(2)]
+
+    def fresh():
+        return ContinuousBatchingEngine(
+            cfg, params, slots=2, max_len=16, page_size=4, sync_interval=2,
+        )
+
+    clean = fresh().run(reqs)
+    k, tok = _pick_poison_step(
+        clean[0].tokens, prompts[0], prompts[1], clean[1].tokens
+    )
+    eng = ContinuousBatchingEngine(
+        cfg, _poison_embed(params, tok), slots=2, max_len=16, page_size=4,
+        sync_interval=2,
+    )
+    comps = eng.run(reqs)
+    assert comps[0].status == "error" and "non-finite" in comps[0].error
+    assert comps[0].tokens == clean[0].tokens[:k]  # garbage token dropped
+    assert comps[1].status == "ok" and comps[1].tokens == clean[1].tokens
+    assert eng.stats["errors"] == 1
+
+
+def test_nonfinite_prefill_logits_error_at_admission(smoke_model):
+    """A prompt containing the poisoned token errors at admission (no
+    tokens, typed status) and returns its slot; peers are unaffected."""
+    cfg, params = smoke_model
+    prompts = _prompts(cfg, (2, 5), seed=13)
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=8) for i in range(2)]
+    clean = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=16, page_size=4, sync_interval=2,
+    ).run(reqs)
+    only_in_1 = [
+        int(t) for t in prompts[1]
+        if int(t) not in {int(x) for x in prompts[0]}
+        and int(t) not in {int(x) for x in clean[0].tokens}
+    ]
+    if not only_in_1:
+        pytest.skip("prompts share every token")
+    eng = ContinuousBatchingEngine(
+        cfg, _poison_embed(params, only_in_1[0]), slots=2, max_len=16,
+        page_size=4, sync_interval=2,
+    )
+    comps = eng.run(reqs)
+    assert comps[1].status == "error" and comps[1].tokens == []
+    assert "prefill" in comps[1].error
+    assert comps[0].status == "ok" and comps[0].tokens == clean[0].tokens
+
+
+# ---------------------------------------------------------------------------
+# fleet workers (in-process)
+# ---------------------------------------------------------------------------
+def test_single_worker_fleet_matches_serial(tmp_path, serial_ref):
+    root = str(tmp_path)
+    publish_spec(root, SPEC)
+    stats = FleetWorker(root, "w0", heartbeat_s=0.2, poll_s=0.05).run()
+    assert stats["ok"] == SPEC.n_requests
+    assert_fleet_matches_serial(root, serial_ref)
+
+
+def test_second_worker_resumes_where_first_stopped(tmp_path, serial_ref):
+    """max_batches bounds worker 1 mid-fleet; worker 2 picks up the rest
+    from the journals + leases alone — no coordinator state."""
+    root = str(tmp_path)
+    publish_spec(root, SPEC)
+    s1 = FleetWorker(root, "w1", heartbeat_s=0.2, poll_s=0.05,
+                     max_batches=1).run()
+    assert 0 < s1["ok"] < SPEC.n_requests
+    FleetWorker(root, "w2", heartbeat_s=0.2, poll_s=0.05).run()
+    assert_fleet_matches_serial(root, serial_ref)
+    assert os.path.exists(journal_path(root, "w1"))
+    assert os.path.exists(journal_path(root, "w2"))
+
+
+def test_lost_lease_stops_emitting_immediately(tmp_path, serial_ref):
+    """Satellite regression: a worker whose lease is stolen mid-stream
+    writes no further records for that uid (no divergent tokens survive
+    the merge), and the thief's replay completes the stream."""
+    root = str(tmp_path)
+    publish_spec(root, SPEC)
+    lease_file = os.path.join(root, "leases", request_slug(0) + ".lease")
+    stolen = threading.Event()
+
+    def steal_when_leased():
+        deadline = time.monotonic() + 120
+        while time.monotonic() < deadline and not os.path.exists(lease_file):
+            time.sleep(0.01)
+        # overwrite with a foreign short-TTL lease: the worker's next
+        # heartbeat reads a different owner -> lost-ownership contract
+        now = time.time()
+        tmp = lease_file + ".steal"
+        with open(tmp, "w") as f:
+            json.dump({"unit": request_slug(0), "owner": "thief",
+                       "acquired_at": now, "heartbeat_at": now, "ttl": 0.2}, f)
+        os.replace(tmp, lease_file)
+        stolen.set()
+
+    thief = threading.Thread(target=steal_when_leased)
+    thief.start()
+    w1 = FleetWorker(root, "stale", heartbeat_s=0.05, poll_s=0.05,
+                     throttle_s=0.25, max_batches=1)
+    s1 = w1.run()
+    thief.join()
+    assert stolen.is_set()
+    assert s1["stolen_from_us"] >= 1 and s1["cancelled"] >= 1
+    # the stale worker journaled at most a prefix for uid 0, never an end
+    recs = [json.loads(l) for l in open(journal_path(root, "stale"))]
+    assert all(r["kind"] != "end" for r in recs if r["uid"] == 0)
+    assert 0 not in done_uids(root)
+    # the thief's short TTL expires; a fresh worker steals + replays
+    FleetWorker(root, "rescue", heartbeat_s=0.2, poll_s=0.05).run()
+    assert_fleet_matches_serial(root, serial_ref)
+
+
+def test_watchdog_frees_wedged_worker_before_ttl(tmp_path, serial_ref):
+    """A wedged decode window (injected) trips the watchdog, which
+    releases the leases right away (TTL here is 1000s — only the watchdog
+    can explain recovery), cancels the streams, and the worker's next
+    pass re-serves them cleanly."""
+    root = str(tmp_path)
+    publish_spec(root, SPEC)
+    t0 = time.monotonic()
+    w = FleetWorker(root, "wedgy", ttl=1000.0, heartbeat_s=0.2, poll_s=0.05,
+                    step_timeout_s=0.15, wedge_uid=0, wedge_s=1.0)
+    stats = w.run()
+    assert stats["watchdog_fired"] >= 1
+    assert stats["cancelled"] >= 1
+    assert time.monotonic() - t0 < 1000.0 / 2
+    assert_fleet_matches_serial(root, serial_ref)
+
+
+def test_pool_exhaustion_sheds_then_retries(tmp_path):
+    """Backpressure: a request the pool can't hold *now* is shed with no
+    journal record and served on a later pass once pages free up."""
+    spec = FleetSpec(
+        arch="qwen25_32b", prompt_lens=(4, 9), max_new_tokens=(10, 4),
+        seed=5, slots=2, max_len=16, page_size=4, sync_interval=2,
+        num_pages=5,  # capacity 4: both requests can never be co-resident
+    )
+    root = str(tmp_path)
+    publish_spec(root, spec)
+    w = FleetWorker(root, "tight", heartbeat_s=0.2, poll_s=0.05,
+                    admission_timeout_s=0.01)
+    stats = w.run()
+    assert stats["shed"] >= 1
+    assert_fleet_matches_serial(root, serve_serial(spec))
+
+
+# ---------------------------------------------------------------------------
+# the chaos gate: real subprocesses, SIGKILL + duplicate worker + torn tail
+# ---------------------------------------------------------------------------
+def spawn_worker(root, owner, *, throttle=0.0, heartbeat=0.3, ttl=2.0,
+                 poll=0.1):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [
+        sys.executable, "-m", "repro.serve.fleet", "run",
+        "--root", str(root), "--owner", owner,
+        "--heartbeat", str(heartbeat), "--ttl", str(ttl),
+        "--poll", str(poll), "--throttle", str(throttle),
+    ]
+    return subprocess.Popen(
+        cmd, env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True,
+    )
+
+
+def test_chaos_sigkill_duplicate_and_torn_tail(tmp_path, chaos_serial):
+    """The acceptance scenario: a 3-worker fleet where the first worker is
+    SIGKILLed mid-decode (leaving held leases and a torn journal tail) and
+    one worker's lease cadence makes it a duplicate (its TTL expires
+    between heartbeats, so peers steal requests it is still serving).
+    The merged journals must be byte-identical to the serial run."""
+    root = str(tmp_path)
+    publish_spec(root, CHAOS_SPEC)
+    victim_journal = journal_path(root, "victim")
+    victim = spawn_worker(root, "victim", throttle=0.3, heartbeat=0.2, ttl=2.0)
+    try:
+        deadline = time.time() + 240
+        while time.time() < deadline:
+            if os.path.exists(victim_journal) and os.path.getsize(victim_journal):
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("victim never journaled a token")
+        time.sleep(0.1)  # let it get into a decode window
+        victim.kill()  # SIGKILL: no release, no final heartbeat
+        victim.wait(timeout=30)
+    finally:
+        if victim.poll() is None:
+            victim.kill()
+    leases = Path(root) / "leases"
+    assert any(leases.glob("*.lease")), "victim died without held leases"
+    with open(victim_journal, "ab") as f:  # torn final line, no newline
+        f.write(b'{"kind": "tokens", "uid": 0, "sta')
+
+    # Duplicate-prone worker first, alone: ttl < heartbeat means its leases
+    # sit expired for ~2/3 of every heartbeat cycle, and the heavy throttle
+    # makes its batch far outlast all the rescuers' remaining work.  Only
+    # once it is demonstrably mid-stream (journal non-empty) do the
+    # rescuers start.  Steals only happen in a worker's claim loop, i.e.
+    # between its batches — so the guarantee comes from the end-game: the
+    # rescuers finish everything else and then idle-poll (0.1 s) on the
+    # duplicate's still-incomplete requests, whose lease is expired most
+    # of the time, while its batch still has many throttled windows to go.
+    dup = spawn_worker(root, "dup", throttle=4.0, heartbeat=1.5, ttl=0.5)
+    dup_journal = journal_path(root, "dup")
+    deadline = time.time() + 240
+    while time.time() < deadline:
+        if dup.poll() is not None or (
+            os.path.exists(dup_journal) and os.path.getsize(dup_journal)
+        ):
+            break
+        time.sleep(0.02)
+    assert dup.poll() is None, dup.communicate()[0]
+    workers = [
+        spawn_worker(root, "rescue0", heartbeat=0.3, ttl=1.5),
+        spawn_worker(root, "rescue1", heartbeat=0.3, ttl=1.5),
+        dup,
+    ]
+    outs = []
+    for p in workers:
+        out, _ = p.communicate(timeout=300)
+        outs.append(out)
+        assert p.returncode == 0, out
+    streams, info = merge_streams(root, strict=True)
+    assert info["partial"] >= 1, info  # the torn tail was skip-and-counted
+    assert_fleet_matches_serial(root, chaos_serial)
+    # the duplicate worker really did lose leases mid-serve
+    dup_stats = json.loads(outs[2].strip().splitlines()[-1])
+    assert dup_stats["stolen_from_us"] + dup_stats["cancelled"] >= 1, outs[2]
+
+
+def test_fleet_cli_merge_and_status(tmp_path, serial_ref):
+    root = str(tmp_path)
+    publish_spec(root, SPEC)
+    FleetWorker(root, "w0", heartbeat_s=0.2, poll_s=0.05).run()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+    merged = subprocess.run(
+        [sys.executable, "-m", "repro.serve.fleet", "merge", "--root", root,
+         "--strict", "--out", os.path.join(root, "merged.json")],
+        env=env, capture_output=True, text=True, check=True,
+    )
+    summary = json.loads(merged.stdout)
+    assert summary["complete"] == SPEC.n_requests
+    assert summary["conflicts"] == 0
+    with open(os.path.join(root, "merged.json")) as f:
+        dump = json.load(f)
+    assert [s["uid"] for s in dump["streams"]] == list(range(SPEC.n_requests))
+    status = subprocess.run(
+        [sys.executable, "-m", "repro.serve.fleet", "status", "--root", root],
+        env=env, capture_output=True, text=True, check=True,
+    )
+    st = json.loads(status.stdout)
+    assert st["complete"] == st["requests"] == SPEC.n_requests
+    assert st["leased"] == 0

@@ -18,6 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
 from repro.configs import get_config
 from repro.kernels import ops, ref
 from repro.kernels.flash_decode import flash_decode_pallas
@@ -29,6 +34,7 @@ from repro.models.transformer import (
 )
 from repro.serve.engine import ServeEngine
 from repro.serve.paged_cache import (
+    NULL_PAGE,
     BlockTables,
     PageAllocator,
     pages_for,
@@ -81,6 +87,86 @@ def test_block_tables_alloc_on_write_and_release():
 
 def test_required_pages_covers_full_horizon():
     assert required_pages(3, 16, 4) == 1 + 3 * 4
+
+
+def test_allocator_guards_double_free_and_null_page():
+    a = PageAllocator(6)
+    pages = a.alloc(2)
+    a.free(pages)
+    with pytest.raises(RuntimeError, match="not held"):
+        a.free([pages[0]])  # double-free
+    with pytest.raises(RuntimeError, match="null"):
+        a.free([0])  # the reserved page is never in circulation
+
+
+@settings(max_examples=40)
+@given(
+    st.integers(min_value=2, max_value=24),
+    st.lists(st.integers(min_value=0, max_value=999), min_size=1, max_size=60),
+)
+def test_allocator_fuzz_no_double_grant_no_leak(num_pages, script):
+    """Property fuzz over alloc/free interleavings: page 0 is never handed
+    out, no page is granted twice without an intervening free, and
+    ``held + available == capacity`` at every step (no leak, no
+    double-count)."""
+    a = PageAllocator(num_pages)
+    held = []
+    for op in script:
+        if op % 2 == 0 and a.available:
+            n = 1 + (op // 2) % a.available
+            pages = a.alloc(n)
+            assert 0 not in pages
+            assert len(set(pages)) == n
+            assert not set(pages) & set(held)
+            held.extend(pages)
+        elif held:
+            k = 1 + (op // 2) % len(held)
+            a.free([held.pop() for _ in range(k)])
+        assert a.held == len(held)
+        assert a.held + a.available == a.capacity
+    # an over-ask must fail without perturbing state
+    if a.available < a.capacity or a.available:
+        before = a.available
+        with pytest.raises(RuntimeError, match="exhausted"):
+            a.alloc(a.available + 1)
+        assert a.available == before
+    if held:
+        a.free(held)
+    assert a.available == a.capacity and a.held == 0
+
+
+@settings(max_examples=15)
+@given(
+    st.integers(min_value=1, max_value=4),
+    st.lists(st.integers(min_value=0, max_value=999), min_size=1, max_size=30),
+)
+def test_block_tables_fuzz_slots_stay_disjoint(slots, script):
+    """Admit/ensure/release interleavings across slots: owned page sets
+    stay pairwise disjoint, the table mirrors ownership exactly, and
+    release returns everything."""
+    ps, max_len = 4, 16
+    bt = BlockTables.with_pool(slots, max_len, ps, required_pages(slots, max_len, ps))
+    lens = [0] * slots  # 0 = slot free
+    for op in script:
+        slot = op % slots
+        if lens[slot] == 0:
+            lens[slot] = 1 + (op // 7) % (max_len - 1)
+            bt.admit(slot, lens[slot])
+        elif op % 3 == 0:
+            bt.release(slot)
+            lens[slot] = 0
+        else:
+            bt.ensure(slot, min(max_len - 1, lens[slot] + (op // 5) % 8))
+        owned = [set(p) for p in bt.owned]
+        for i in range(slots):
+            for j in range(i + 1, slots):
+                assert not owned[i] & owned[j], "slots share a page"
+            live = [p for p in bt.table[i] if p != NULL_PAGE]
+            assert live == bt.owned[i][: len(live)] and len(live) == len(owned[i])
+        assert bt.pages_in_use == bt.allocator.held
+    for slot in range(slots):
+        bt.release(slot)
+    assert bt.allocator.held == 0
 
 
 # ---------------------------------------------------------------------------
