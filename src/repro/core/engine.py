@@ -173,6 +173,10 @@ class EvolutionEngine:
         # sid -> first Solution with that sid, maintained on history append
         # so per-trial parent lookups are O(1), not a scan of the whole run
         self._sid_index: Dict[str, Solution] = {}
+        # the task baseline's serialized PerfDiagnosis (diagnosis-enabled
+        # methods only) — the fixed reference every prompt's delta line is
+        # rendered against; derived from the evaluator, not checkpointed
+        self._baseline_diag: Optional[Dict[str, Any]] = None
         self.trial = 0
         # stable string hashes: builtin hash() is PYTHONHASHSEED-randomized
         # per process, which would make a "seeded" run irreproducible across
@@ -185,6 +189,13 @@ class EvolutionEngine:
     def run(self, max_trials: Optional[int] = None, checkpoint_every: int = 5) -> RunResult:
         max_trials = max_trials or self.method.trials
         baseline_us = self.evaluator.baseline_us(self.task)
+        if self.method.guiding.use_diagnosis and self._baseline_diag is None:
+            # diagnose the naive implementation once: usually a result-cache
+            # hit from baseline_us(); an explicit evaluate() covers the case
+            # where the baseline runtime came from the disk cache instead
+            self._baseline_diag = self.evaluator.evaluate(
+                self.task, self.task.initial_source
+            ).diagnosis
         # seed the population with the initial (naive) implementation — the
         # optimization starting point, as in the paper's setup
         if self.trial == 0 and self.population.best is None:
@@ -258,6 +269,7 @@ class EvolutionEngine:
             self.insights.texts(),
             op,
             rag=self.rag_pool,
+            baseline_diagnosis=self._baseline_diag,
         )
         prompt = render_prompt(bundle, self.method.guiding)
         return op, ProposalRequest(
@@ -351,6 +363,11 @@ class EvolutionEngine:
         sol.error = res.error
         if res.valid and res.runtime_us:
             sol.speedup = baseline_us / res.runtime_us
+        if self.method.guiding.use_diagnosis:
+            # diagnosis-off methods drop the evaluator's diagnosis here so
+            # their history/checkpoints stay byte-identical to pre-diagnosis
+            # runs (Solution.to_dict omits the None)
+            sol.diagnosis = getattr(res, "diagnosis", None)
         return sol
 
     def _evaluate(self, sol: Solution, baseline_us: float) -> Solution:
@@ -369,12 +386,24 @@ class EvolutionEngine:
             gain = sol.speedup - 1.0
         status = "confirmed" if gain > 0 else ("refuted" if sol.valid else "invalid")
         text = f"{sol.insight} -> {status} ({gain:+.2f}x)"
+        regime: Optional[str] = None
+        if self.method.guiding.use_diagnosis and sol.valid and sol.diagnosis:
+            # regime-tag the insight so knob_bias can condition on the bound
+            # regime, and surface the diagnosis delta in the prompt text
+            bound = sol.diagnosis.get("bound")
+            if bound in ("compute", "memory"):
+                regime = bound
+                ach = sol.diagnosis.get("achieved_pct")
+                text += f" [{bound}-bound" + (
+                    f", {ach:.0f}% roofline" if ach is not None else ""
+                ) + "]"
         self.insights.add(
             InsightRecord(
                 text=text,
                 knob=proposal.knob if sol.valid else None,
                 choice=proposal.choice if sol.valid else None,
                 gain=gain,
+                regime=regime,
             )
         )
 

@@ -14,6 +14,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
+# Per-insight character cap applied by ``texts()``: a single runaway
+# insight (a real LLM's rambling rationale, a diagnosis-enriched record)
+# cannot blow a prompt past the ~4-chars/token budget LLMClient estimates
+# with.  Comfortably above every synthetic-proposer insight, so capping
+# changes no existing prompt byte (locked by the diagnosis-off golden).
+INSIGHT_TEXT_MAX = 240
+
 
 @dataclasses.dataclass
 class InsightRecord:
@@ -21,9 +28,17 @@ class InsightRecord:
     knob: Optional[str] = None  # which genome knob changed
     choice: Any = None  # the value it changed to
     gain: float = 0.0  # speedup delta vs parent (positive = better)
+    # bound regime ("compute" | "memory") of the solution this insight was
+    # measured on, from its PerfDiagnosis — None for diagnosis-off runs
+    # (and serialized records then omit the key, keeping diagnosis-off
+    # checkpoints byte-identical to the pre-diagnosis schema)
+    regime: Optional[str] = None
 
     def to_dict(self):
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.regime is None:
+            del d["regime"]
+        return d
 
     @classmethod
     def from_dict(cls, d):
@@ -40,13 +55,22 @@ class InsightStore:
         del self.records[: -self.cap]
 
     def texts(self) -> List[str]:
-        return [r.text for r in self.records]
+        return [_truncate(r.text) for r in self.records]
 
-    def knob_bias(self) -> Dict[str, Dict[Any, float]]:
+    def knob_bias(self, regime: Optional[str] = None) -> Dict[str, Dict[Any, float]]:
         """Aggregate per-(knob, choice) average gain — the structured view
-        the synthetic proposer samples from."""
+        the synthetic proposer samples from.  With ``regime``, only
+        insights measured in that bound regime contribute (a tile size
+        that paid off compute-bound says little about a memory-bound
+        parent); when no record carries the requested regime the full
+        aggregate is returned rather than nothing."""
+        records = self.records
+        if regime is not None:
+            matching = [r for r in records if r.regime == regime]
+            if matching:
+                records = matching
         agg: Dict[str, Dict[Any, List[float]]] = {}
-        for r in self.records:
+        for r in records:
             if r.knob is None:
                 continue
             agg.setdefault(r.knob, {}).setdefault(_hashable(r.choice), []).append(r.gain)
@@ -60,6 +84,12 @@ class InsightStore:
     def load_state_dict(self, d):
         self.cap = d["cap"]
         self.records = [InsightRecord.from_dict(r) for r in d["records"]]
+
+
+def _truncate(text: str, cap: int = INSIGHT_TEXT_MAX) -> str:
+    if len(text) <= cap:
+        return text
+    return text[: cap - 3] + "..."
 
 
 def _hashable(v):

@@ -8,6 +8,9 @@ kernel for every method.
   EvoEngineer-Free      I1 only,        single-best, cheap prompts
   EvoEngineer-Insight   I1+I3,          single-best
   EvoEngineer-Full      I1+I2+I3,       elite(4)
+  EvoEngineer-Diagnosis I1+I2+I3+diag,  elite(4)  (profiler-in-the-loop
+                        ablation: Full plus PerfDiagnosis prompt feedback
+                        and regime-aware insight bias)
   EvoEngineer-Solution  I1+I2 (EoH),    elite(4), E1/E2/M1/M2 x 10 gens
   FunSearch             I1+I2(2),       islands(5)
   AI CUDA Engineer      I1+I2(5)+RAG,   single-best, staged
@@ -106,6 +109,25 @@ def _full() -> MethodConfig:
     )
 
 
+def _diagnosis() -> MethodConfig:
+    return MethodConfig(
+        name="EvoEngineer-Diagnosis",
+        guiding=GuidingConfig(
+            task_context=True,
+            n_historical=3,
+            use_insights=True,
+            use_diagnosis=True,
+        ),
+        make_population=lambda: ElitePopulation(k=4),
+        schedule=lambda t: "propose",
+        # profiling-grounded feedback (Sakana 2509.14279): semantic faults
+        # drop further vs Full — the model sees WHY the parent is slow, so
+        # its moves are better-informed — while exploration stays matched
+        # so the ablation isolates the diagnosis signal
+        fault=FaultRegime(p_syntax=0.045, p_semantic=0.08, explore=0.30),
+    )
+
+
 def _eoh() -> MethodConfig:
     return MethodConfig(
         name="EvoEngineer-Solution (EoH)",
@@ -147,6 +169,7 @@ METHODS = {
     "evoengineer-free": _free,
     "evoengineer-insight": _insight,
     "evoengineer-full": _full,
+    "evoengineer-diagnosis": _diagnosis,
     "eoh": _eoh,
     "funsearch": _funsearch,
     "aice": _aice,
@@ -159,6 +182,7 @@ DISPLAY_ORDER = [
     "evoengineer-free",
     "evoengineer-insight",
     "evoengineer-full",
+    "evoengineer-diagnosis",
 ]
 
 

@@ -34,6 +34,12 @@ class Solution:
     tokens_in: int = 0
     tokens_out: int = 0
 
+    # serialized PerfDiagnosis (repro.diagnosis) — attached by the engine
+    # only when the method's guiding layer enables diagnosis, so that
+    # diagnosis-off checkpoints stay byte-identical to pre-diagnosis runs
+    # (to_dict omits the key entirely when None)
+    diagnosis: Optional[Dict[str, Any]] = None
+
     def __post_init__(self):
         if not self.sid:
             self.sid = hashlib.sha1(self.source.encode()).hexdigest()[:12]
@@ -55,7 +61,12 @@ class Solution:
         return f"[{self.sid} t{self.trial} {self.operator}] {st}{sp}"
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.diagnosis is None:
+            # keep diagnosis-off serializations byte-identical to the
+            # pre-diagnosis schema (no "diagnosis": null key)
+            del d["diagnosis"]
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Solution":

@@ -30,6 +30,11 @@ class GuidingConfig:
     cross_task_rag: int = 0  # I4-ish: AICE Compose stage only
     # prompt verbosity multiplier (AICE's ensemble prompting is ~2x)
     prompt_overhead: float = 1.0
+    # profiler-in-the-loop feedback (repro.diagnosis): render the parent's
+    # PerfDiagnosis + its delta vs the task baseline into the prompt, and
+    # make InsightStore knob bias regime-aware.  Off by default — prompts,
+    # RNG schedules and checkpoints of every existing method are untouched.
+    use_diagnosis: bool = False
 
 
 @dataclasses.dataclass
@@ -39,6 +44,10 @@ class InformationBundle:
     insights: List[str] = dataclasses.field(default_factory=list)
     rag_solutions: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
     operator: str = "propose"
+    # serialized PerfDiagnosis of the lead parent and of the task baseline
+    # (populated only under GuidingConfig.use_diagnosis)
+    diagnosis: Optional[Dict[str, Any]] = None
+    baseline_diagnosis: Optional[Dict[str, Any]] = None
 
 
 def build_bundle(
@@ -48,6 +57,7 @@ def build_bundle(
     insights: List[str],
     operator: str,
     rag: Optional[List[Tuple[str, str]]] = None,
+    baseline_diagnosis: Optional[Dict[str, Any]] = None,
 ) -> InformationBundle:
     b = InformationBundle(operator=operator)
     if guiding.task_context:
@@ -57,6 +67,14 @@ def build_bundle(
         b.insights = insights[-guiding.n_insights :]
     if guiding.cross_task_rag and rag:
         b.rag_solutions = rag[: guiding.cross_task_rag]
+    if guiding.use_diagnosis:
+        # the lead parent's why-is-it-slow verdict (first sampled parent
+        # carrying one — parents are sampled best-first); the baseline's
+        # rides along so the renderer can show the delta
+        b.diagnosis = next(
+            (s.diagnosis for s in parents if s.diagnosis is not None), None
+        )
+        b.baseline_diagnosis = baseline_diagnosis
     return b
 
 
@@ -98,6 +116,15 @@ def render_prompt(bundle: InformationBundle, guiding: GuidingConfig) -> str:
             "## Optimization insights\n"
             + "\n".join(f"- {i}" for i in bundle.insights)
         )
+    if bundle.diagnosis:
+        from repro.diagnosis.record import render_diagnosis_section  # lazy: keep
+        # the prompt layer import-light for diagnosis-off methods
+
+        section = render_diagnosis_section(
+            bundle.diagnosis, bundle.baseline_diagnosis
+        )
+        if section:
+            parts.append("## Performance diagnosis (best parent)\n" + section)
     if bundle.rag_solutions:
         lines = [
             f"### Retrieved from task {name}\n```python\n{src}\n```"

@@ -1,0 +1,39 @@
+"""Profiler-in-the-loop diagnosis: *why* is this candidate slow?
+
+EvoEngineer's evolution loop historically fed only a scalar runtime back
+to the proposer.  This package closes that feedback loop (the ROADMAP's
+"Profiler-in-the-loop evolution" item): every evaluated candidate gets a
+structured `PerfDiagnosis` — bound regime, achieved-vs-roofline %, VMEM
+pressure, dominant HLO ops by cost share, tile/grid knobs, DMA-vs-compute
+breakdown, collective wire traffic — produced by `diagnose()` from three
+sources fused together:
+
+* `repro.launch.hlo_analysis.analyze_compiled` — trip-count-corrected
+  FLOPs / HBM bytes / wire bytes / per-op byte shares of the compiled
+  candidate;
+* the `RooflineTiming` v5e machine model (`repro.evaluation.timing`) —
+  peak FLOP/s, HBM bandwidth, ridge point, VMEM budget;
+* the candidate's measured (or simulated) timing statistics.
+
+Degradation is graceful by design: when compilation or cost analysis is
+unavailable (interpret mode, CPU backends without cost analysis, exotic
+candidates), `diagnose()` returns a partial diagnosis with its `level`
+field naming what is missing — it NEVER raises into the evaluator, so a
+valid candidate can never be turned invalid by its own diagnosis.
+"""
+
+from repro.diagnosis.record import (
+    DIAG_PROMPT_BUDGET,
+    PerfDiagnosis,
+    render_diagnosis_section,
+)
+from repro.diagnosis.pipeline import classify_bound, diagnose, diagnose_jitted
+
+__all__ = [
+    "DIAG_PROMPT_BUDGET",
+    "PerfDiagnosis",
+    "classify_bound",
+    "diagnose",
+    "diagnose_jitted",
+    "render_diagnosis_section",
+]

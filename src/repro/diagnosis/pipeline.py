@@ -1,0 +1,164 @@
+"""The `diagnose()` pipeline: fuse HLO costs + roofline model + timing.
+
+Three fusion sources, all optional — the pipeline produces the best
+diagnosis the available signals allow and records what was missing in
+`PerfDiagnosis.notes` instead of raising:
+
+* HLO costs from `repro.launch.hlo_analysis.analyze_compiled` (trip-count
+  corrected FLOPs / HBM bytes / wire bytes / per-op byte shares);
+* the v5e machine model from `repro.evaluation.timing` (peak FLOP/s, HBM
+  bandwidth — their ratio is the ridge point — and the VMEM budget);
+* the candidate's `Measurement` verdict (runtime, mode, noise floor).
+
+`diagnose_jitted()` is the evaluator-facing entry: it compiles the
+already-traced jitted candidate, runs cost + memory analysis, and fuses.
+EVERY exception — including a SIGALRM `TimeoutError` from the evaluator's
+per-candidate deadline firing mid-diagnosis — is caught and degraded to a
+partial diagnosis, so diagnosing a valid candidate can never invalidate
+it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.diagnosis.record import _TOP_OPS, PerfDiagnosis
+from repro.evaluation.timing import VMEM_BUDGET, _peaks
+
+
+def classify_bound(
+    flops: float,
+    bytes_accessed: float,
+    peak: Optional[float] = None,
+    bw: Optional[float] = None,
+) -> str:
+    """Roofline verdict for a (flops, HBM bytes) workload: "compute" when
+    its arithmetic intensity meets the machine's ridge point, "memory"
+    below it, "unknown" when the workload is degenerate (no bytes moved —
+    nothing to classify)."""
+    if bytes_accessed <= 0.0 or flops < 0.0:
+        return "unknown"
+    if peak is None or bw is None:
+        peak, bw = _peaks()
+    return "compute" if flops / bytes_accessed >= peak / bw else "memory"
+
+
+def diagnose(
+    *,
+    costs: Optional[Dict[str, Any]] = None,
+    runtime_us: Optional[float] = None,
+    timing_mode: str = "",
+    noise_floor_us: Optional[float] = None,
+    vmem_peak_bytes: Optional[int] = None,
+    grid: Optional[Dict[str, Any]] = None,
+    notes: Optional[List[str]] = None,
+) -> PerfDiagnosis:
+    """Fuse whatever signals are present into one PerfDiagnosis.
+
+    ``costs`` is an `analyze_compiled` result dict (or None when
+    compilation / cost analysis was unavailable); ``runtime_us`` the
+    candidate's timing verdict (or None).  Never raises.
+    """
+    notes = list(notes or [])
+    d = PerfDiagnosis(
+        runtime_us=runtime_us,
+        timing_mode=timing_mode,
+        noise_floor_us=noise_floor_us,
+        grid=dict(grid) if grid else None,
+        notes=notes,
+    )
+    try:
+        peak, bw = _peaks()
+    except Exception as e:  # noqa: BLE001 — machine model is best-effort
+        peak = bw = None
+        notes.append(f"machine model unavailable: {type(e).__name__}")
+    if costs:
+        d.flops = float(costs.get("flops", 0.0))
+        d.bytes_accessed = float(costs.get("bytes_accessed", 0.0))
+        d.transcendentals = float(costs.get("transcendentals", 0.0))
+        d.wire_bytes = float(costs.get("wire_bytes", 0.0))
+        d.dominant_ops = _dominant_ops(costs.get("op_bytes") or {})
+        if d.bytes_accessed > 0.0:
+            d.arithmetic_intensity = d.flops / d.bytes_accessed
+        if peak and bw:
+            d.ridge_intensity = peak / bw
+            d.bound = classify_bound(d.flops, d.bytes_accessed, peak, bw)
+            d.roofline_us = max(d.flops / peak, d.bytes_accessed / bw) * 1e6
+            if runtime_us and d.roofline_us > 0.0:
+                d.achieved_pct = min(100.0, 100.0 * d.roofline_us / runtime_us)
+    if vmem_peak_bytes is not None:
+        d.vmem_peak_bytes = int(vmem_peak_bytes)
+        d.vmem_budget = VMEM_BUDGET
+        d.vmem_pressure = vmem_peak_bytes / VMEM_BUDGET
+        d.vmem_ok = vmem_peak_bytes <= VMEM_BUDGET
+    if timing_mode == "simulated" and d.achieved_pct is not None:
+        notes.append("simulated timing: roofline % is indicative only")
+    d.level = _level(costs is not None, runtime_us is not None)
+    return d
+
+
+def _level(have_costs: bool, have_timing: bool) -> str:
+    if have_costs and have_timing:
+        return "full"
+    if have_costs:
+        return "costs_only"
+    if have_timing:
+        return "timing_only"
+    return "empty"
+
+
+def _dominant_ops(op_bytes: Dict[str, float]) -> List[Tuple[str, float]]:
+    total = sum(op_bytes.values())
+    if total <= 0.0:
+        return []
+    ranked = sorted(op_bytes.items(), key=lambda kv: (-kv[1], kv[0]))
+    return [(op, b / total) for op, b in ranked[:_TOP_OPS]]
+
+
+def diagnose_jitted(
+    task,
+    jfn,
+    *,
+    runtime_us: Optional[float] = None,
+    timing_mode: str = "",
+    noise_floor_us: Optional[float] = None,
+    input_seed: int = 10_000,
+    grid: Optional[Dict[str, Any]] = None,
+) -> PerfDiagnosis:
+    """Evaluator entry point: compile the (already successfully traced)
+    jitted candidate against the task's input shapes, extract HLO costs +
+    a VMEM-peak proxy, and fuse with the timing verdict.  Degrades
+    gracefully — any failure (CPU backends without cost analysis,
+    interpret-mode Pallas candidates, the SIGALRM deadline firing
+    mid-analysis) lands in `notes`, never propagates."""
+    costs: Optional[Dict[str, Any]] = None
+    vmem: Optional[int] = None
+    notes: List[str] = []
+    try:
+        compiled = jfn.lower(*task.make_inputs(input_seed)).compile()
+    except Exception as e:  # noqa: BLE001 — incl. TimeoutError: degrade, never fail
+        compiled = None
+        notes.append(f"compile unavailable: {type(e).__name__}")
+    if compiled is not None:
+        try:
+            from repro.launch.hlo_analysis import analyze_compiled
+
+            costs = analyze_compiled(compiled, n_devices=1)
+        except Exception as e:  # noqa: BLE001
+            notes.append(f"cost analysis unavailable: {type(e).__name__}")
+        try:
+            # temp buffers are the closest portable proxy for on-chip
+            # working-set pressure; CPU backends report it too
+            ma = compiled.memory_analysis()
+            vmem = int(getattr(ma, "temp_size_in_bytes"))
+        except Exception:  # noqa: BLE001 — older jax / exotic backends
+            pass
+    return diagnose(
+        costs=costs,
+        runtime_us=runtime_us,
+        timing_mode=timing_mode,
+        noise_floor_us=noise_floor_us,
+        vmem_peak_bytes=vmem,
+        grid=grid,
+        notes=notes,
+    )

@@ -1,0 +1,293 @@
+"""The `PerfDiagnosis` record: one structured why-is-it-slow verdict.
+
+A diagnosis is a plain dataclass with a stable JSON form (`to_dict` /
+`from_dict`, floats rounded so serialization is platform-stable), a
+hand-rolled schema validator (no external jsonschema dependency — the
+container must not grow new packages), and a *bounded* prompt rendering:
+`render()` and `render_diagnosis_section()` never exceed their character
+budget, so a diagnosis-augmented prompt cannot blow past `LLMClient`
+token-budget estimates no matter how many HLO op kinds a candidate
+compiles into.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+# Hard ceiling (characters) for the whole "Performance diagnosis" prompt
+# section: parent diagnosis + delta-vs-baseline line.  ~900 chars is
+# ~220 tokens under the 4-chars/token estimate LLMClient budgets with.
+DIAG_PROMPT_BUDGET = 900
+
+# how many HLO op kinds the dominant-op breakdown keeps
+_TOP_OPS = 3
+
+_LEVELS = ("full", "costs_only", "timing_only", "empty")
+_BOUNDS = ("compute", "memory", "unknown")
+
+
+@dataclasses.dataclass
+class PerfDiagnosis:
+    """Why a candidate runs at the speed it does.
+
+    ``level`` names which signal sources were available:
+      full        — HLO cost analysis AND a timing verdict were fused
+      costs_only  — compiled + analyzed, but no runtime to compare against
+      timing_only — runtime known, but compilation/cost analysis was
+                    unavailable (interpret mode, CPU backends, exotic
+                    candidates); roofline fields are absent
+      empty       — neither source; only notes explaining why
+    """
+
+    level: str = "empty"
+    # -- bound regime (roofline verdict) -------------------------------
+    bound: str = "unknown"  # "compute" | "memory" | "unknown"
+    arithmetic_intensity: Optional[float] = None  # flops / HBM byte
+    ridge_intensity: Optional[float] = None  # machine balance point
+    # -- HLO cost totals (per device, trip-count corrected) ------------
+    flops: Optional[float] = None
+    bytes_accessed: Optional[float] = None
+    transcendentals: Optional[float] = None
+    wire_bytes: Optional[float] = None  # collective traffic
+    dominant_ops: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+    # -- roofline vs measured ------------------------------------------
+    roofline_us: Optional[float] = None  # max(compute, memory) bound
+    runtime_us: Optional[float] = None  # the candidate's verdict
+    achieved_pct: Optional[float] = None  # roofline_us / runtime_us * 100
+    timing_mode: str = ""  # "wall" | "simulated" | ""
+    noise_floor_us: Optional[float] = None
+    # -- VMEM pressure --------------------------------------------------
+    vmem_peak_bytes: Optional[int] = None
+    vmem_budget: Optional[int] = None
+    vmem_pressure: Optional[float] = None  # peak / budget
+    vmem_ok: Optional[bool] = None
+    # -- launch shape ---------------------------------------------------
+    grid: Optional[Dict[str, Any]] = None  # genome / tile knobs if known
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Stable JSON form: None fields omitted, floats rounded so the
+        serialization is byte-stable across platforms and re-runs."""
+        out: Dict[str, Any] = {"level": self.level, "bound": self.bound}
+        for field, digits in _FLOAT_FIELDS:
+            v = getattr(self, field)
+            if v is not None:
+                out[field] = round(float(v), digits)
+        if self.dominant_ops:
+            out["dominant_ops"] = [
+                [op, round(float(share), 4)] for op, share in self.dominant_ops
+            ]
+        if self.timing_mode:
+            out["timing_mode"] = self.timing_mode
+        if self.vmem_peak_bytes is not None:
+            out["vmem_peak_bytes"] = int(self.vmem_peak_bytes)
+        if self.vmem_budget is not None:
+            out["vmem_budget"] = int(self.vmem_budget)
+        if self.vmem_ok is not None:
+            out["vmem_ok"] = bool(self.vmem_ok)
+        if self.grid is not None:
+            out["grid"] = dict(self.grid)
+        if self.notes:
+            out["notes"] = list(self.notes)
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PerfDiagnosis":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kwargs = {k: v for k, v in d.items() if k in known}
+        if "dominant_ops" in kwargs:
+            kwargs["dominant_ops"] = [
+                (op, float(share)) for op, share in kwargs["dominant_ops"]
+            ]
+        return cls(**kwargs)
+
+    # ------------------------------------------------------------------
+    def render(self, char_budget: int = DIAG_PROMPT_BUDGET) -> str:
+        """Human/LLM-readable summary, hard-capped at ``char_budget``."""
+        lines: List[str] = []
+        if self.level == "empty":
+            lines.append("diagnosis unavailable")
+        else:
+            head = f"bound={self.bound}"
+            if self.achieved_pct is not None:
+                head += f", achieving {self.achieved_pct:.1f}% of roofline"
+            if self.roofline_us is not None and self.runtime_us is not None:
+                head += (
+                    f" (roofline {_fmt_us(self.roofline_us)},"
+                    f" measured {_fmt_us(self.runtime_us)}"
+                    f"{' ' + self.timing_mode if self.timing_mode else ''})"
+                )
+            lines.append(head)
+            if self.arithmetic_intensity is not None and self.ridge_intensity is not None:
+                lines.append(
+                    f"intensity {self.arithmetic_intensity:.2f} flop/B"
+                    f" vs ridge {self.ridge_intensity:.1f};"
+                    f" HBM {_fmt_bytes(self.bytes_accessed)}"
+                    f", wire {_fmt_bytes(self.wire_bytes)}"
+                )
+            if self.vmem_pressure is not None:
+                lines.append(
+                    f"vmem {_fmt_bytes(self.vmem_peak_bytes)}"
+                    f"/{_fmt_bytes(self.vmem_budget)}"
+                    f" ({100.0 * self.vmem_pressure:.1f}%"
+                    f"{' ok' if self.vmem_ok else ' OVER BUDGET'})"
+                )
+            if self.dominant_ops:
+                ops = ", ".join(
+                    f"{op} {100.0 * share:.0f}%" for op, share in self.dominant_ops
+                )
+                lines.append(f"dominant ops: {ops}")
+            if self.grid:
+                lines.append(f"grid/tile: {self.grid}")
+        for n in self.notes:
+            lines.append(f"note: {n}")
+        return _clip("\n".join(lines), char_budget)
+
+
+# (field, rounding digits) for the float members of the JSON form
+_FLOAT_FIELDS: Tuple[Tuple[str, int], ...] = (
+    ("arithmetic_intensity", 4),
+    ("ridge_intensity", 4),
+    ("flops", 1),
+    ("bytes_accessed", 1),
+    ("transcendentals", 1),
+    ("wire_bytes", 1),
+    ("roofline_us", 3),
+    ("runtime_us", 3),
+    ("achieved_pct", 2),
+    ("noise_floor_us", 3),
+    ("vmem_pressure", 4),
+)
+
+
+def _fmt_us(v: Optional[float]) -> str:
+    if v is None:
+        return "?"
+    if v >= 1000.0:
+        return f"{v / 1000.0:.2f}ms"
+    return f"{v:.1f}us"
+
+
+def _fmt_bytes(v: Optional[float]) -> str:
+    if v is None:
+        return "?"
+    v = float(v)
+    for unit, div in (("GB", 2**30), ("MB", 2**20), ("KB", 2**10)):
+        if v >= div:
+            return f"{v / div:.1f}{unit}"
+    return f"{v:.0f}B"
+
+
+def _clip(text: str, budget: int) -> str:
+    if len(text) <= budget:
+        return text
+    return text[: max(0, budget - 3)] + "..."
+
+
+# --------------------------------------------------------------------------
+# hand-rolled schema (the CI smoke job validates every emitted diagnosis)
+# --------------------------------------------------------------------------
+
+# field -> (allowed python types, required)
+SCHEMA: Dict[str, Tuple[Tuple[type, ...], bool]] = {
+    "level": ((str,), True),
+    "bound": ((str,), True),
+    "arithmetic_intensity": ((int, float), False),
+    "ridge_intensity": ((int, float), False),
+    "flops": ((int, float), False),
+    "bytes_accessed": ((int, float), False),
+    "transcendentals": ((int, float), False),
+    "wire_bytes": ((int, float), False),
+    "dominant_ops": ((list,), False),
+    "roofline_us": ((int, float), False),
+    "runtime_us": ((int, float), False),
+    "achieved_pct": ((int, float), False),
+    "timing_mode": ((str,), False),
+    "noise_floor_us": ((int, float), False),
+    "vmem_peak_bytes": ((int,), False),
+    "vmem_budget": ((int,), False),
+    "vmem_pressure": ((int, float), False),
+    "vmem_ok": ((bool,), False),
+    "grid": ((dict,), False),
+    "notes": ((list,), False),
+}
+
+
+def validate(d: Dict[str, Any]) -> None:
+    """Raise ValueError unless ``d`` is a valid serialized PerfDiagnosis."""
+    if not isinstance(d, dict):
+        raise ValueError(f"diagnosis must be a dict, got {type(d).__name__}")
+    for key, (types, required) in SCHEMA.items():
+        if key not in d:
+            if required:
+                raise ValueError(f"diagnosis missing required field {key!r}")
+            continue
+        v = d[key]
+        # bool is an int subclass: reject True masquerading as a number
+        if isinstance(v, bool) and bool not in types:
+            raise ValueError(f"diagnosis field {key!r} has bool, wants {types}")
+        if not isinstance(v, types):
+            raise ValueError(
+                f"diagnosis field {key!r} has {type(v).__name__}, wants {types}"
+            )
+    unknown = set(d) - set(SCHEMA)
+    if unknown:
+        raise ValueError(f"diagnosis has unknown fields {sorted(unknown)}")
+    if d["level"] not in _LEVELS:
+        raise ValueError(f"diagnosis level {d['level']!r} not in {_LEVELS}")
+    if d["bound"] not in _BOUNDS:
+        raise ValueError(f"diagnosis bound {d['bound']!r} not in {_BOUNDS}")
+    for pair in d.get("dominant_ops", []):
+        if (
+            not isinstance(pair, (list, tuple))
+            or len(pair) != 2
+            or not isinstance(pair[0], str)
+            or isinstance(pair[1], bool)
+            or not isinstance(pair[1], (int, float))
+        ):
+            raise ValueError(f"dominant_ops entry {pair!r} is not [op, share]")
+    for n in d.get("notes", []):
+        if not isinstance(n, str):
+            raise ValueError(f"notes entry {n!r} is not a string")
+
+
+# --------------------------------------------------------------------------
+# prompt section (parent diagnosis + delta vs baseline)
+# --------------------------------------------------------------------------
+
+
+def render_diagnosis_section(
+    parent: Optional[Dict[str, Any]],
+    baseline: Optional[Dict[str, Any]] = None,
+    char_budget: int = DIAG_PROMPT_BUDGET,
+) -> str:
+    """The prompt-facing section body: the parent candidate's diagnosis
+    plus a one-line delta against the task baseline's diagnosis.  Total
+    output never exceeds ``char_budget`` characters."""
+    if not parent:
+        return ""
+    pd = PerfDiagnosis.from_dict(parent)
+    delta = _delta_line(pd, PerfDiagnosis.from_dict(baseline) if baseline else None)
+    body = pd.render(char_budget - len(delta) - 1 if delta else char_budget)
+    if delta:
+        body = f"{body}\n{delta}" if body else delta
+    return _clip(body, char_budget)
+
+
+def _delta_line(parent: PerfDiagnosis, base: Optional[PerfDiagnosis]) -> str:
+    if base is None:
+        return ""
+    parts: List[str] = []
+    if parent.runtime_us and base.runtime_us:
+        parts.append(f"{base.runtime_us / parent.runtime_us:.2f}x vs baseline")
+    if parent.achieved_pct is not None and base.achieved_pct is not None:
+        parts.append(
+            f"roofline {base.achieved_pct:.1f}% -> {parent.achieved_pct:.1f}%"
+        )
+    if parent.bound != base.bound and base.bound != "unknown":
+        parts.append(f"regime {base.bound} -> {parent.bound}")
+    if not parts:
+        return ""
+    return _clip("delta: " + "; ".join(parts), 200)

@@ -70,6 +70,11 @@ class EvalConfig:
     # stage is replaced.  Used by tests/benches that need bit-identical
     # results across serial and parallel evaluation.
     timing_mode: str = "wall"
+    # produce a PerfDiagnosis (repro.diagnosis) for every candidate that
+    # passes stage 1.  Diagnosis is read-only feedback: it never changes
+    # a verdict, and it degrades to a partial record rather than failing
+    # when compilation/cost analysis is unavailable.
+    diagnosis: bool = True
 
 
 @dataclasses.dataclass
@@ -83,6 +88,10 @@ class EvalResult:
     # exactly 0.0 for simulated timing): runtime differences below this
     # are noise, not signal
     noise_floor_us: Optional[float] = None
+    # serialized PerfDiagnosis (repro.diagnosis.record schema) when
+    # EvalConfig.diagnosis is on and the candidate passed stage 1; plain
+    # dict so it crosses the ParallelEvaluator worker pipe untouched
+    diagnosis: Optional[Dict[str, Any]] = None
 
     @property
     def valid(self) -> bool:
@@ -225,14 +234,20 @@ class Evaluator:
             exec(code, ns)  # noqa: S102 — sandboxed candidate execution
             fn = ns.get("kernel")
             if fn is None:
-                return EvalResult(error="no `kernel` function defined", stage="compile")
+                return EvalResult(
+                    error="no `kernel` function defined",
+                    stage="compile",
+                    diagnosis=self._diagnose(task, None),
+                )
             jfn = jax.jit(fn)
             inputs0 = task.make_inputs(cfg.input_seed_base)
             jfn.lower(*inputs0)  # trace: shape/dtype/primitive errors
         except TimeoutError:
             raise  # the deadline, not a candidate fault: stage "timeout"
         except Exception as e:  # noqa: BLE001
-            return EvalResult(error=_errmsg(e), stage="compile")
+            return EvalResult(
+                error=_errmsg(e), stage="compile", diagnosis=self._diagnose(task, None)
+            )
 
         # ---- stage 2: functional test (5 cases vs oracle) -------------
         try:
@@ -246,6 +261,7 @@ class Evaluator:
                         compile_ok=True,
                         error=f"shape mismatch {got.shape} vs {want.shape}",
                         stage="correctness",
+                        diagnosis=self._diagnose(task, jfn),
                     )
                 if not np.allclose(got, want, rtol=task.rtol, atol=task.atol):
                     max_err = float(np.max(np.abs(got.astype(np.float64) - want.astype(np.float64))))
@@ -253,12 +269,14 @@ class Evaluator:
                         compile_ok=True,
                         error=f"value mismatch (max abs err {max_err:.3e})",
                         stage="correctness",
+                        diagnosis=self._diagnose(task, jfn),
                     )
         except TimeoutError:
             raise  # the deadline, not a candidate fault: stage "timeout"
         except Exception as e:  # noqa: BLE001
             return EvalResult(
-                compile_ok=True, error=_errmsg(e), stage="correctness"
+                compile_ok=True, error=_errmsg(e), stage="correctness",
+                diagnosis=self._diagnose(task, jfn),
             )
 
         # ---- performance (via the shared timing subsystem) ---------------
@@ -266,7 +284,36 @@ class Evaluator:
         return EvalResult(
             compile_ok=True, correct=True, runtime_us=m.runtime_us,
             stage="done", noise_floor_us=m.noise_floor_us,
+            diagnosis=self._diagnose(task, jfn, m),
         )
+
+    def _diagnose(
+        self, task: KernelTask, jfn, m: Optional[Measurement] = None
+    ) -> Optional[Dict[str, Any]]:
+        """Serialized PerfDiagnosis for the candidate (None with diagnosis
+        off).  Stage-1 failures get an 'empty' stub; candidates that traced
+        get HLO costs; timed candidates get the full roofline fusion.
+        Diagnosis is advisory — any failure degrades to None rather than
+        propagating into the verdict."""
+        if not self.config.diagnosis:
+            return None
+        from repro.diagnosis import diagnose, diagnose_jitted
+
+        try:
+            if jfn is None:
+                return diagnose(
+                    notes=["stage-1 failure: no compiled artifact"]
+                ).to_dict()
+            return diagnose_jitted(
+                task,
+                jfn,
+                runtime_us=m.runtime_us if m else None,
+                timing_mode=self.timing.mode if m else "",
+                noise_floor_us=m.noise_floor_us if m else None,
+                input_seed=self.config.input_seed_base,
+            ).to_dict()
+        except Exception:  # noqa: BLE001 — never fail a candidate over feedback
+            return None
 
     def _measure(self, task: KernelTask, jfn, sha: str) -> Measurement:
         """One Measurement for the (already warm-traced) jitted candidate.

@@ -377,6 +377,37 @@ class HloAnalyzer:
             out.append((body, trip_count(self.comps, cond, line)))
         return out
 
+    # -- trip-weighted per-op output-byte breakdown ----------------------
+    _OP_BYTES_SKIP = frozenset(
+        ("parameter", "constant", "tuple", "get-tuple-element", "bitcast")
+    )
+
+    def op_bytes(self, comp: Optional[str] = None, mult: float = 1.0) -> Dict[str, float]:
+        """Output bytes produced per op kind, while bodies weighted by
+        their trip counts.  A cheap cost-share proxy (which ops move the
+        data) for the perf-diagnosis layer: fusions count as one 'fusion'
+        instruction rather than their internals, matching how a profiler
+        attributes time to fused kernels."""
+        comp = comp or self.entry
+        out: Dict[str, float] = {}
+
+        def merge(sub: Dict[str, float]) -> None:
+            for k, v in sub.items():
+                out[k] = out.get(k, 0.0) + v
+
+        for ins in self.comps[comp].instructions:
+            if ins.op in self._OP_BYTES_SKIP:
+                continue
+            if ins.op == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if cm and bm and bm.group(1) in self.comps:
+                    trips = trip_count(self.comps, cm.group(1), ins.line)
+                    merge(self.op_bytes(bm.group(1), mult * trips))
+                continue
+            out[ins.op] = out.get(ins.op, 0.0) + mult * _shape_bytes(ins.type_str)
+        return out
+
     def _all_whiles(self):
         found = []
         for c in self.comps.values():
@@ -400,6 +431,8 @@ def analyze_compiled(compiled, n_devices: int) -> Dict[str, float]:
     raw = compiled.cost_analysis()
     if isinstance(raw, (list, tuple)):  # jax < 0.5 returns one dict per program
         raw = raw[0] if raw else {}
+    if raw is None:  # CPU backends / older jax may report no cost analysis
+        raw = {}
     return {
         "flops": cost.flops,
         "bytes_accessed": cost.bytes_accessed,
@@ -409,4 +442,5 @@ def analyze_compiled(compiled, n_devices: int) -> Dict[str, float]:
         "uncorrected_flops": float(raw.get("flops", 0.0)),
         "uncorrected_bytes": float(raw.get("bytes accessed", 0.0)),
         "while_trips": analyzer.while_summary(),
+        "op_bytes": analyzer.op_bytes(),
     }

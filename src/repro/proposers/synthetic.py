@@ -90,8 +90,17 @@ class SyntheticLLM(Proposer):
         fault,
         rng: np.random.Generator,
     ) -> Proposal:
+        # the diagnosis regime of the lead parent (profiler-in-the-loop
+        # feedback): with it, insight bias conditions on the bound regime —
+        # mirroring how a real LLM would weigh "this helped while
+        # memory-bound" differently once told the parent is compute-bound
+        regime = None
+        if guiding.use_diagnosis and bundle.diagnosis:
+            bound = bundle.diagnosis.get("bound")
+            if bound in ("compute", "memory"):
+                regime = bound
         genome, knob, choice, parent_sid = self._pick_genome(
-            task, bundle, guiding, fault, rng
+            task, bundle, guiding, fault, rng, regime
         )
         source = task.render(genome)
         insight = (
@@ -119,7 +128,7 @@ class SyntheticLLM(Proposer):
         )
 
     # ------------------------------------------------------------------
-    def _pick_genome(self, task, bundle, guiding, fault, rng):
+    def _pick_genome(self, task, bundle, guiding, fault, rng, regime=None):
         parents = [s for s in bundle.historical if s.genome]
         explore = rng.random() < fault.explore or not parents
 
@@ -127,7 +136,7 @@ class SyntheticLLM(Proposer):
             genome = task.random_genome(rng)
             # insights bias even exploration (I3): prefer knob choices with
             # positive measured gain
-            genome = self._apply_insight_bias(task, genome, guiding, rng)
+            genome = self._apply_insight_bias(task, genome, guiding, rng, regime=regime)
             return genome, None, None, None
 
         # exploitation: move near a parent
@@ -143,16 +152,17 @@ class SyntheticLLM(Proposer):
             return genome, None, None, a.sid
         parent = parents[int(rng.integers(len(parents)))]
         base = {k: parent.genome.get(k, task.naive_genome[k]) for k in task.genome_space}
-        knob = self._pick_knob(task, guiding, rng)
+        knob = self._pick_knob(task, guiding, rng, regime=regime)
         genome, knob, choice = task.neighbor_genome(base, rng, knob=knob)
-        genome = self._apply_insight_bias(task, genome, guiding, rng, keep=knob)
+        genome = self._apply_insight_bias(task, genome, guiding, rng, keep=knob, regime=regime)
         return genome, knob, genome[knob], parent.sid
 
-    def _pick_knob(self, task, guiding, rng) -> Optional[str]:
-        """With insights, prefer knobs with the largest observed |gain|."""
+    def _pick_knob(self, task, guiding, rng, regime=None) -> Optional[str]:
+        """With insights, prefer knobs with the largest observed |gain|
+        (restricted to the parent's bound regime when diagnosis gives one)."""
         if not (guiding.use_insights and self.insight_store):
             return None
-        bias = self.insight_store.knob_bias()
+        bias = self.insight_store.knob_bias(regime=regime)
         knobs = [k for k in task.genome_space if k in bias]
         if not knobs or rng.random() < 0.3:
             return None
@@ -162,10 +172,10 @@ class SyntheticLLM(Proposer):
         weights = weights / weights.sum()
         return knobs[int(rng.choice(len(knobs), p=weights))]
 
-    def _apply_insight_bias(self, task, genome, guiding, rng, keep=None):
+    def _apply_insight_bias(self, task, genome, guiding, rng, keep=None, regime=None):
         if not (guiding.use_insights and self.insight_store):
             return genome
-        bias = self.insight_store.knob_bias()
+        bias = self.insight_store.knob_bias(regime=regime)
         g = dict(genome)
         for knob, choices in bias.items():
             if knob == keep or knob not in task.genome_space:

@@ -1,0 +1,336 @@
+"""Profiler-in-the-loop diagnosis (repro.diagnosis) tests.
+
+The two contracts this file locks:
+
+* diagnosis=off is a byte-identical no-op: engine runs of every pre-existing
+  method produce records AND checkpoint files with the exact bytes the
+  pre-diagnosis engine produced (golden fixture captured on main before the
+  subsystem landed — tests/fixtures/diagnosis_off_golden.json);
+* diagnosis=on produces a schema-valid PerfDiagnosis for every candidate on
+  the default CPU path, never invalidates a valid candidate, renders under
+  the fixed prompt budget, and survives checkpoint/resume.
+"""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.tasks  # noqa: F401 — populate the registry
+import repro.tasks.calibration  # noqa: F401
+from repro.core.engine import EvolutionEngine
+from repro.core.methods import DISPLAY_ORDER, get_method
+from repro.diagnosis import (
+    DIAG_PROMPT_BUDGET,
+    PerfDiagnosis,
+    classify_bound,
+    diagnose,
+    diagnose_jitted,
+    render_diagnosis_section,
+)
+from repro.diagnosis.record import validate
+from repro.evaluation.evaluator import EvalConfig, Evaluator
+from repro.sweep.driver import run_unit
+from repro.tasks.base import get_task
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "fixtures", "diagnosis_off_golden.json")
+
+
+def _sim_evaluator(diagnosis: bool = True) -> Evaluator:
+    return Evaluator(EvalConfig(timing_mode="simulated", diagnosis=diagnosis))
+
+
+def _sha256(path: str) -> str:
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+# --------------------------------------------------------------------------
+# the ablation-soundness contract: diagnosis-off == pre-diagnosis engine
+# --------------------------------------------------------------------------
+
+
+def test_diagnosis_off_byte_identical_to_pre_pr_engine(tmp_path):
+    """Replay the golden grid (captured on main BEFORE this subsystem
+    existed): every record and every checkpoint file must come out with
+    identical bytes now that the diagnosis plumbing is in place."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert golden["units"], "golden fixture is empty"
+    for unit in golden["units"]:
+        ckdir = tmp_path / unit["task"] / unit["method_key"]
+        rec = run_unit(
+            get_task(unit["task"]),
+            get_method(unit["method_key"]),
+            unit["seed"],
+            evaluator=_sim_evaluator(),
+            trials=unit["trials"],
+            rag_pool=[],
+            batch_size=1,
+            checkpoint_dir=str(ckdir),
+        )
+        assert rec == unit["record"], f"record drifted for {unit['method_key']}"
+        ck = ckdir / unit["checkpoint_name"]
+        assert ck.exists(), f"checkpoint missing for {unit['method_key']}"
+        assert _sha256(str(ck)) == unit["checkpoint_sha256"], (
+            f"checkpoint bytes drifted for {unit['method_key']} — the "
+            "diagnosis=off path is no longer a byte-identical no-op"
+        )
+
+
+def test_solution_to_dict_omits_none_diagnosis():
+    from repro.core.solution import Solution
+
+    d = Solution(source="x = 1").to_dict()
+    assert "diagnosis" not in d
+    d2 = Solution(source="x = 1", diagnosis={"level": "empty", "bound": "unknown"}).to_dict()
+    assert d2["diagnosis"]["level"] == "empty"
+    # round-trips either way
+    assert Solution.from_dict(d).diagnosis is None
+    assert Solution.from_dict(d2).diagnosis == d2["diagnosis"]
+
+
+def test_insight_record_omits_none_regime():
+    from repro.core.insights import InsightRecord
+
+    assert "regime" not in InsightRecord(text="t").to_dict()
+    assert InsightRecord(text="t", regime="memory").to_dict()["regime"] == "memory"
+    assert InsightRecord.from_dict({"text": "t"}).regime is None
+
+
+# --------------------------------------------------------------------------
+# diagnosis=on: produced, schema-valid, never invalidating, bounded
+# --------------------------------------------------------------------------
+
+
+def test_every_candidate_gets_schema_valid_diagnosis():
+    ev = _sim_evaluator()
+    task = get_task("cal_quick")
+    res = ev.evaluate(task, task.initial_source)
+    assert res.valid
+    assert res.diagnosis is not None
+    validate(res.diagnosis)
+    assert res.diagnosis["level"] == "full"
+    assert res.diagnosis["runtime_us"] == pytest.approx(res.runtime_us, rel=1e-3)
+
+    # stage-1 failures get the degraded stub, still schema-valid
+    bad = ev.evaluate(task, "def kernel(x:\n  return x")
+    assert not bad.compile_ok
+    assert bad.diagnosis is not None
+    validate(bad.diagnosis)
+    assert bad.diagnosis["level"] == "empty"
+
+    # stage-2 failures still carry HLO costs (costs_only)
+    wrong = ev.evaluate(task, task.initial_source.replace("return", "return 2 *"))
+    if wrong.compile_ok and not wrong.correct:
+        assert wrong.diagnosis is not None
+        validate(wrong.diagnosis)
+        assert wrong.diagnosis["level"] == "costs_only"
+
+
+def test_diagnosis_off_config_attaches_nothing():
+    ev = _sim_evaluator(diagnosis=False)
+    task = get_task("cal_quick")
+    res = ev.evaluate(task, task.initial_source)
+    assert res.valid
+    assert res.diagnosis is None
+
+
+def test_diagnosis_failure_never_invalidates(monkeypatch):
+    """A crashing cost analysis degrades the diagnosis, not the verdict."""
+    import repro.launch.hlo_analysis as hlo
+
+    def boom(*a, **k):
+        raise RuntimeError("profiler exploded")
+
+    monkeypatch.setattr(hlo, "analyze_compiled", boom)
+    ev = _sim_evaluator()
+    task = get_task("cal_quick")
+    res = ev.evaluate(task, task.initial_source)
+    assert res.valid, "diagnosis failure must never fail a valid candidate"
+    assert res.diagnosis is not None
+    validate(res.diagnosis)
+    assert res.diagnosis["level"] == "timing_only"
+    assert any("cost analysis unavailable" in n for n in res.diagnosis["notes"])
+
+
+def test_parallel_workers_ship_diagnosis():
+    from repro.evaluation.parallel import ParallelEvaluator
+
+    task = get_task("cal_quick")
+    serial = _sim_evaluator().evaluate(task, task.initial_source)
+    with ParallelEvaluator(
+        EvalConfig(timing_mode="simulated"),
+        workers=1,
+        extra_task_modules=("repro.tasks.calibration",),
+    ) as pool:
+        par = pool.evaluate(task, task.initial_source)
+    assert par.diagnosis == serial.diagnosis
+
+
+def test_engine_on_mode_attaches_and_renders(tmp_path):
+    task = get_task("cal_quick")
+    eng = EvolutionEngine(
+        task, get_method("evoengineer-diagnosis"), evaluator=_sim_evaluator(), seed=0
+    )
+    res = eng.run(max_trials=8)
+    assert eng._baseline_diag is not None
+    validate(eng._baseline_diag)
+    for sol in res.history:
+        if sol.valid:
+            assert sol.diagnosis is not None, f"valid {sol.sid} missing diagnosis"
+            validate(sol.diagnosis)
+    # the prompt for the next trial carries the bounded section
+    _, req = eng._prepare_request(eng.trial)
+    assert "## Performance diagnosis (best parent)" in req.prompt
+    section = req.prompt.split("## Performance diagnosis (best parent)\n", 1)[1]
+    section = section.split("\n\n## ", 1)[0]
+    assert len(section) <= DIAG_PROMPT_BUDGET
+    # regime-tagged insights made it into the store
+    assert any(r.regime in ("compute", "memory") for r in eng.insights.records)
+
+
+def test_off_mode_prompt_has_no_diagnosis_section():
+    task = get_task("cal_quick")
+    eng = EvolutionEngine(
+        task, get_method("evoengineer-full"), evaluator=_sim_evaluator(), seed=0
+    )
+    eng.run(max_trials=4)
+    _, req = eng._prepare_request(eng.trial)
+    assert "Performance diagnosis" not in req.prompt
+
+
+def test_on_mode_checkpoint_resume_identical(tmp_path):
+    """The new method row survives the sweep-fleet checkpoint/resume path:
+    an interrupted+resumed unit reproduces the uninterrupted record AND
+    checkpoint bytes (diagnosis payloads included)."""
+    task = get_task("cal_quick")
+    method_key = "evoengineer-diagnosis"
+    one_shot_dir = tmp_path / "oneshot"
+    rec_full = run_unit(
+        task, get_method(method_key), 0, evaluator=_sim_evaluator(),
+        trials=12, rag_pool=[], batch_size=1, checkpoint_dir=str(one_shot_dir),
+    )
+    resumed_dir = tmp_path / "resumed"
+    run_unit(  # interrupted run: stops (and checkpoints) at trial 6
+        task, get_method(method_key), 0, evaluator=_sim_evaluator(),
+        trials=6, rag_pool=[], batch_size=1, checkpoint_dir=str(resumed_dir),
+    )
+    rec_resumed = run_unit(  # a fresh engine steals the unit and finishes it
+        task, get_method(method_key), 0, evaluator=_sim_evaluator(),
+        trials=12, rag_pool=[], batch_size=1, checkpoint_dir=str(resumed_dir),
+    )
+    assert rec_resumed == rec_full
+    name = next(p for p in os.listdir(one_shot_dir) if p.endswith(".json"))
+    assert _sha256(str(one_shot_dir / name)) == _sha256(str(resumed_dir / name))
+    # and the checkpoint actually holds diagnosis payloads
+    with open(one_shot_dir / name) as f:
+        state = json.load(f)
+    assert any("diagnosis" in s for s in state["history"])
+
+
+# --------------------------------------------------------------------------
+# the record/pipeline layer
+# --------------------------------------------------------------------------
+
+
+def test_diagnose_fuses_costs_and_timing():
+    costs = {
+        "flops": 4.0e9,
+        "bytes_accessed": 1.0e6,
+        "transcendentals": 0.0,
+        "wire_bytes": 256.0,
+        "op_bytes": {"fusion": 900.0, "reduce": 100.0},
+    }
+    d = diagnose(costs=costs, runtime_us=100.0, timing_mode="wall", noise_floor_us=2.0)
+    assert d.level == "full"
+    assert d.bound == "compute"  # intensity 4000 flop/B >> any ridge
+    assert d.arithmetic_intensity == pytest.approx(4000.0)
+    assert d.roofline_us is not None and 0.0 < d.achieved_pct <= 100.0
+    assert d.dominant_ops[0] == ("fusion", pytest.approx(0.9))
+    validate(d.to_dict())
+    # round-trip
+    assert PerfDiagnosis.from_dict(d.to_dict()).bound == "compute"
+
+
+def test_diagnose_degrades_by_level():
+    assert diagnose().level == "empty"
+    assert diagnose(runtime_us=5.0, timing_mode="wall").level == "timing_only"
+    assert diagnose(costs={"flops": 1.0, "bytes_accessed": 1.0}).level == "costs_only"
+    for d in (diagnose(), diagnose(runtime_us=5.0)):
+        validate(d.to_dict())
+
+
+def test_render_respects_budget():
+    d = diagnose(
+        costs={
+            "flops": 1e12,
+            "bytes_accessed": 1e9,
+            "wire_bytes": 1e8,
+            "op_bytes": {f"op-kind-{i}": float(i) for i in range(50)},
+        },
+        runtime_us=123.456,
+        timing_mode="wall",
+        grid={f"block_{c}": 128 for c in "abcdefgh"},
+        notes=["x" * 500, "y" * 500],
+    )
+    for budget in (40, 120, DIAG_PROMPT_BUDGET):
+        assert len(d.render(budget)) <= budget
+    sec = render_diagnosis_section(d.to_dict(), d.to_dict())
+    assert 0 < len(sec) <= DIAG_PROMPT_BUDGET
+
+
+def test_render_section_shows_delta():
+    base = diagnose(
+        costs={"flops": 1e9, "bytes_accessed": 1e9}, runtime_us=200.0, timing_mode="wall"
+    )
+    parent = diagnose(
+        costs={"flops": 1e9, "bytes_accessed": 1e6}, runtime_us=50.0, timing_mode="wall"
+    )
+    sec = render_diagnosis_section(parent.to_dict(), base.to_dict())
+    assert "delta:" in sec
+    assert "4.00x vs baseline" in sec
+    assert "regime memory -> compute" in sec
+
+
+def test_validate_rejects_bad_payloads():
+    good = diagnose(runtime_us=1.0).to_dict()
+    validate(good)
+    for bad in (
+        {"bound": "memory"},  # missing level
+        {**good, "level": "bogus"},
+        {**good, "bound": 7},
+        {**good, "surprise": 1},
+        {**good, "dominant_ops": [["fusion"]]},
+        {**good, "notes": [42]},
+        {**good, "vmem_ok": "yes"},
+        [],
+    ):
+        with pytest.raises(ValueError):
+            validate(bad)
+
+
+def test_diagnose_jitted_on_real_task():
+    import jax
+
+    task = get_task("act_relu")
+    ns = {}
+    exec(compile(task.initial_source, "<t>", "exec"), ns)
+    jfn = jax.jit(ns["kernel"])
+    d = diagnose_jitted(task, jfn, runtime_us=77.0, timing_mode="simulated")
+    assert d.level == "full"
+    assert d.flops is not None and d.bytes_accessed > 0
+    assert d.bound in ("compute", "memory")
+    assert d.dominant_ops
+    validate(d.to_dict())
+
+
+def test_classify_bound_edges():
+    peak, bw = 100.0, 1.0  # ridge = 100 flop/B
+    assert classify_bound(100.0, 1.0, peak, bw) == "compute"  # exactly at ridge
+    assert classify_bound(99.0, 1.0, peak, bw) == "memory"
+    assert classify_bound(101.0, 1.0, peak, bw) == "compute"
+    assert classify_bound(5.0, 0.0, peak, bw) == "unknown"
+    assert classify_bound(-1.0, 1.0, peak, bw) == "unknown"

@@ -89,3 +89,43 @@ def test_model_block_correction_applies():
     f4, f16 = make(4), make(16)
     # per-layer flops dominate; ratio should be close to 4x
     assert 2.5 < f16 / f4 < 4.6
+
+
+def test_cost_analysis_none_is_guarded():
+    """CPU backends / older jax may return None from cost_analysis();
+    analyze_compiled must fall back to zeros, not crash on raw.get."""
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    compiled = _compile(lambda a: a @ a, x)
+
+    class NoCosts:
+        def as_text(self):
+            return compiled.as_text()
+
+        def cost_analysis(self):
+            return None
+
+    a = analyze_compiled(NoCosts(), 1)
+    assert a["uncorrected_flops"] == 0.0
+    assert a["uncorrected_bytes"] == 0.0
+    # our own parser-side totals are unaffected by the missing XLA report
+    assert a["flops"] > 0.0
+
+
+def test_op_bytes_weights_while_bodies():
+    """op_bytes attributes per-op output bytes, scan bodies multiplied by
+    their trip counts — the dominant-op signal the diagnosis layer ranks."""
+    w = jax.ShapeDtypeStruct((9, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f_scan(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+        return y
+
+    ob = HloAnalyzer(_compile(f_scan, x, w).as_text(), 1).op_bytes()
+    assert ob, "no op kinds attributed"
+    # bookkeeping ops are excluded from the breakdown
+    for skip in ("parameter", "constant", "get-tuple-element", "tuple", "bitcast"):
+        assert skip not in ob
+    # the 9-trip body's compute ops dominate: at least 9 body outputs' worth
+    body_bytes = sum(v for k, v in ob.items() if k in ("fusion", "dot", "custom-call"))
+    assert body_bytes >= 9 * 64 * 64 * 4

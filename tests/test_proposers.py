@@ -97,3 +97,57 @@ def test_methods_schedule_operator_sequences():
     assert aice.schedule(1) == "translate"
     assert aice.schedule(20) == "optimize"
     assert aice.schedule(44) == "compose"
+
+
+def test_insight_texts_are_bounded():
+    from repro.core.insights import INSIGHT_TEXT_MAX
+
+    store = InsightStore()
+    long = "use a gigantic fused megakernel because " * 40
+    store.add(InsightRecord(text=long))
+    store.add(InsightRecord(text="short"))
+    texts = store.texts()
+    assert all(len(t) <= INSIGHT_TEXT_MAX for t in texts)
+    assert texts[0].endswith("...")
+    assert texts[1] == "short"  # in-budget texts pass through untouched
+
+
+def test_knob_bias_is_regime_aware():
+    store = InsightStore()
+    store.add(InsightRecord(text="a", knob="impl", choice="loop", gain=2.0, regime="memory"))
+    store.add(InsightRecord(text="b", knob="impl", choice="dot_general", gain=3.0, regime="compute"))
+    store.add(InsightRecord(text="c", knob="impl", choice="vmap", gain=1.0))  # untagged
+    # no regime: aggregate over everything (the diagnosis-off behavior)
+    assert set(store.knob_bias()["impl"]) == {"loop", "dot_general", "vmap"}
+    # regime filter keeps only matching records
+    assert set(store.knob_bias(regime="memory")["impl"]) == {"loop"}
+    assert set(store.knob_bias(regime="compute")["impl"]) == {"dot_general"}
+    # unknown regime falls back to the full aggregate rather than nothing
+    assert set(store.knob_bias(regime="unknown")["impl"]) == {"loop", "dot_general", "vmap"}
+
+
+def test_synthetic_uses_parent_regime_bias():
+    """Under use_diagnosis, the proposer conditions knob bias on the
+    parent's bound regime: a strongly-confirmed memory-regime choice wins
+    when the parent is memory-bound, not the compute-regime one."""
+    task = get_task("mm_square_s")
+    store = InsightStore()
+    for _ in range(10):
+        store.add(InsightRecord(text="m", knob="impl", choice="blocked", gain=3.0, regime="memory"))
+        store.add(InsightRecord(text="c", knob="impl", choice="dot_general", gain=3.0, regime="compute"))
+    prop = SyntheticLLM(store)
+    guiding = GuidingConfig(task_context=True, n_historical=2, use_insights=True, use_diagnosis=True)
+    fault = FaultRegime(p_syntax=0.0, p_semantic=0.0, explore=0.0)
+    parent = Solution(source="x", genome=dict(task.naive_genome))
+    parent.compile_ok = parent.correct = True
+    parent.runtime_us = 100.0
+    parent.diagnosis = {"level": "full", "bound": "memory"}
+    rng = np.random.default_rng(3)
+    bundle = build_bundle(guiding, task.task_context(), [parent], store.texts(), "m1")
+    assert bundle.diagnosis == parent.diagnosis
+    picks = {"blocked": 0, "dot_general": 0}
+    for _ in range(300):
+        p = prop.propose(task, "", bundle, guiding, fault, rng)
+        if p.genome and p.genome.get("impl") in picks:
+            picks[p.genome["impl"]] += 1
+    assert picks["blocked"] > picks["dot_general"]

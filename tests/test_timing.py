@@ -222,3 +222,62 @@ def test_evaluator_rejects_roofline_mode():
         Evaluator(EvalConfig(timing_mode="roofline"))
     with pytest.raises(ValueError):
         Evaluator(EvalConfig(timing_mode="vibes"))
+
+
+def test_roofline_ridge_point_straddle():
+    """The compute-vs-memory verdict flips exactly at the machine's ridge
+    intensity: square matmuls read ~3*m^2 bf16 words for 2*m^3 flops, so
+    intensity grows linearly in m and straddles the ridge around
+    m = 3 * ridge."""
+    from repro.diagnosis import classify_bound
+    from repro.evaluation.timing import _peaks
+
+    peak, bw = _peaks()
+    ridge = peak / bw
+
+    def matmul_costs(m):
+        return 2.0 * m**3, 3.0 * m * m * 2.0  # flops, bf16 bytes
+
+    m_ridge = 3.0 * ridge  # intensity(m) = m/3
+    below, above = int(m_ridge * 0.9), int(m_ridge * 1.1)
+    assert classify_bound(*matmul_costs(below)) == "memory"
+    assert classify_bound(*matmul_costs(above)) == "compute"
+    # exactly at the ridge counts as compute (>= is the contract)
+    assert classify_bound(ridge, 1.0, peak, bw) == "compute"
+    assert classify_bound(ridge * (1 - 1e-9), 1.0, peak, bw) == "memory"
+
+
+def test_roofline_model_verdict_tracks_dominant_term():
+    """RooflineTiming's modeled time is max(compute, memory): a tiny-tile
+    matmul genome underfills the MXU (compute-dominated via the util
+    penalty), a big-tile one is bandwidth-dominated — both score feasible,
+    and the modeled times order accordingly."""
+    from repro.evaluation.timing import model_matmul
+
+    small = model_matmul({"block_m": 8, "block_n": 8, "block_k": 8})
+    big = model_matmul({"block_m": 512, "block_n": 512, "block_k": 128})
+    assert small is not None and big is not None
+    t_small, _ = small
+    t_big, _ = big
+    # 8^3 tiles underfill the 128x128 MXU by (8/128)^3: four orders of
+    # magnitude of compute penalty must dominate any bandwidth term
+    assert t_small > 100.0 * t_big
+
+
+def test_roofline_vmem_infeasible_classification():
+    """The VMEM-fit gate is exact at the budget boundary: a genome whose
+    modeled working set equals the budget passes, one byte less fails."""
+    from repro.evaluation.timing import model_matmul
+
+    g = {"block_m": 128, "block_n": 128, "block_k": 128}
+    out = model_matmul(g)
+    assert out is not None
+    _, vmem = out
+    at = RooflineTiming(vmem_budget=int(vmem))
+    under = RooflineTiming(vmem_budget=int(vmem) - 1)
+    m = at.measure(TimingRequest(kernel="matmul", genome=g))
+    assert m is not None and m.vmem_bytes == int(vmem)
+    assert under.measure(TimingRequest(kernel="matmul", genome=g)) is None
+    # a genome that busts the default 64MB budget outright: infeasible
+    huge = {"block_m": 8192, "block_n": 8192, "block_k": 8192}
+    assert RooflineTiming().measure(TimingRequest(kernel="matmul", genome=huge)) is None
