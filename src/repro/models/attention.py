@@ -231,6 +231,45 @@ def decode_attention(
 
 
 # --------------------------------------------------------------------------
+# Chunk-prefill attention (C new tokens vs. a cache slab)
+# --------------------------------------------------------------------------
+def chunk_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    start: jax.Array,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+) -> jax.Array:
+    """Attention for a chunk of C prompt tokens against a cache slab that
+    already contains them (the multi-query generalization of
+    ``decode_attention`` — chunked prefill's inner op).
+
+    q: (B, C, H, D); caches: (B, S, KV, D); start: (B,) absolute position
+    of q[:, 0].  Query i sits at position start + i and attends causally
+    to cache positions <= start + i (optionally windowed).  Cache entries
+    past the chunk (stale/garbage) are masked exactly — they contribute
+    0 probability regardless of value.
+    """
+    b, c, h, dq = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    qg = _gqa_expand(q, kvh)  # (B, C, KV, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32)
+    logits *= _scale(dq)
+    logits = softcap(logits, logit_cap)
+    q_pos = start[:, None] + jnp.arange(c)[None, :]  # (B, C)
+    k_pos = jnp.arange(s)[None, None, :]  # (1, 1, S)
+    valid = k_pos <= q_pos[:, :, None]
+    if window is not None:
+        valid &= q_pos[:, :, None] - k_pos < window
+    logits = jnp.where(valid[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(b, c, h, v_cache.shape[-1])
+
+
+# --------------------------------------------------------------------------
 # Parameter init + module-level wrapper
 # --------------------------------------------------------------------------
 def attention_init(

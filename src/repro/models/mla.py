@@ -147,6 +147,44 @@ def mla_decode(
     return jnp.einsum("bqhk,hkd->bqd", o, params["w_o"].astype(dtype))
 
 
+def mla_chunk_decode(
+    params: dict,
+    x: jax.Array,
+    cache_ckv: jax.Array,
+    cache_krope: jax.Array,
+    cfg: MLAConfig,
+    *,
+    dtype,
+    positions: jax.Array,
+    rope_theta: float,
+    rope_scaling: float,
+) -> jax.Array:
+    """Absorbed attention for a chunk of C prompt tokens (the multi-query
+    generalization of `mla_decode` — chunked prefill's MLA op).
+
+    x: (B, C, D); caches: (B, S, r) / (B, S, dr) with the chunk's own
+    latents already written at ``positions``; positions: (B, C) absolute.
+    Query i attends causally to cache positions <= positions[:, i].
+    """
+    q_nope, q_rope, _, _ = mla_project(
+        params, x, cfg, dtype=dtype, positions=positions,
+        rope_theta=rope_theta, rope_scaling=rope_scaling,
+    )
+    q_latent = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["w_uk"].astype(dtype))
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    logits = (
+        jnp.einsum("bqhr,bsr->bhqs", q_latent, cache_ckv)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, cache_krope)
+    ).astype(jnp.float32) * scale
+    s = cache_ckv.shape[1]
+    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B, C, S)
+    logits = jnp.where(valid[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    o_latent = jnp.einsum("bhqs,bsr->bqhr", probs, cache_ckv)
+    o = jnp.einsum("bqhr,rhk->bqhk", o_latent, params["w_uv"].astype(dtype))
+    return jnp.einsum("bqhk,hkd->bqd", o, params["w_o"].astype(dtype))
+
+
 def mla_new_token_latents(
     params: dict,
     x: jax.Array,

@@ -78,9 +78,18 @@ def _rglru_gates(params: dict, xw: jax.Array, dtype):
     return a, b
 
 
-def rglru_scan(params: dict, xw: jax.Array, *, dtype) -> jax.Array:
-    """Parallel RG-LRU over a full sequence.  xw: (B,S,W) -> (B,S,W)."""
+def rglru_scan(
+    params: dict, xw: jax.Array, *, dtype, h_init: Optional[jax.Array] = None
+) -> jax.Array:
+    """Parallel RG-LRU over a full sequence.  xw: (B,S,W) -> (B,S,W).
+
+    ``h_init`` (B,W) fp32 resumes the recurrence from a carried state
+    (chunked prefill): folding ``a_0 * h_init`` into the first step's b
+    term makes the associative scan compute h_t for the continued
+    sequence exactly."""
     a, b = _rglru_gates(params, xw, dtype)
+    if h_init is not None:
+        b = b.at[:, 0].add(a[:, 0] * h_init.astype(jnp.float32))
 
     def combine(left, right):
         a1, b1 = left
@@ -108,23 +117,44 @@ def rglru_block(
     conv_carry: Optional[jax.Array] = None,
     h_prev: Optional[jax.Array] = None,
     decode: bool = False,
+    valid_len: Optional[jax.Array] = None,
 ):
     """Full Griffin recurrent block.
 
     Train/prefill: returns (out, (conv_carry, h_last)).
     Decode: requires conv_carry + h_prev, returns (out, (conv_carry, h)).
+    Chunked prefill: non-decode with ``h_prev`` resumes the recurrence;
+    ``valid_len`` (B,) marks how many of the chunk's tokens are real —
+    the returned carries are taken at position valid_len-1 so a padded
+    final chunk leaves the same state as an exact-length prefill.
     """
     xc = x.astype(dtype)
     gate = constrain(jax.nn.gelu(xc @ params["w_y"].astype(dtype), approximate=True), "bsf")
-    main = constrain(xc @ params["w_x"].astype(dtype), "bsf")
+    main_in = constrain(xc @ params["w_x"].astype(dtype), "bsf")
+    pre_conv_carry = conv_carry
     main, new_conv_carry = causal_conv1d(
-        main, params["conv_w"], params["conv_b"], carry=conv_carry
+        main_in, params["conv_w"], params["conv_b"], carry=conv_carry
     )
     if decode:
         h_seq, h_last = rglru_step(params, main, h_prev, dtype=dtype)
     else:
-        h_seq = rglru_scan(params, main, dtype=dtype)
+        h_seq = rglru_scan(params, main, dtype=dtype, h_init=h_prev)
         h_last = h_seq[:, -1, :].astype(jnp.float32)
+        if valid_len is not None:
+            assert pre_conv_carry is not None, "valid_len needs a conv carry"
+            h_last = jnp.take_along_axis(
+                h_seq, (valid_len - 1)[:, None, None], axis=1
+            )[:, 0].astype(jnp.float32)
+            # conv carry = the last conv_width-1 *valid* inputs: position p
+            # of the continued stream sits at index p - start + (K-1) of the
+            # padded input, so positions valid_len-(K-1) .. valid_len-1 are
+            # indices valid_len .. valid_len+K-2
+            k = params["conv_w"].shape[0]
+            xp = jnp.concatenate(
+                [pre_conv_carry.astype(main_in.dtype), main_in], axis=1
+            )
+            idx = valid_len[:, None] + jnp.arange(k - 1)[None, :]
+            new_conv_carry = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     out = constrain(
         (gate * h_seq.astype(dtype)) @ params["w_out"].astype(dtype), "btd"
     )
@@ -285,10 +315,17 @@ def rwkv6_block(
     shift_carry: Optional[jax.Array] = None,
     decode: bool = False,
     chunk: int = 64,
+    valid_len: Optional[jax.Array] = None,
 ):
     """Full RWKV6 time-mix block.  x: (B,S,D).
 
     Returns (out, (new_state, new_shift_carry)).
+
+    ``valid_len`` (B,) — chunked prefill with a padded final chunk:
+    positions >= valid_len are made state no-ops (k -> 0, log_w -> 0, so
+    the wkv recurrence neither accumulates nor decays past the last real
+    token) and the shift carry is taken at valid_len-1, leaving exactly
+    the state an exact-length prefill would.
     """
     b, s, d = x.shape
     hd = cfg.rwkv_head_dim
@@ -297,6 +334,10 @@ def rwkv6_block(
     if decode or shift_carry is not None:
         shifted = token_shift(x, last=shift_carry)
     r, k, v, g, log_w = _rwkv6_projections(params, x, dtype=dtype, shifted=shifted)
+    if valid_len is not None and not decode:
+        vmask = jnp.arange(s)[None, :, None] < valid_len[:, None, None]
+        k = jnp.where(vmask, k, 0)
+        log_w = jnp.where(vmask, log_w, 0.0)
     rh, kh, vh, lwh = (_split_heads(t, hd) for t in (r, k, v, log_w))
     if decode:
         out_h, new_state = wkv6_step(rh, kh, vh, lwh, params["bonus_u"], state)
@@ -312,5 +353,8 @@ def rwkv6_block(
     flat = normed.reshape(b, -1, d).astype(dtype)
     flat = flat * params["gn_scale"].astype(dtype) + params["gn_bias"].astype(dtype)
     out = constrain((flat * g) @ params["w_o"].astype(dtype), "btd")
-    new_shift = x[:, -1, :]
+    if valid_len is not None and not decode:
+        new_shift = jnp.take_along_axis(x, (valid_len - 1)[:, None, None], axis=1)[:, 0]
+    else:
+        new_shift = x[:, -1, :]
     return out, (new_state, new_shift)

@@ -672,6 +672,260 @@ def decode_step(
 
 
 # ==========================================================================
+# Chunked prefill.  A prompt is prefilled C tokens at a time against a
+# dense "prefill carry" (one jit shape regardless of prompt length, so a
+# long admission never stalls in-flight decode and never retraces).  The
+# carry is layout-agnostic: the paged serving layer scatters each chunk's
+# global-attention K/V into its page pool separately, and the carry doubles
+# as the prefix-cache snapshot payload (callers must NOT donate it).
+# ==========================================================================
+def prefill_cap(max_len: int, chunk: int) -> int:
+    """Carry slab length: max_len rounded up to a chunk multiple so every
+    fixed-size chunk slice stays in bounds (dynamic_slice must never clamp,
+    or the final chunk's page scatter would read misaligned positions)."""
+    return ((max_len + chunk - 1) // chunk) * chunk
+
+
+def _unit_prefill_spec(
+    cfg: C.ModelConfig, mixer: str, mlp: str, batch: int, cap: int
+) -> dict:
+    dtype = _dtype(cfg)
+    spec: Dict[str, Any] = {}
+    if mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
+        # both attention kinds carry a FULL cap-length slab during prefill —
+        # chunk attention needs arbitrary lookback within the prompt; the
+        # local ring conversion happens once in finish_prefill_carry
+        spec["k"] = jnp.zeros((batch, cap, cfg.num_kv_heads, cfg.head_dim), dtype)
+        spec["v"] = jnp.zeros((batch, cap, cfg.num_kv_heads, cfg.head_dim), dtype)
+    elif mixer == C.MLA_ATTN:
+        spec["ckv"] = jnp.zeros((batch, cap, cfg.mla.kv_lora_rank), dtype)
+        spec["kr"] = jnp.zeros((batch, cap, cfg.mla.qk_rope_head_dim), dtype)
+    elif mixer == C.RGLRU:
+        rc = cfg.recurrent
+        spec["conv"] = jnp.zeros((batch, rc.conv_width - 1, cfg.lru_width), dtype)
+        spec["h"] = jnp.zeros((batch, cfg.lru_width), jnp.float32)
+    elif mixer == C.RWKV6:
+        hd = cfg.recurrent.rwkv_head_dim
+        spec["state"] = jnp.zeros((batch, cfg.d_model // hd, hd, hd), jnp.float32)
+        spec["shift"] = jnp.zeros((batch, cfg.d_model), dtype)
+    if mlp == C.RWKV_CHANNEL_MIX:
+        spec["cmix_shift"] = jnp.zeros((batch, cfg.d_model), dtype)
+    return spec
+
+
+def init_prefill_carry(cfg: C.ModelConfig, batch: int, cap: int) -> dict:
+    """Zero prefill carry (same block/rem structure as the decode cache)."""
+    carry: Dict[str, Any] = {}
+    if cfg.n_blocks > 0:
+        def one_block(_):
+            return {
+                f"u{i}": _unit_prefill_spec(cfg, mixer, mlp, batch, cap)
+                for i, (mixer, mlp) in enumerate(cfg.pattern)
+            }
+        carry["blocks"] = jax.vmap(one_block)(jnp.arange(cfg.n_blocks))
+    if cfg.n_remainder > 0:
+        carry["rem"] = {
+            f"r{i}": _unit_prefill_spec(cfg, *cfg.pattern[i], batch, cap)
+            for i in range(cfg.n_remainder)
+        }
+    return carry
+
+
+def _unit_prefill_chunk(
+    cfg: C.ModelConfig,
+    unit: Tuple[str, str],
+    p: dict,
+    ucache: dict,
+    x: jax.Array,
+    start: jax.Array,
+    valid_len: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    """x: (B, C, D); start: (B,) absolute offset of the chunk; valid_len:
+    (B,) real tokens in it (== C everywhere but a padded final chunk).
+
+    Attention families need no valid_len: padded queries produce garbage
+    outputs (discarded) and garbage K/V beyond the prompt, which causal
+    masking keeps at exactly 0 probability for every real query.  The
+    recurrent families and the cmix shift take their carries at
+    valid_len - 1 so padding is a state no-op.
+    """
+    mixer, mlp = unit
+    dtype = _dtype(cfg)
+    rope_args = (cfg.rope_theta, cfg.rope_scaling)
+    b, c, _ = x.shape
+    positions = start[:, None] + jnp.arange(c)[None, :]  # (B, C)
+    rows = jnp.arange(b)[:, None]
+    new_cache = dict(ucache)
+
+    h = L.rmsnorm(p["norm_mix"], x, eps=cfg.norm_eps)
+    if mixer in (C.GLOBAL_ATTN, C.LOCAL_ATTN):
+        q, k, v = attn.project_qkv(
+            p["mixer"], h, dtype=dtype, rope_args=rope_args, positions=positions
+        )
+        k_cache = ucache["k"].at[rows, positions].set(k.astype(ucache["k"].dtype))
+        v_cache = ucache["v"].at[rows, positions].set(v.astype(ucache["v"].dtype))
+        o = attn.chunk_decode_attention(
+            q, k_cache, v_cache, start=start,
+            window=cfg.window if mixer == C.LOCAL_ATTN else None,
+            logit_cap=cfg.attn_logit_softcap,
+        )
+        mo = attn.attention_out(p["mixer"], o, dtype=dtype)
+        new_cache["k"], new_cache["v"] = k_cache, v_cache
+    elif mixer == C.MLA_ATTN:
+        ckv_new, kr_new = mla_mod.mla_new_token_latents(
+            p["mixer"], h, cfg.mla, dtype=dtype, positions=positions,
+            rope_theta=cfg.rope_theta, rope_scaling=cfg.rope_scaling,
+        )
+        ckv = ucache["ckv"].at[rows, positions].set(ckv_new.astype(ucache["ckv"].dtype))
+        kr = ucache["kr"].at[rows, positions].set(kr_new.astype(ucache["kr"].dtype))
+        mo = mla_mod.mla_chunk_decode(
+            p["mixer"], h, ckv, kr, cfg.mla, dtype=dtype, positions=positions,
+            rope_theta=cfg.rope_theta, rope_scaling=cfg.rope_scaling,
+        )
+        new_cache["ckv"], new_cache["kr"] = ckv, kr
+    elif mixer == C.RGLRU:
+        mo, (conv_c, h_c) = rec.rglru_block(
+            p["mixer"], h, dtype=dtype,
+            conv_carry=ucache["conv"], h_prev=ucache["h"], valid_len=valid_len,
+        )
+        new_cache["conv"] = conv_c.astype(ucache["conv"].dtype)
+        new_cache["h"] = h_c
+    elif mixer == C.RWKV6:
+        mo, (state, shift) = rec.rwkv6_block(
+            p["mixer"], h, cfg.recurrent, dtype=dtype,
+            state=ucache["state"], shift_carry=ucache["shift"], valid_len=valid_len,
+        )
+        new_cache["state"] = state
+        new_cache["shift"] = shift.astype(ucache["shift"].dtype)
+    else:
+        raise ValueError(mixer)
+    if cfg.use_post_norms:
+        mo = L.rmsnorm(p["post_norm_mix"], mo, eps=cfg.norm_eps)
+    x = x + mo
+
+    h = L.rmsnorm(p["norm_mlp"], x, eps=cfg.norm_eps)
+    if mlp == C.RWKV_CHANNEL_MIX:
+        shifted = L.token_shift(h, last=ucache["cmix_shift"])
+        mo = L.rwkv_cmix(p["mlp"], h, dtype=dtype, shifted=shifted)
+        new_cache["cmix_shift"] = jnp.take_along_axis(
+            h, (valid_len - 1)[:, None, None], axis=1
+        )[:, 0].astype(ucache["cmix_shift"].dtype)
+    else:
+        mo, _ = _mlp_apply(cfg, mlp, p["mlp"], h)
+    if cfg.use_post_norms:
+        mo = L.rmsnorm(p["post_norm_mlp"], mo, eps=cfg.norm_eps)
+    return x + mo, new_cache
+
+
+def prefill_chunk(
+    cfg: C.ModelConfig,
+    params: dict,
+    carry: dict,
+    tokens: jax.Array,
+    start: jax.Array,
+    length: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    """One fixed-size prefill step.  tokens: (B, C) int32 (right-padded past
+    ``length``); start: (B,) absolute offset of the chunk; length: (B,)
+    valid tokens in it.  Returns (logits (B, C, V), new_carry).
+
+    Callers must NOT donate the carry: prefix-cache snapshots hold
+    zero-copy references to the returned arrays.
+    """
+    dtype = _dtype(cfg)
+    x = L.embed_lookup(params["embed"], tokens, dtype=dtype, scale=cfg.scale_embeddings)
+    new_carry: Dict[str, Any] = {}
+    if cfg.n_blocks > 0:
+        def block_fn(carry_, inp):
+            h, blocks_cache = carry_
+            li, bp = inp
+            bc = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
+                blocks_cache,
+            )
+            nbc = {}
+            for i, unit in enumerate(cfg.pattern):
+                h, nbc[f"u{i}"] = _unit_prefill_chunk(
+                    cfg, unit, bp[f"u{i}"], bc[f"u{i}"], h, start, length
+                )
+            blocks_cache = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), li, 0
+                ),
+                blocks_cache,
+                nbc,
+            )
+            return (h, blocks_cache), None
+
+        (x, new_carry["blocks"]), _ = jax.lax.scan(
+            block_fn,
+            (x, carry["blocks"]),
+            (jnp.arange(cfg.n_blocks), params["blocks"]),
+        )
+    if cfg.n_remainder > 0:
+        new_carry["rem"] = {}
+        for i in range(cfg.n_remainder):
+            x, nc = _unit_prefill_chunk(
+                cfg, cfg.pattern[i], params["rem"][f"r{i}"],
+                carry["rem"][f"r{i}"], x, start, length,
+            )
+            new_carry["rem"][f"r{i}"] = nc
+
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.unembed(
+        params["embed"], x, dtype=dtype,
+        num_codebooks=cfg.num_codebooks, head=params.get("lm_head"),
+    )
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits, new_carry
+
+
+def finish_prefill_carry(
+    cfg: C.ModelConfig, carry: dict, length: jax.Array, max_len: int
+) -> dict:
+    """Fold a finished prefill carry into the shape the decode-cache insert
+    expects: global/MLA slabs statically sliced to max_len, local-attention
+    slabs gathered into the decode ring convention (ring slot j holds the
+    newest token with position % s_cache == j), recurrent state passed
+    through.  length: (B,) prompt lengths."""
+
+    def unit_fix(mixer: str, uc: dict) -> dict:
+        out = dict(uc)
+        if mixer == C.LOCAL_ATTN:
+            s_cache = min(max_len, cfg.window)
+            idx = (jnp.arange(s_cache)[None, :] - length[:, None]) % s_cache + (
+                length[:, None] - s_cache
+            )
+            # slots not yet reached by short prompts hold arbitrary values;
+            # decode writes each before its first attend (lengths mask)
+            idx = jnp.maximum(idx, 0)
+            out["k"] = jnp.take_along_axis(uc["k"], idx[:, :, None, None], axis=1)
+            out["v"] = jnp.take_along_axis(uc["v"], idx[:, :, None, None], axis=1)
+        elif mixer == C.GLOBAL_ATTN:
+            out["k"] = uc["k"][:, :max_len]
+            out["v"] = uc["v"][:, :max_len]
+        elif mixer == C.MLA_ATTN:
+            out["ckv"] = uc["ckv"][:, :max_len]
+            out["kr"] = uc["kr"][:, :max_len]
+        return out
+
+    fixed: Dict[str, Any] = {}
+    if cfg.n_blocks > 0:
+        fixed["blocks"] = {
+            f"u{i}": jax.vmap(lambda uc, m=mixer: unit_fix(m, uc))(
+                carry["blocks"][f"u{i}"]
+            )
+            for i, (mixer, _mlp) in enumerate(cfg.pattern)
+        }
+    if cfg.n_remainder > 0:
+        fixed["rem"] = {
+            f"r{i}": unit_fix(cfg.pattern[i][0], carry["rem"][f"r{i}"])
+            for i in range(cfg.n_remainder)
+        }
+    return fixed
+
+
+# ==========================================================================
 # Namespace object
 # ==========================================================================
 @dataclasses.dataclass(frozen=True)

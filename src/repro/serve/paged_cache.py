@@ -1,4 +1,4 @@
-"""Paged KV cache bookkeeping: free-list allocator + per-slot block tables.
+"""Paged KV cache bookkeeping: refcounted allocator, block tables, prefix cache.
 
 The device side of paging lives in `models/transformer.py` (pool-shaped
 cache leaves) and `kernels/flash_decode.py` (the attention kernel); this
@@ -18,16 +18,28 @@ Conventions:
   live sequence's memory.
 * ``alloc`` hands out the lowest free page id (heap-ordered) —
   deterministic under any completion order.
+* Pages are **refcounted**: ``alloc`` grants a page at refcount 1,
+  ``share`` increments (a second owner — another slot's block table, or
+  the prefix index), ``free`` decrements and only the last owner returns
+  the page to the free heap.  A page with refcount >= 2 is *shared* and
+  by convention immutable (only full, finalized prefix pages are ever
+  shared).
 * Alloc-on-write: `ensure(slot, pos)` grows a slot's table just-in-time
-  when decode crosses a page boundary; `release(slot)` returns every
-  page on eos/retirement.
+  when decode crosses a page boundary; `release(slot)` decrefs every
+  page on eos/retirement — shared prefix pages survive a peer's eos.
+* `PrefixIndex` is the radix-style prefix cache over the pool: a chain
+  of full-page token blocks, each mapping the *exact* token bytes of the
+  prompt prefix up to that block boundary to the physical page holding
+  its K/V (exact-match chaining — no hash collisions to reason about at
+  this scale).  ``admit``-time matching turns a repeated system-prompt
+  prefill into a block-table copy plus a suffix-only prefill.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Set
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -46,15 +58,38 @@ def required_pages(slots: int, max_len: int, page_size: int) -> int:
     return 1 + slots * pages_for(max_len, page_size)
 
 
-class PageAllocator:
-    """Lowest-id-first free-list allocator over ``num_pages`` pages.
+class PageOverflowError(RuntimeError):
+    """A sequence asked for a cache position past its table's horizon.
 
-    Tracks the held set alongside the free heap so grant/return bugs fail
-    at the faulty call instead of corrupting a live sequence's memory:
-    allocating a page that is already held (double-grant) or freeing one
-    that isn't (double-free / foreign page) raises immediately, and
-    ``held + available == capacity`` is a checkable invariant at every
-    point (the serving fleet's paged_cache fuzz leans on it)."""
+    Raised (never assert'ed — it must fire under ``python -O`` too) by
+    `BlockTables.ensure`/`admit` when a request would need more pages
+    than ``max_pages``.  The scheduler catches it and retires the one
+    malformed request with ``status="error"`` instead of letting a bad
+    length crash every co-scheduled stream.
+    """
+
+    def __init__(self, slot: int, pos: int, max_len: int):
+        self.slot = slot
+        self.pos = pos
+        self.max_len = max_len
+        super().__init__(
+            f"slot {slot}: cache position {pos} is past the decode horizon "
+            f"(max_len={max_len}) — request length was not validated"
+        )
+
+
+class PageAllocator:
+    """Lowest-id-first refcounted allocator over ``num_pages`` pages.
+
+    Tracks per-page refcounts alongside the free heap so grant/return
+    bugs fail at the faulty call instead of corrupting a live sequence's
+    memory: allocating a page that is already held (double-grant),
+    sharing one that isn't held, or freeing past refcount zero
+    (double-free / foreign page) raises immediately.  Checkable
+    invariants at every point (the serving fleet's paged_cache fuzz
+    leans on them): ``held + available == capacity`` and
+    ``sum(refcounts of held pages) >= held`` (every held page has at
+    least one owner)."""
 
     def __init__(self, num_pages: int):
         if num_pages < 2:
@@ -62,7 +97,7 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: List[int] = list(range(1, num_pages))  # 0 = null page
         heapq.heapify(self._free)
-        self._held: Set[int] = set()
+        self._ref: Dict[int, int] = {}  # page -> refcount (held pages only)
 
     @property
     def available(self) -> int:
@@ -70,14 +105,22 @@ class PageAllocator:
 
     @property
     def held(self) -> int:
-        """Pages currently granted and not yet returned."""
-        return len(self._held)
+        """Distinct pages currently granted and not yet fully returned."""
+        return len(self._ref)
+
+    @property
+    def total_refs(self) -> int:
+        """Sum of refcounts across held pages (>= held)."""
+        return sum(self._ref.values())
 
     @property
     def capacity(self) -> int:
         """Allocatable pages (the pool minus the reserved null page) —
         the ceiling admission backpressure checks a prompt against."""
         return self.num_pages - 1
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
@@ -87,21 +130,150 @@ class PageAllocator:
             )
         pages = [heapq.heappop(self._free) for _ in range(n)]
         for p in pages:
-            if p == NULL_PAGE or p in self._held:
+            if p == NULL_PAGE or p in self._ref:
                 raise RuntimeError(f"allocator double-granted page {p}")
-        self._held.update(pages)
+            self._ref[p] = 1
         return pages
 
-    def free(self, pages: List[int]) -> None:
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one owner to each page (prefix reuse).  Only held pages
+        can gain owners — sharing a free or null page is a bug."""
+        for p in pages:
+            if p == NULL_PAGE:
+                raise RuntimeError("sharing the null page")
+            if p not in self._ref:
+                raise RuntimeError(f"sharing page {p} that is not held")
+        for p in pages:
+            self._ref[p] += 1
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Drop one owner per page; the last owner returns it to the pool."""
         for p in pages:
             if p == NULL_PAGE:
                 raise RuntimeError("freeing the null page")
-            if p not in self._held:
+            if p not in self._ref:
                 raise RuntimeError(
                     f"freeing page {p} that is not held (double-free?)"
                 )
-            self._held.discard(p)
-            heapq.heappush(self._free, p)
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                heapq.heappush(self._free, p)
+
+
+# --------------------------------------------------------------------------
+# Prefix cache: exact-match chain of full-page token blocks
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class PrefixNode:
+    """One cached full-page block: the page holding K/V for tokens
+    ``[depth*page_size, (depth+1)*page_size)`` of every prompt whose
+    prefix bytes match ``key``.  ``payload`` is an opaque engine-owned
+    snapshot of non-paged model state at the block boundary (the chunked
+    prefill carry) — what lets a suffix-only prefill resume mid-prompt
+    for cache families that keep state outside the page pool (local-ring
+    K/V, MLA latents, recurrent states)."""
+
+    key: bytes
+    depth: int  # block index: this node covers tokens [depth*ps, (depth+1)*ps)
+    page: int
+    payload: Any = None
+
+
+class PrefixIndex:
+    """Radix-style prefix cache over a `PageAllocator`'s page pool.
+
+    Keys are the exact bytes of the token prefix up to each full-page
+    boundary, chained: block *i* of a prompt is cached under
+    ``tokens[:(i+1)*page_size].tobytes()``.  ``match`` walks the chain
+    from the root and returns the longest run of cached blocks;
+    ``insert`` registers a freshly prefilled block and increfs its page
+    (the index is an owner, so cached pages survive the prefilling
+    slot's retirement); ``evict`` drops index-only pages (refcount 1 —
+    no slot is using them) deepest-first under pool pressure.
+    """
+
+    def __init__(self, page_size: int, allocator: PageAllocator):
+        self.page_size = page_size
+        self.allocator = allocator
+        self._nodes: Dict[bytes, PrefixNode] = {}
+        self.queries = 0
+        self.hits = 0
+        self.hit_tokens = 0
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def _key(self, tokens: np.ndarray, depth: int) -> bytes:
+        return np.ascontiguousarray(
+            tokens[: (depth + 1) * self.page_size], dtype=np.int32
+        ).tobytes()
+
+    def match(self, tokens: np.ndarray, *, max_blocks: Optional[int] = None
+              ) -> List[PrefixNode]:
+        """Longest chain of cached full-page blocks prefixing `tokens`,
+        capped at ``max_blocks`` (admission must leave at least the last
+        prompt token to prefill, so it can sample the first output)."""
+        self.queries += 1
+        limit = len(tokens) // self.page_size
+        if max_blocks is not None:
+            limit = min(limit, max_blocks)
+        chain: List[PrefixNode] = []
+        for depth in range(limit):
+            node = self._nodes.get(self._key(tokens, depth))
+            if node is None:
+                break
+            chain.append(node)
+        if chain:
+            self.hits += 1
+            self.hit_tokens += len(chain) * self.page_size
+        return chain
+
+    def insert(self, tokens: np.ndarray, depth: int, page: int,
+               payload: Any = None) -> bool:
+        """Register block `depth` of `tokens` as cached in `page`.
+        Increfs the page (the index becomes an owner).  Returns False
+        when the block is already cached (a racing identical prompt
+        prefilled it privately) — the caller keeps its private page."""
+        key = self._key(tokens, depth)
+        if key in self._nodes:
+            return False
+        self.allocator.share([page])
+        self._nodes[key] = PrefixNode(key, depth, page, payload)
+        return True
+
+    def evict(self, n_pages: int, *, keep: Iterable[int] = ()) -> int:
+        """Free up to ``n_pages`` pages held only by the index
+        (refcount 1), deepest blocks first so chains break from the leaf
+        end.  ``keep`` pins pages about to be shared by an in-flight
+        admission.  Returns the number of pages returned to the pool."""
+        if n_pages <= 0:
+            return 0
+        pinned = set(keep)
+        freed = 0
+        for key, node in sorted(
+            self._nodes.items(), key=lambda kv: -kv[1].depth
+        ):
+            if freed >= n_pages:
+                break
+            if node.page in pinned:
+                continue
+            if self.allocator.refcount(node.page) == 1:
+                self.allocator.free([node.page])
+                del self._nodes[key]
+                freed += 1
+        return freed
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "prefix_queries": self.queries,
+            "prefix_hits": self.hits,
+            "prefix_hit_tokens": self.hit_tokens,
+            "prefix_hit_rate": round(self.hits / self.queries, 4)
+            if self.queries else 0.0,
+            "prefix_blocks_cached": len(self._nodes),
+        }
 
 
 @dataclasses.dataclass
@@ -110,7 +282,10 @@ class BlockTables:
 
     ``table`` is the (slots, max_pages) int32 host mirror handed to the
     device each step (empty entries = NULL_PAGE); ``owned[slot]`` lists
-    the pages a slot holds, in position order.
+    the pages a slot holds, in position order.  A slot's leading pages
+    may be *shared* (prefix-cache hits, refcount >= 2): `release`
+    decrefs rather than frees, so a peer slot (or the prefix index)
+    keeps them alive.
     """
 
     slots: int
@@ -122,27 +297,52 @@ class BlockTables:
         self.max_pages = pages_for(self.max_len, self.page_size)
         self.table = np.zeros((self.slots, self.max_pages), np.int32)
         self.owned: List[List[int]] = [[] for _ in range(self.slots)]
+        # leading pages of `owned[slot]` that were admitted shared (their
+        # content is immutable — the suffix prefill must not write them)
+        self.shared_prefix: List[int] = [0] * self.slots
 
     @classmethod
     def with_pool(cls, slots: int, max_len: int, page_size: int,
                   num_pages: int) -> "BlockTables":
         return cls(slots, max_len, page_size, PageAllocator(num_pages))
 
-    def admit(self, slot: int, prompt_len: int) -> List[int]:
+    def admit(self, slot: int, prompt_len: int,
+              shared: Sequence[int] = (),
+              cover_tokens: Optional[int] = None) -> List[int]:
         """Allocate pages covering a prompt of `prompt_len` tokens plus
-        the first decode write (position `prompt_len`)."""
+        the first decode write (position `prompt_len`).
+
+        ``shared`` — leading pages already holding this prompt's prefix
+        (from `PrefixIndex.match`); they are incref'd, not re-allocated.
+        ``cover_tokens`` — widen the covered span (chunked prefill
+        scatters whole fixed-size chunks, so the admission must own the
+        pages under the final, partially-valid chunk too).
+        """
         assert not self.owned[slot], f"slot {slot} not released"
-        n = pages_for(prompt_len + 1, self.page_size)
-        pages = self.allocator.alloc(n)
+        cover = max(prompt_len + 1, cover_tokens or 0)
+        n = pages_for(cover, self.page_size)
+        if n > self.max_pages:
+            raise PageOverflowError(slot, cover - 1, self.max_len)
+        if len(shared) > n:
+            raise RuntimeError(
+                f"slot {slot}: {len(shared)} shared prefix pages exceed the "
+                f"{n} pages the prompt needs"
+            )
+        own = self.allocator.alloc(n - len(shared))
+        self.allocator.share(shared)
+        pages = list(shared) + own
         self.owned[slot] = pages
+        self.shared_prefix[slot] = len(shared)
         self.table[slot, :n] = pages
         return pages
 
     def ensure(self, slot: int, pos: int) -> bool:
         """Alloc-on-write: make sure position `pos` has a page.  Returns
-        True when the table changed (the device copy is stale)."""
+        True when the table changed (the device copy is stale).  Raises
+        `PageOverflowError` (typed, -O-safe) past the horizon."""
         needed = pos // self.page_size + 1
-        assert needed <= self.max_pages, (pos, self.max_len)
+        if needed > self.max_pages:
+            raise PageOverflowError(slot, pos, self.max_len)
         grew = False
         while len(self.owned[slot]) < needed:
             (page,) = self.allocator.alloc(1)
@@ -152,12 +352,18 @@ class BlockTables:
         return grew
 
     def release(self, slot: int) -> None:
-        """Return a finished slot's pages to the pool (eos/retirement)."""
+        """Drop a finished slot's ownership (eos/retirement): decref all
+        pages; unshared ones return to the pool, shared prefix pages
+        survive for their other owners."""
         if self.owned[slot]:
             self.allocator.free(self.owned[slot])
         self.owned[slot] = []
+        self.shared_prefix[slot] = 0
         self.table[slot, :] = NULL_PAGE
 
     @property
     def pages_in_use(self) -> int:
+        """Distinct pages referenced by live slots (shared pages counted
+        once per owning slot — the *logical* footprint; the allocator's
+        ``held`` is the physical one)."""
         return sum(len(p) for p in self.owned)

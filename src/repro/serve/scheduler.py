@@ -6,16 +6,28 @@ the next batch cannot start until then.  This scheduler instead treats
 the batch as ``slots`` independent lanes:
 
 * **Admission queue** — requests wait in arrival order; whenever a slot
-  is free (at startup or after a retirement) the next request is
-  prefilled (batch-of-1, exact prompt length — no padding) and its cache
-  is scattered into the slot.
-* **Prefill/decode interleaving** — admissions happen at sync points
-  between decode windows, so prefills and decode steps share the device
-  serially, and the decode hot loop itself stays free of host syncs.
+  is free (at startup or after a retirement) the next request starts
+  prefilling into the slot.
+* **Chunked prefill** — prompts prefill ``prefill_chunk_tokens`` at a
+  time against a fixed-shape batch-1 carry, one chunk per pending
+  request per decode window.  A long admission therefore never stalls
+  in-flight streams, and the jit cache holds exactly one prefill shape
+  (the old exact-length prefill retraced per distinct prompt length).
+  The final, partially-valid chunk is padded and masked exactly: padded
+  positions contribute 0 attention probability and are state no-ops for
+  the recurrent families (`models/transformer.py prefill_chunk`).
+* **Radix prefix cache** (paged layout) — full, finalized prompt pages
+  are registered in a `PrefixIndex` keyed by exact token bytes, with the
+  prefill carry snapshotted at chunk boundaries.  A repeated
+  system-prompt admission becomes a block-table copy (the shared pages
+  are incref'd, never rewritten) plus a suffix-only prefill resumed from
+  the snapshot.  Cache-hit streams are bit-identical to cold ones: the
+  snapshot is exactly what the same jitted chunk computed for the donor.
 * **Slot recycling** — a sequence that hits eos or its token budget is
   frozen device-side by the ``done`` mask (it emits pad and stops
-  advancing), retired at the next sync, its pages freed, and its slot
-  handed to the admission queue — no whole-batch stall.
+  advancing), retired at the next sync, its pages decref'd (shared
+  prefix pages survive for their other owners), and its slot handed to
+  the admission queue — no whole-batch stall.
 * **Device-side stop handling** — the eos reduction lives in the jitted
   step; the host looks at ``done``/``gen`` only every ``sync_interval``
   steps.  A finished slot therefore idles for at most
@@ -27,9 +39,9 @@ pool (`repro.serve.paged_cache` block tables + the
 `kernels/flash_decode.py` kernel); ``"dense"`` keeps per-slot dense
 slabs with the same scheduling (the ablation arm of
 `benchmarks/serve_throughput.py`).  With greedy sampling both layouts
-produce token streams identical to the fixed-batch engine — per-request
-decode is batching-invariant — which is the scheduler's correctness
-gate in tests/test_serve_paged.py.
+produce identical token streams — they share the same chunked-prefill
+computation bit for bit, and per-request decode is batching-invariant —
+which is the scheduler's correctness gate in tests/test_serve_paged.py.
 
 **Graceful degradation** (the serving fleet's requirements, usable
 standalone):
@@ -41,6 +53,11 @@ standalone):
   retryable ``status="shed"`` (or terminal ``"error"`` when the request
   could never fit) instead of raising, so one oversized request cannot
   take down the worker's other streams.
+* *Malformed-request containment* — request validation happens at
+  admission, not as a bare assert: an over-length or empty request
+  retires with ``status="error"`` (and `BlockTables` raises the typed
+  `PageOverflowError`, live under ``python -O``) instead of crashing
+  co-scheduled streams.
 * *Non-finite-logit detection* — the jitted step flags rows whose logits
   went NaN/inf; at the next sync the poisoned slot is retired with
   ``status="error"`` and the garbage token is dropped, instead of
@@ -59,16 +76,30 @@ import collections
 import dataclasses
 import functools
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import config as C
-from repro.models.transformer import decode_step, forward, init_cache
+from repro.models.transformer import (
+    decode_step,
+    finish_prefill_carry,
+    init_cache,
+    init_prefill_carry,
+    prefill_cap,
+    prefill_chunk,
+)
 from repro.serve.engine import sample_tokens
-from repro.serve.paged_cache import BlockTables, pages_for, required_pages
+from repro.serve.paged_cache import (
+    NULL_PAGE,
+    BlockTables,
+    PageOverflowError,
+    PrefixIndex,
+    pages_for,
+    required_pages,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,8 +114,8 @@ class Completion:
     uid: int
     prompt_len: int
     tokens: List[int]  # generated tokens, eos included when hit
-    # "ok" | "error" (terminal: poisoned logits / impossible admission) |
-    # "shed" (retryable: admission starved past its deadline) |
+    # "ok" | "error" (terminal: poisoned logits / malformed or impossible
+    # admission) | "shed" (retryable: admission starved past its deadline) |
     # "cancelled" (caller's should_cancel — e.g. a lost lease)
     status: str = "ok"
     error: Optional[str] = None
@@ -143,6 +174,24 @@ class _SlotState:
     max_new: int
 
 
+@dataclasses.dataclass
+class _PendingPrefill:
+    """A request mid-prefill: owns its slot (and pages) but is not yet
+    decoding.  ``carry`` is the batch-1 chunked-prefill state;
+    ``snapshots`` keeps (page_depth, carry) at full-chunk boundaries for
+    the prefix index."""
+
+    req: Request
+    prompt: np.ndarray  # int32
+    carry: Any
+    next_start: int  # first token position the next chunk will prefill
+    pages: List[int]  # paged layout: all pages the slot owns, position order
+    shared_tokens: int  # leading tokens satisfied by the prefix cache
+    snapshots: List[Tuple[int, Any]] = dataclasses.field(default_factory=list)
+    last_logits: Any = None  # (1, C, V) logits of the most recent chunk
+    last_start: int = 0
+
+
 # --------------------------------------------------------------------------
 # cache insertion: scatter one prefilled request into a batch slot
 # --------------------------------------------------------------------------
@@ -181,7 +230,11 @@ def _insert_unit(dst: dict, src: dict, slot, pages, stacked):
     out = {}
     for key, leaf in dst.items():
         if key in ("k_pages", "v_pages"):
-            out[key] = _scatter_pages(leaf, src[key[0]], pages, stacked)
+            # empty pages = the chunked prefill already scattered this
+            # unit's K/V page by page; nothing to insert at finalize
+            out[key] = leaf if pages.shape[0] == 0 else _scatter_pages(
+                leaf, src[key[0]], pages, stacked
+            )
         else:
             out[key] = _set_row(leaf, src[key], slot, stacked)
     return out
@@ -202,6 +255,52 @@ def _insert_prefill(cache: dict, pre: dict, slot, pages):
     return out
 
 
+def _scatter_chunk_unit(dst: dict, src: dict, start, pages, stacked, chunk):
+    """Write positions [start, start+chunk) of a batch-1 prefill carry's
+    global-attention slab into its pages.  Other leaves pass through —
+    they are inserted once at finalize.  ``pages`` may contain NULL_PAGE
+    for positions past the table horizon (padded final chunk): that
+    garbage lands in the null page, which no live sequence ever reads —
+    the same convention as parked dead slots."""
+    if "k_pages" not in dst:
+        return dst
+    out = dict(dst)
+    for pk, sk in (("k_pages", "k"), ("v_pages", "v")):
+        pool, slab = dst[pk], src[sk]
+        ps = pool.shape[-2]
+        n = chunk // ps
+        if stacked:
+            nl, _, _, kv, d = slab.shape
+            r = jax.lax.dynamic_slice_in_dim(slab, start, chunk, axis=2)
+            r = r[:, 0].reshape(nl, n, ps, kv, d).transpose(0, 3, 1, 2, 4)
+            out[pk] = pool.at[:, :, pages].set(r.astype(pool.dtype))
+        else:
+            _, _, kv, d = slab.shape
+            r = jax.lax.dynamic_slice_in_dim(slab, start, chunk, axis=1)
+            r = r[0].reshape(n, ps, kv, d).transpose(2, 0, 1, 3)
+            out[pk] = pool.at[:, pages].set(r.astype(pool.dtype))
+    return out
+
+
+def _scatter_chunk_pages(cache: dict, pre: dict, start, pages, *, chunk: int):
+    out: Dict[str, Any] = {}
+    if "blocks" in cache:
+        out["blocks"] = {
+            uk: _scatter_chunk_unit(
+                cache["blocks"][uk], pre["blocks"][uk], start, pages, True, chunk
+            )
+            for uk in cache["blocks"]
+        }
+    if "rem" in cache:
+        out["rem"] = {
+            rk: _scatter_chunk_unit(
+                cache["rem"][rk], pre["rem"][rk], start, pages, False, chunk
+            )
+            for rk in cache["rem"]
+        }
+    return out
+
+
 # --------------------------------------------------------------------------
 # engine
 # --------------------------------------------------------------------------
@@ -209,13 +308,16 @@ class ContinuousBatchingEngine:
     """Continuous-batching generation over a request queue.
 
     Restrictions vs the research model surface: text-only
-    (``num_codebooks == 1``, no prefix embeds), and every request must
-    satisfy ``prompt_len + max_new_tokens <= max_len``.
+    (``num_codebooks == 1``, no prefix embeds).  A request violating
+    ``1 <= prompt_len`` / ``max_new_tokens >= 1`` /
+    ``prompt_len + max_new_tokens <= max_len`` retires with
+    ``status="error"`` at admission; it never reaches the device.
 
     `run(requests)` is self-resetting — the engine (and its compiled
-    steps) can be reused across runs; prefill/insert functions retrace
-    per distinct prompt length, so traces amortize across requests and
-    runs.
+    steps) can be reused across runs.  The prefix cache is per-run
+    (every run measures from a cold cache); compiled chunk/insert/step
+    functions amortize across requests and runs, with exactly one
+    prefill trace regardless of prompt lengths.
     """
 
     def __init__(
@@ -228,6 +330,8 @@ class ContinuousBatchingEngine:
         cache_layout: str = "paged",
         page_size: Optional[int] = None,
         num_pages: Optional[int] = None,
+        prefill_chunk_tokens: Optional[int] = None,
+        prefix_cache: bool = True,
         temperature: float = 0.0,
         eos_id: Optional[int] = None,
         pad_id: int = 0,
@@ -257,6 +361,13 @@ class ContinuousBatchingEngine:
                 num_pages = required_pages(slots, max_len, page_size) + slots
         self.page_size = page_size
         self.num_pages = num_pages
+        # chunk size: a fixed multiple of the page size so every chunk
+        # boundary is a page boundary (prefix matches resume on chunks)
+        chunk = prefill_chunk_tokens or 4 * (page_size or 4)
+        if cache_layout == "paged":
+            chunk = -(-chunk // page_size) * page_size
+        self.prefill_chunk_tokens = int(chunk)
+        self.prefix_cache = bool(prefix_cache) and cache_layout == "paged"
         self.temperature = temperature
         self.eos_id = eos_id
         self.pad_id = pad_id
@@ -269,10 +380,25 @@ class ContinuousBatchingEngine:
         self._clock = clock
         self.stats: Dict[str, Any] = {}
 
-        self._prefill = jax.jit(
-            lambda p, t: forward(cfg, p, t, return_cache=True, last_only=True)
+        cap = prefill_cap(max_len, self.prefill_chunk_tokens)
+        # zero carry template: chunk steps never donate their carry (the
+        # prefix index snapshots alias it), so one template serves every
+        # admission
+        self._carry0 = init_prefill_carry(cfg, 1, cap)
+        self._pchunk = jax.jit(
+            lambda p, c, t, s, ln: prefill_chunk(cfg, p, c, t, s, ln)
+        )
+        self._finish = jax.jit(
+            lambda c, ln: finish_prefill_carry(cfg, c, ln, max_len)
         )
         self._insert = jax.jit(_insert_prefill, donate_argnums=(0,))
+        if cache_layout == "paged":
+            self._scatter = jax.jit(
+                functools.partial(
+                    _scatter_chunk_pages, chunk=self.prefill_chunk_tokens
+                ),
+                donate_argnums=(0,),
+            )
         self._step = self._make_step()
 
     # -- jitted decode step ------------------------------------------------
@@ -326,26 +452,29 @@ class ContinuousBatchingEngine:
     ) -> List[Completion]:
         hooks = hooks or EngineHooks()
         cfg, b = self.cfg, self.slots
-        for r in requests:
-            assert len(r.prompt) + r.max_new_tokens <= self.max_len, (
-                r.uid, len(r.prompt), r.max_new_tokens, self.max_len
-            )
-            assert r.max_new_tokens >= 1, r.uid
+        chunk = self.prefill_chunk_tokens
 
         paged = self.cache_layout == "paged"
         if paged:
             tables = BlockTables.with_pool(
                 b, self.max_len, self.page_size, self.num_pages
             )
+            index = (
+                PrefixIndex(self.page_size, tables.allocator)
+                if self.prefix_cache else None
+            )
             cache = init_cache(
                 cfg, b, self.max_len, layout="paged",
                 num_pages=self.num_pages, page_size=self.page_size,
             )
             bt_dev = jnp.asarray(tables.table)
+            horizon = tables.max_pages * self.page_size
         else:
             tables = None
+            index = None
             cache = init_cache(cfg, b, self.max_len)
             bt_dev = jnp.zeros((b, 1), jnp.int32)  # unused placeholder
+            horizon = prefill_cap(self.max_len, chunk)
 
         pos = jnp.zeros((b,), jnp.int32)
         done = jnp.ones((b,), bool)  # empty slots are frozen
@@ -356,6 +485,7 @@ class ContinuousBatchingEngine:
 
         queue = collections.deque(requests)
         active: List[Optional[_SlotState]] = [None] * b
+        pending: Dict[int, _PendingPrefill] = {}
         free = list(range(b - 1, -1, -1))  # pop() yields lowest slot first
         results: Dict[int, List[int]] = {}
         comps: Dict[int, Completion] = {}
@@ -363,7 +493,7 @@ class ContinuousBatchingEngine:
         prompt_lens = {r.uid: len(r.prompt) for r in requests}
         pos_h = np.zeros(b, np.int64)  # optimistic host mirror of pos
         gen_prev = np.zeros(b, np.int64)
-        decode_steps = prefills = 0
+        decode_steps = prefills = prefill_chunks = 0
         peak_pages = shed = cancelled = errors = 0
         wait_uid: Optional[int] = None  # head-of-queue starvation tracking
         wait_t0 = 0.0
@@ -394,6 +524,9 @@ class ContinuousBatchingEngine:
         def cancel_requested(uid: int) -> bool:
             return hooks.should_cancel is not None and hooks.should_cancel(uid)
 
+        def has_active() -> bool:
+            return any(s is not None for s in active)
+
         def starve(req: Request, reason: str, need: int, avail: int,
                    waited: float) -> None:
             """A request admission cannot satisfy: raise, or shed it with a
@@ -404,29 +537,74 @@ class ContinuousBatchingEngine:
             queue.popleft()
             finish(req.uid, "error" if reason == "impossible" else "shed", str(err))
 
-        def admit(slot: int, req: Request) -> None:
-            nonlocal cache, pos, done, gen, max_new, uids, cur, bt_dev, prefills
-            prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
-            s0 = prompt.shape[1]
-            last, _, pre = self._prefill(self.params, prompt)
+        def validate(req: Request) -> Optional[str]:
+            pl = len(req.prompt)
+            if pl < 1:
+                return f"request {req.uid}: empty prompt"
+            if req.max_new_tokens < 1:
+                return (f"request {req.uid}: max_new_tokens "
+                        f"{req.max_new_tokens} < 1")
+            if pl + req.max_new_tokens > self.max_len:
+                return (f"request {req.uid}: prompt_len {pl} + max_new_tokens "
+                        f"{req.max_new_tokens} exceeds max_len {self.max_len}")
+            return None
+
+        def release_slot(slot: int) -> None:
+            if paged:
+                tables.release(slot)
+            free.append(slot)
+            free.sort(reverse=True)
+
+        def admit(slot: int, req: Request, m_tok: int,
+                  shared_pages: List[int], carry0: Any,
+                  cover: Optional[int]) -> None:
+            nonlocal bt_dev, prefills
+            prompt = np.ascontiguousarray(np.asarray(req.prompt, np.int32))
+            pages: List[int] = []
+            if paged:
+                try:
+                    pages = tables.admit(
+                        slot, len(prompt), shared=shared_pages,
+                        cover_tokens=cover,
+                    )
+                except PageOverflowError as e:
+                    # unreachable for validated requests; kept as the typed
+                    # -O-safe backstop of the poison discipline
+                    results.setdefault(req.uid, [])
+                    finish(req.uid, "error", str(e))
+                    free.append(slot)
+                    free.sort(reverse=True)
+                    return
+                bt_dev = jnp.asarray(tables.table)
             prefills += 1
-            last_row = last[0, -1]
+            pending[slot] = _PendingPrefill(
+                req=req, prompt=prompt, carry=carry0, next_start=m_tok,
+                pages=list(pages), shared_tokens=m_tok,
+            )
+
+        def finalize(slot: int) -> None:
+            nonlocal cache, pos, done, gen, max_new, uids, cur
+            pp = pending.pop(slot)
+            req = pp.req
+            pl = len(pp.prompt)
+            last_row = pp.last_logits[0, (pl - 1) - pp.last_start]
             if not np.isfinite(np.asarray(last_row)).all():
                 # poisoned before the first token: typed error, slot unused
-                results[req.uid] = []
+                results.setdefault(req.uid, [])
                 finish(req.uid, "error",
                        f"non-finite prefill logits for request {req.uid}")
-                free.append(slot)
-                free.sort(reverse=True)
+                release_slot(slot)
                 return
-            if paged:
-                pages = jnp.asarray(
-                    np.asarray(tables.admit(slot, s0), np.int32)
-                )
-                bt_dev = jnp.asarray(tables.table)
-            else:
-                pages = jnp.zeros((0,), jnp.int32)
-            cache = self._insert(cache, pre, slot, pages)
+            fin = self._finish(pp.carry, jnp.asarray([pl], jnp.int32))
+            cache = self._insert(cache, fin, slot, jnp.zeros((0,), jnp.int32)
+                                 if paged else jnp.zeros((0,), jnp.int32))
+            if index is not None:
+                # register the prompt's full pages; boundary snapshots let a
+                # later admission resume its suffix prefill mid-prompt
+                payloads = dict(pp.snapshots)
+                for d in range(pp.shared_tokens // self.page_size,
+                               pl // self.page_size):
+                    index.insert(pp.prompt, d, pp.pages[d], payloads.get(d))
             if self.temperature > 0.0:
                 k0 = jax.random.fold_in(
                     jax.random.fold_in(self.key, req.uid), 0
@@ -441,58 +619,147 @@ class ContinuousBatchingEngine:
             finished = (req.max_new_tokens <= 1) or (
                 self.eos_id is not None and t0 == self.eos_id
             )
-            pos = pos.at[slot].set(s0)
+            pos = pos.at[slot].set(pl)
             done = done.at[slot].set(finished)
             gen = gen.at[slot].set(1)
             max_new = max_new.at[slot].set(req.max_new_tokens)
             uids = uids.at[slot].set(req.uid)
             cur = cur.at[slot].set(self.pad_id if finished else t0)
-            active[slot] = _SlotState(req.uid, s0, req.max_new_tokens)
+            active[slot] = _SlotState(req.uid, pl, req.max_new_tokens)
             results[req.uid] = [t0]
-            pos_h[slot] = s0
+            pos_h[slot] = pl
             gen_prev[slot] = 1
 
-        while queue or any(s is not None for s in active):
+        def step_prefill(slot: int) -> None:
+            nonlocal cache, prefill_chunks
+            pp = pending[slot]
+            pl = len(pp.prompt)
+            s0 = pp.next_start
+            vlen = min(pl - s0, chunk)
+            buf = np.zeros((1, chunk), np.int32)
+            buf[0, :vlen] = pp.prompt[s0:s0 + vlen]
+            pp.last_logits, pp.carry = self._pchunk(
+                self.params, pp.carry, jnp.asarray(buf),
+                jnp.asarray([s0], jnp.int32), jnp.asarray([vlen], jnp.int32),
+            )
+            prefill_chunks += 1
+            if paged:
+                ps = self.page_size
+                pg = [
+                    pp.pages[d] if d < len(pp.pages) else NULL_PAGE
+                    for d in range(s0 // ps, (s0 + chunk) // ps)
+                ]
+                cache2 = self._scatter(
+                    cache, pp.carry, jnp.int32(s0), jnp.asarray(pg, jnp.int32)
+                )
+                cache = cache2
+            if index is not None and vlen == chunk:
+                pp.snapshots.append(
+                    ((s0 + chunk) // self.page_size - 1, pp.carry)
+                )
+            pp.last_start = s0
+            pp.next_start = s0 + chunk
+            if s0 + vlen >= pl:
+                finalize(slot)
+
+        while queue or pending or has_active():
             if hooks.on_window_start is not None:
                 hooks.on_window_start()
-            # admissions at the sync boundary: prefill into every free
-            # slot — unless the page pool cannot hold the prompt yet, in
-            # which case the request waits for a retirement to free pages
-            # (bounded by admission_timeout_s / reachability, never a bare
-            # spin: see AdmissionTimeout)
+            # cancellation sweep over mid-prefill requests (lost lease):
+            # drop before spending another chunk on them
+            for slot in list(pending):
+                if cancel_requested(pending[slot].req.uid):
+                    pp = pending.pop(slot)
+                    results.setdefault(pp.req.uid, [])
+                    release_slot(slot)
+                    finish(pp.req.uid, "cancelled")
+            # admissions at the sync boundary: start a chunked prefill in
+            # every free slot — unless the page pool cannot hold the prompt
+            # yet, in which case the request waits for a retirement to free
+            # pages (bounded by admission_timeout_s / reachability, never a
+            # bare spin: see AdmissionTimeout)
             while queue and free:
                 req = queue[0]
                 if cancel_requested(req.uid):
                     queue.popleft()
                     finish(req.uid, "cancelled")
                     continue
-                need = pages_for(len(req.prompt) + 1, self.page_size or 1)
-                if paged and need > tables.allocator.capacity:
-                    starve(req, "impossible", need, tables.allocator.capacity, 0.0)
-                    wait_uid = None
+                err = validate(req)
+                if err is not None:
+                    queue.popleft()
+                    results.setdefault(req.uid, [])
+                    finish(req.uid, "error", err)
                     continue
-                if paged and tables.allocator.available < need:
-                    now = self._clock()
-                    if wait_uid != req.uid:
-                        wait_uid, wait_t0 = req.uid, now
-                    avail = tables.allocator.available
-                    if not any(s is not None for s in active):
-                        starve(req, "starved", need, avail, now - wait_t0)
+                pl = len(req.prompt)
+                if paged:
+                    n_chunks = -(-pl // chunk)
+                    cover = max(pl + 1, min(n_chunks * chunk, horizon))
+                    m_tok, shared_pages, carry0 = 0, [], self._carry0
+                    if index is not None:
+                        chain = index.match(
+                            np.asarray(req.prompt, np.int32),
+                            max_blocks=(pl - 1) // self.page_size,
+                        )
+                        # resume only at a chunk boundary with a snapshot,
+                        # leaving at least the last prompt token to prefill
+                        m_tok = min(len(chain) * self.page_size, pl - 1)
+                        m_tok = m_tok // chunk * chunk
+                        while (m_tok > 0 and
+                               chain[m_tok // self.page_size - 1].payload is None):
+                            m_tok -= chunk
+                        if m_tok > 0:
+                            shared_pages = [
+                                nd.page
+                                for nd in chain[: m_tok // self.page_size]
+                            ]
+                            carry0 = chain[m_tok // self.page_size - 1].payload
+                    need = pages_for(cover, self.page_size) - len(shared_pages)
+                    if need > tables.allocator.capacity:
+                        starve(req, "impossible", need,
+                               tables.allocator.capacity, 0.0)
                         wait_uid = None
                         continue
-                    if (
-                        self.admission_timeout_s is not None
-                        and now - wait_t0 > self.admission_timeout_s
-                    ):
-                        starve(req, "timeout", need, avail, now - wait_t0)
-                        wait_uid = None
-                        continue
-                    break  # wait for a retirement to free pages
-                admit(free.pop(), queue.popleft())
+                    if tables.allocator.available < need and index is not None:
+                        # pool pressure: drop index-only pages, deepest
+                        # first, pinning the chain this admission reuses
+                        index.evict(need - tables.allocator.available,
+                                    keep=shared_pages)
+                    if tables.allocator.available < need:
+                        now = self._clock()
+                        if wait_uid != req.uid:
+                            wait_uid, wait_t0 = req.uid, now
+                        avail = tables.allocator.available
+                        if not has_active() and not pending:
+                            starve(req, "starved", need, avail, now - wait_t0)
+                            wait_uid = None
+                            continue
+                        if (
+                            self.admission_timeout_s is not None
+                            and now - wait_t0 > self.admission_timeout_s
+                        ):
+                            starve(req, "timeout", need, avail, now - wait_t0)
+                            wait_uid = None
+                            continue
+                        break  # wait for a retirement to free pages
+                    admit(free.pop(), queue.popleft(), m_tok, shared_pages,
+                          carry0, cover)
+                else:
+                    admit(free.pop(), queue.popleft(), 0, [], self._carry0,
+                          None)
                 wait_uid = None
+            # prefill progress: one chunk per pending per window interleaves
+            # prefill with decode; with no lane decoding, drain until one
+            # goes live so the device never idles
+            for slot in sorted(pending):
+                if slot in pending:
+                    step_prefill(slot)
+            while not has_active() and pending:
+                for slot in sorted(pending):
+                    if slot in pending:
+                        step_prefill(slot)
             if paged:
                 peak_pages = max(peak_pages, tables.pages_in_use)
-            if not any(s is not None for s in active):
+            if not has_active():
                 # everything shed/cancelled/errored at admission; nothing
                 # on device to step
                 if hooks.on_window_end is not None:
@@ -539,13 +806,10 @@ class ContinuousBatchingEngine:
                     # lost-ownership contract: drop the stream NOW — the
                     # window's tokens are never reported, the device lane
                     # is frozen and recycled
-                    if paged:
-                        tables.release(slot)
                     done = done.at[slot].set(True)
                     cur = cur.at[slot].set(self.pad_id)
                     active[slot] = None
-                    free.append(slot)
-                    free.sort(reverse=True)
+                    release_slot(slot)
                     finish(st.uid, "cancelled")
                     continue
                 n_new = int(gen_h[slot] - gen_prev[slot])
@@ -558,11 +822,8 @@ class ContinuousBatchingEngine:
                 gen_prev[slot] = gen_h[slot]
                 pos_h[slot] = int(pos_dev[slot])
                 if done_h[slot]:
-                    if paged:
-                        tables.release(slot)
                     active[slot] = None
-                    free.append(slot)
-                    free.sort(reverse=True)
+                    release_slot(slot)
                     if poisoned:
                         finish(
                             st.uid, "error",
@@ -579,6 +840,8 @@ class ContinuousBatchingEngine:
         self.stats = {
             "decode_steps": decode_steps,
             "prefills": prefills,
+            "prefill_chunks": prefill_chunks,
+            "prefill_chunk_tokens": chunk,
             "emitted_tokens": sum(len(t) for t in results.values()),
             "slots": b,
             "sync_interval": self.sync_interval,
@@ -589,4 +852,6 @@ class ContinuousBatchingEngine:
             "cancelled": cancelled,
             "errors": errors,
         }
+        if index is not None:
+            self.stats.update(index.stats())
         return [comps[r.uid] for r in requests]

@@ -19,8 +19,14 @@ from pathlib import Path
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
 import repro
 from repro.serve.engine import StepWatchdog
+from repro.serve.paged_cache import NULL_PAGE, BlockTables, required_pages
 from repro.serve.fleet import (
     FleetSpec,
     FleetWorker,
@@ -75,6 +81,55 @@ def assert_fleet_matches_serial(root, ref):
         assert got["tokens"] == want["tokens"], uid
         assert got["status"] == want["status"], uid
         assert got["prompt_len"] == want["prompt_len"], uid
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix refcount safety under worker-style churn
+# ---------------------------------------------------------------------------
+@settings(max_examples=15)
+@given(st.lists(st.integers(min_value=0, max_value=999), min_size=1, max_size=40))
+def test_block_tables_fuzz_shared_prefix_refcounts(script):
+    """Admit-with-shared-prefix / ensure / release interleavings across
+    slots (the churn a fleet worker's admission loop produces): page 0 is
+    never shared, a page stays held while *any* table still references
+    it, per-page refcounts equal the number of referencing slots, and
+    after every slot releases the pool is whole — no refcount leak."""
+    from collections import Counter
+
+    ps, max_len, slots = 4, 16, 3
+    bt = BlockTables.with_pool(
+        slots, max_len, ps, 2 * required_pages(slots, max_len, ps)
+    )
+    lens = [0] * slots  # 0 = slot free
+    for op in script:
+        slot = op % slots
+        if lens[slot] == 0:
+            # share the donor's first (full, immutable) page when one exists
+            donor = next(
+                (j for j in range(slots) if lens[j] > ps and j != slot), None
+            )
+            shared = bt.owned[donor][:1] if donor is not None and op % 2 else []
+            assert NULL_PAGE not in shared
+            lens[slot] = ps + 1 + (op // 7) % (max_len - ps - 1)
+            bt.admit(slot, lens[slot], shared=shared)
+        elif op % 3 == 0:
+            bt.release(slot)
+            lens[slot] = 0
+        else:
+            bt.ensure(slot, min(max_len - 1, lens[slot] + (op // 5) % 8))
+        refs = Counter()
+        for own in bt.owned:
+            refs.update(own)
+        assert NULL_PAGE not in refs
+        for p, k in refs.items():
+            assert bt.allocator.refcount(p) == k  # no free while referenced
+        assert bt.allocator.held == len(refs)
+        assert bt.allocator.total_refs == sum(refs.values())
+        assert bt.allocator.total_refs >= bt.allocator.held
+    for slot in range(slots):
+        if lens[slot]:
+            bt.release(slot)
+    assert bt.allocator.held == 0 and bt.allocator.total_refs == 0
 
 
 # ---------------------------------------------------------------------------

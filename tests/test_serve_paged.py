@@ -37,6 +37,8 @@ from repro.serve.paged_cache import (
     NULL_PAGE,
     BlockTables,
     PageAllocator,
+    PageOverflowError,
+    PrefixIndex,
     pages_for,
     required_pages,
 )
@@ -167,6 +169,119 @@ def test_block_tables_fuzz_slots_stay_disjoint(slots, script):
     for slot in range(slots):
         bt.release(slot)
     assert bt.allocator.held == 0
+
+
+def test_allocator_share_refcounts():
+    a = PageAllocator(8)
+    pages = a.alloc(2)
+    a.share([pages[0]])
+    assert a.refcount(pages[0]) == 2 and a.total_refs == 3
+    a.free([pages[0]])  # decref: a reference remains, the page stays held
+    assert a.refcount(pages[0]) == 1 and a.held == 2
+    a.free([pages[0]])  # last owner: really freed
+    assert a.held == 1 and a.refcount(pages[0]) == 0
+    with pytest.raises(RuntimeError, match="not held"):
+        a.share([pages[0]])  # sharing a free page is a bug
+    with pytest.raises(RuntimeError, match="null"):
+        a.share([NULL_PAGE])  # the reserved page is never shared
+
+
+@settings(max_examples=40)
+@given(
+    st.integers(min_value=2, max_value=16),
+    st.lists(st.integers(min_value=0, max_value=999), min_size=1, max_size=60),
+)
+def test_allocator_fuzz_share_decref_interleavings(num_pages, script):
+    """Property fuzz over alloc/share/decref interleavings: page 0 is
+    never granted or shared, no page returns to the free list while
+    references remain, per-page refcounts mirror the reference multiset
+    exactly, and once every reference is released the pool is whole
+    again (no refcount leak)."""
+    a = PageAllocator(num_pages)
+    refs: list = []  # one entry per live reference (a page may appear k times)
+    for op in script:
+        mode = op % 3
+        if mode == 0 and a.available:
+            n = 1 + (op // 3) % a.available
+            pages = a.alloc(n)
+            assert NULL_PAGE not in pages
+            refs.extend(pages)
+        elif mode == 1 and refs:
+            p = refs[(op // 3) % len(refs)]
+            a.share([p])
+            refs.append(p)
+        elif refs:
+            p = refs.pop((op // 3) % len(refs))
+            a.free([p])
+        held = set(refs)
+        assert a.held == len(held)
+        assert a.held + a.available == a.capacity
+        assert a.total_refs == len(refs) and a.total_refs >= a.held
+        for p in held:
+            assert a.refcount(p) == refs.count(p)
+    a.free(refs)
+    assert a.held == 0 and a.available == a.capacity and a.total_refs == 0
+
+
+def test_block_tables_shared_prefix_pages_survive_peer_release():
+    bt = BlockTables.with_pool(slots=2, max_len=16, page_size=4, num_pages=16)
+    donor = bt.admit(0, prompt_len=9)  # 3 pages, first two full
+    pages = bt.admit(1, prompt_len=9, shared=donor[:2])
+    assert pages[:2] == donor[:2] and pages[2] != donor[2]
+    assert bt.allocator.refcount(donor[0]) == 2
+    bt.release(0)
+    # the shared prefix is still referenced by slot 1: alive, table intact
+    assert bt.allocator.refcount(donor[0]) == 1
+    assert list(bt.table[1, :2]) == donor[:2]
+    bt.release(1)
+    assert bt.allocator.held == 0 and bt.allocator.total_refs == 0
+
+
+def test_block_tables_rejects_more_shared_than_needed():
+    bt = BlockTables.with_pool(slots=2, max_len=16, page_size=4, num_pages=16)
+    donor = bt.admit(0, prompt_len=13)  # 4 pages
+    with pytest.raises(RuntimeError, match="shared prefix pages exceed"):
+        bt.admit(1, prompt_len=2, shared=donor[:3])  # needs only 1 page
+
+
+def test_page_overflow_is_typed_and_catchable():
+    """Over-length requests must raise the typed `PageOverflowError` — a
+    real exception, not an assert stripped by ``python -O``."""
+    bt = BlockTables.with_pool(slots=1, max_len=8, page_size=4, num_pages=16)
+    with pytest.raises(PageOverflowError) as e:
+        bt.admit(0, prompt_len=99)
+    assert e.value.slot == 0 and e.value.max_len == 8
+    assert bt.allocator.held == 0  # nothing leaked by the failed admit
+    bt.admit(0, prompt_len=3)
+    with pytest.raises(PageOverflowError):
+        bt.ensure(0, 8)  # decode past the horizon
+    assert isinstance(e.value, RuntimeError)
+
+
+def test_prefix_index_match_insert_evict():
+    a = PageAllocator(16)
+    idx = PrefixIndex(4, a)
+    toks = np.arange(100, 112, dtype=np.int32)  # 3 full pages
+    owner = a.alloc(3)
+    for d, payload in ((0, None), (1, "snap1"), (2, None)):
+        assert idx.insert(toks, d, owner[d], payload)
+    assert not idx.insert(toks, 1, owner[1], "dup")  # racing duplicate kept out
+    chain = idx.match(toks)
+    assert [n.page for n in chain] == owner and chain[1].payload == "snap1"
+    # a diverging suffix matches only the common prefix
+    fork = toks.copy()
+    fork[6] = 999
+    assert len(idx.match(fork)) == 1
+    assert idx.match(np.asarray([1, 2, 3, 4], np.int32)) == []
+    st_ = idx.stats()
+    assert st_["prefix_queries"] == 3 and st_["prefix_hits"] == 2
+    # the index owns its pages: the prefiller releasing keeps them cached
+    a.free(owner)
+    assert a.held == 3
+    # eviction is deepest-first and respects the pinned (kept) chain
+    assert idx.evict(1, keep=owner[:1]) == 1
+    assert a.refcount(owner[2]) == 0 and len(idx.match(toks)) == 2
+    assert idx.evict(5) == 2 and a.held == 0
 
 
 # ---------------------------------------------------------------------------
@@ -375,6 +490,109 @@ def test_continuous_eos_frees_slot_and_emits_padding_free_tokens():
         np.testing.assert_array_equal(np.asarray(c.tokens), want[:n])
     # all pages back in the pool after the run
     assert cbe.stats["peak_pages"] > 0
+
+
+def test_malformed_requests_error_without_crashing_peers():
+    """Over-length / empty / zero-budget requests retire with a typed
+    ``status="error"`` at admission (live under ``python -O``: the path
+    is exceptions, not asserts) while valid peers stream unaffected."""
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(9)
+    good = rng.integers(0, cfg.vocab_size, (2, 5))
+    max_len = 16
+    reqs = [
+        Request(uid=0, prompt=good[0], max_new_tokens=4),
+        Request(uid=1, prompt=good[1], max_new_tokens=99),  # pl+new > max_len
+        Request(uid=2, prompt=np.zeros(0, np.int64), max_new_tokens=4),
+        Request(uid=3, prompt=good[1], max_new_tokens=0),
+        Request(uid=4, prompt=good[1], max_new_tokens=4),
+    ]
+    cbe = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=max_len, cache_layout="paged",
+        page_size=4, sync_interval=2,
+    )
+    comps = cbe.run(reqs)
+    ref = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_len=max_len, cache_layout="paged",
+        page_size=4, sync_interval=2,
+    ).run([reqs[0], reqs[4]])
+    for i in (1, 2, 3):
+        assert comps[i].status == "error" and comps[i].tokens == []
+        assert comps[i].error is not None
+    assert "exceeds max_len" in comps[1].error
+    assert comps[0].status == "ok" and comps[0].tokens == ref[0].tokens
+    assert comps[4].status == "ok" and comps[4].tokens == ref[1].tokens
+    assert cbe.stats["errors"] == 3
+
+
+@pytest.mark.parametrize("arch", ["qwen25_32b", "rwkv6_1b6"])
+def test_prefix_cache_hit_streams_bit_identical(arch):
+    """Shared-prefix prompts: the radix prefix cache must (a) actually
+    hit, (b) skip prefill chunks, and (c) leave every token stream
+    bit-identical to the cold paged run and the dense layout — for the
+    KV-cache family and the recurrent-state family (whose cached payload
+    is the full carry snapshot)."""
+    cfg = _smoke(arch)
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, 16)
+    prompts = [
+        np.concatenate([shared, rng.integers(0, cfg.vocab_size, 3)])
+        for _ in range(5)
+    ]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=5) for i, p in enumerate(prompts)]
+    runs = {}
+    stats = {}
+    for name, layout, pc in (
+        ("dense", "dense", False),
+        ("paged_cold", "paged", False),
+        ("paged_cached", "paged", True),
+    ):
+        cbe = ContinuousBatchingEngine(
+            cfg, params, slots=2, max_len=28, cache_layout=layout,
+            page_size=4, prefill_chunk_tokens=8, sync_interval=2,
+            prefix_cache=pc,
+        )
+        runs[name] = [c.tokens for c in cbe.run(reqs)]
+        stats[name] = cbe.stats
+    assert runs["paged_cached"] == runs["paged_cold"] == runs["dense"]
+    assert stats["paged_cached"]["prefix_hits"] > 0
+    assert stats["paged_cached"]["prefix_hit_rate"] > 0
+    assert (
+        stats["paged_cached"]["prefill_chunks"]
+        < stats["paged_cold"]["prefill_chunks"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# throughput-benchmark verdict helpers
+# ---------------------------------------------------------------------------
+def test_directional_wall_gate_rejects_paged_slower():
+    from benchmarks.serve_throughput import directional_wall_gate
+
+    engines = {
+        "fixed_dense": {"wall_s": 1.0, "noise_floor_s": 0.02},
+        "continuous_paged": {"wall_s": 0.7, "noise_floor_s": 0.03},
+    }
+    assert directional_wall_gate(engines, "continuous_paged", "fixed_dense")
+    # paged SLOWER than the baseline by more than the floor: the old
+    # abs(fw - pw) gate called this "distinguishable" — a regression
+    # reported as a win; the directional gate must say no
+    engines["continuous_paged"]["wall_s"] = 1.4
+    assert not directional_wall_gate(engines, "continuous_paged", "fixed_dense")
+    # within the combined noise floor: indistinguishable, not a win
+    engines["continuous_paged"]["wall_s"] = 0.99
+    assert not directional_wall_gate(engines, "continuous_paged", "fixed_dense")
+
+
+def test_safe_tokens_per_s_guards_zero_and_noise_runtimes():
+    from benchmarks.serve_throughput import safe_tokens_per_s
+
+    assert safe_tokens_per_s(100, 0.0) is None  # no ZeroDivisionError
+    assert safe_tokens_per_s(100, -1.0) is None
+    assert safe_tokens_per_s(100, 5.0, noise_floor_us=10.0) is None  # in the noise
+    assert safe_tokens_per_s(100, 2e6, noise_floor_us=100.0) == 50.0
 
 
 def test_serve_engine_eos_emits_pad_and_syncs_on_interval():
