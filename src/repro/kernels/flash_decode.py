@@ -52,16 +52,16 @@ NEG_INF = -1.0e30
 
 def _flash_decode_kernel(
     bt_ref,      # scalar prefetch: (B, MP) int32 block tables
-    len_ref,     # scalar prefetch: (B,) int32 valid lengths
-    q_ref,       # (1, g, d) query rows of one kv group
+    len_ref,     # scalar prefetch: (B,) int32 valid lengths (query row 0)
+    q_ref,       # (1, nq*g, d) query rows of one kv group, nq tokens
     k_hbm,       # (KV, P, ps, d) page pool, HBM-resident
     v_hbm,       # (KV, P, ps, dv) page pool, HBM-resident
-    o_ref,       # (1, g, dv)
+    o_ref,       # (1, nq*g, dv)
     k_buf,       # VMEM (bp*ps, d) gather buffer
     v_buf,       # VMEM (bp*ps, dv)
-    m_scr,       # VMEM (g, 1) running max
-    l_scr,       # VMEM (g, 1) running denom
-    acc_scr,     # VMEM (g, dv) output accumulator
+    m_scr,       # VMEM (nq*g, 1) running max
+    l_scr,       # VMEM (nq*g, 1) running denom
+    acc_scr,     # VMEM (nq*g, dv) output accumulator
     k_sem,
     v_sem,
     *,
@@ -71,6 +71,8 @@ def _flash_decode_kernel(
     scale: float,
     cap: Optional[float],
     nc: int,
+    nq: int,
+    g: int,
 ):
     i = pl.program_id(0)  # b * kvh + kv
     c = pl.program_id(1)  # page chunk (sequential split-K axis)
@@ -87,8 +89,9 @@ def _flash_decode_kernel(
     start = c * bp * ps
 
     # chunks entirely past this sequence's history contribute nothing:
-    # skip the DMAs and the update, leave the scratch state untouched
-    @pl.when(start < ln)
+    # skip the DMAs and the update, leave the scratch state untouched.
+    # With nq query tokens the deepest row sees ln + nq - 1 positions.
+    @pl.when(start < ln + (nq - 1))
     def _body():
         for j in range(bp):  # static unroll: per-page gather DMAs
             pg = bt_ref[b, c * bp + j]
@@ -102,30 +105,43 @@ def _flash_decode_kernel(
             cv.start()
             ck.wait()
             cv.wait()
-        q = q_ref[0]  # (g, d)
-        s = jax.lax.dot_general(
-            q, k_buf[...], (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        s = s * scale
-        if cap is not None:
-            s = cap * jnp.tanh(s / cap)
-        tpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(tpos < ln, s, NEG_INF)
-        # chunk 0 always holds token 0, so by the time a fully-masked tile
-        # could update the state, m is already finite — exp(NEG_INF - m)
-        # underflows to exactly 0 and masked slots never pollute l/acc.
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        corr = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        m_scr[...] = m_new
-        pv = jax.lax.dot_general(
-            p.astype(v_buf.dtype), v_buf[...], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        acc_scr[...] = acc_scr[...] * corr + pv
+        # one DMA gather serves all nq query tokens — that is the whole
+        # speculative-verify win in the DMA-bound decode regime.  The
+        # softmax update stays a static per-token unroll, each iteration
+        # op-for-op the nq == 1 body over a (g, chunk) tile with its own
+        # skip (query token t causally sees ln + t positions), so every
+        # row's (m, l, acc) trajectory is bit-identical to a sequential
+        # single-token sweep — a fused (nq*g, chunk) dot is NOT bitwise
+        # row-stable under XLA and would break the stream-identity gate.
+        for t in range(nq):
+            @pl.when(start < ln + t)
+            def _upd(t=t):
+                sl = pl.ds(t * g, g)
+                q = q_ref[0, sl]  # (g, d)
+                s = jax.lax.dot_general(
+                    q, k_buf[...], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+                s = s * scale
+                if cap is not None:
+                    s = cap * jnp.tanh(s / cap)
+                tpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+                s = jnp.where(tpos < ln + t, s, NEG_INF)
+                # chunk 0 always holds token 0, so by the time a fully-
+                # masked tile could update the state, m is already finite —
+                # exp(NEG_INF - m) underflows to exactly 0 and masked slots
+                # never pollute l/acc.
+                m_prev = m_scr[sl]
+                m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+                p = jnp.exp(s - m_new)
+                corr = jnp.exp(m_prev - m_new)
+                l_scr[sl] = l_scr[sl] * corr + jnp.sum(p, axis=1, keepdims=True)
+                m_scr[sl] = m_new
+                pv = jax.lax.dot_general(
+                    p.astype(v_buf.dtype), v_buf[...], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+                acc_scr[sl] = acc_scr[sl] * corr + pv
 
     @pl.when(c == nc - 1)
     def _finalize():
@@ -147,11 +163,13 @@ def flash_decode_pallas(
     block_pages: int = 4,
     interpret: bool = True,
 ) -> jax.Array:
-    """q: (B, 1, H, D); pools: (KV, P, page_size, D); block_tables:
-    (B, max_pages) int32 page ids (0 = the reserved null page); lengths:
-    (B,) valid token counts.  Returns (B, 1, H, Dv)."""
-    b, one, h, d = q.shape
-    assert one == 1, q.shape
+    """q: (B, T, H, D) — T causally ordered query tokens per sequence
+    (T == 1 is classic decode; T > 1 is a speculative verify tile where
+    query t sits at position lengths-1+t, so its valid history is
+    lengths+t); pools: (KV, P, page_size, D); block_tables: (B, max_pages)
+    int32 page ids (0 = the reserved null page); lengths: (B,) valid token
+    counts for query row 0.  Returns (B, T, H, Dv)."""
+    b, nq, h, d = q.shape
     kvh, _, ps, _ = k_pages.shape
     dv = v_pages.shape[-1]
     mp = block_tables.shape[1]
@@ -161,29 +179,37 @@ def flash_decode_pallas(
     assert mp % bp == 0, (mp, bp)
     nc = mp // bp
 
-    # heads of one kv group are contiguous in H, so the (B*KV, g, d) view
-    # is a pure reshape — no transpose, no copy
-    qf = q.reshape(b * kvh, g, d)
+    # heads of one kv group are contiguous in H, so the (B*KV, nq*g, d)
+    # view only permutes the token axis inside a group; for nq == 1 it is
+    # a pure reshape — no transpose, no copy
+    qf = (
+        q.reshape(b, nq, kvh, g, d)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(b * kvh, nq * g, d)
+    )
 
     kernel = functools.partial(
         _flash_decode_kernel,
         bp=bp, ps=ps, kvh=kvh, scale=d**-0.5, cap=logit_cap, nc=nc,
+        nq=nq, g=g,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b * kvh, nc),
         in_specs=[
-            pl.BlockSpec((1, g, d), lambda i, c, bt, ln: (i, 0, 0)),
+            pl.BlockSpec((1, nq * g, d), lambda i, c, bt, ln: (i, 0, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),
             pl.BlockSpec(memory_space=pltpu.ANY),
         ],
-        out_specs=pl.BlockSpec((1, g, dv), lambda i, c, bt, ln: (i, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, nq * g, dv), lambda i, c, bt, ln: (i, 0, 0)
+        ),
         scratch_shapes=[
             pltpu.VMEM((bp * ps, d), k_pages.dtype),
             pltpu.VMEM((bp * ps, dv), v_pages.dtype),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.VMEM((nq * g, 1), jnp.float32),
+            pltpu.VMEM((nq * g, 1), jnp.float32),
+            pltpu.VMEM((nq * g, dv), jnp.float32),
             pltpu.SemaphoreType.DMA,
             pltpu.SemaphoreType.DMA,
         ],
@@ -191,8 +217,12 @@ def flash_decode_pallas(
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b * kvh, g, dv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, nq * g, dv), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qf,
       k_pages, v_pages)
-    return out.reshape(b, 1, h, dv)
+    return (
+        out.reshape(b, kvh, nq, g, dv)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(b, nq, h, dv)
+    )

@@ -94,8 +94,10 @@ def flash_decode(
     q, k_pages, v_pages, block_tables, lengths, *,
     logit_cap=None, block_pages=None, backend="pallas_interpret",
 ):
-    """Paged single-query decode attention.  q: (B, 1, H, D); pools:
-    (KV, P, page_size, D); block_tables: (B, max_pages); lengths: (B,).
+    """Paged decode attention.  q: (B, T, H, D) — T == 1 is classic
+    single-query decode, T > 1 a speculative verify tile (query row t
+    sits at position lengths-1+t); pools: (KV, P, page_size, D);
+    block_tables: (B, max_pages); lengths: (B,).
 
     ``block_pages`` (pages fused per compute tile) resolves through the
     tuned registry and degrades to a divisor of max_pages; ``page_size``

@@ -19,13 +19,16 @@ def flash_decode_ref(
 ):
     """Gather-then-attend oracle for the paged decode kernel.
 
-    q: (B, 1, H, D); pools: (KV, P, page_size, D); block_tables: (B, MP)
-    int32; lengths: (B,).  The gather reconstructs each sequence's cache
-    in page order, so when max_pages * page_size equals a dense cache's
-    max_len this path is bit-identical to `decode_attention` over the
-    dense cache (the paged==dense parity contract).
+    q: (B, T, H, D); pools: (KV, P, page_size, D); block_tables: (B, MP)
+    int32; lengths: (B,) valid tokens for query row 0 (row t sees
+    lengths + t, causally).  The gather reconstructs each sequence's
+    cache in page order, so when max_pages * page_size equals a dense
+    cache's max_len the T == 1 path is bit-identical to
+    `decode_attention` over the dense cache (the paged==dense parity
+    contract); T > 1 (speculative verify) routes through
+    `chunk_decode_attention`.
     """
-    from repro.models.attention import decode_attention
+    from repro.models.attention import chunk_decode_attention, decode_attention
 
     kvh, _, ps, d = k_pages.shape
     b, mp = block_tables.shape
@@ -35,7 +38,9 @@ def flash_decode_ref(
     v = v_pages[:, block_tables].transpose(1, 2, 3, 0, 4).reshape(
         b, mp * ps, kvh, v_pages.shape[-1]
     )
-    return decode_attention(q, k, v, lengths=lengths, logit_cap=logit_cap)
+    if q.shape[1] == 1:
+        return decode_attention(q, k, v, lengths=lengths, logit_cap=logit_cap)
+    return chunk_decode_attention(q, k, v, start=lengths - 1, logit_cap=logit_cap)
 
 
 def matmul_ref(a, b):

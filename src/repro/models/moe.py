@@ -134,6 +134,58 @@ def moe_mlp(
     return out, aux
 
 
+def moe_mlp_decode(
+    params: dict,
+    x: jax.Array,
+    cfg: MoEConfig,
+    *,
+    act: str,
+    dtype,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-token MoE for the decode path: x (B, S, D) -> (out, 0.0).
+
+    The batched `moe_mlp` routes every token of the flattened batch
+    through one global stable argsort + scatter-add, which couples rows
+    two ways: tokens compete for expert capacity slots (drops depend on
+    batch neighbours), and a token's k expert contributions are summed in
+    slot order, so even without drops the float summation *order* — and
+    therefore the output at the ULP level — depends on what the other
+    rows routed.  At decode time that breaks the serving invariant that a
+    request's logits are independent of which requests share the batch,
+    and it breaks speculative decoding outright: accepted prefixes
+    desynchronise rows, changing neighbours' hidden states and flipping
+    argmaxes.  Here each token gathers its own top-k expert weights and
+    sums contributions in top-k order — deterministic, row-independent,
+    and drop-free (capacity is a training-throughput concession that has
+    no business dropping tokens at inference).  Decode batches are tiny,
+    so the per-token weight gather is cheap."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    xf = x.reshape(t, d)
+
+    probs = router_probs(params, x, cfg).reshape(t, cfg.num_experts)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    wg = params["w_gate"].astype(dtype)[top_e]  # (T, k, D, F)
+    wu = params["w_up"].astype(dtype)[top_e]
+    wd = params["w_down"].astype(dtype)[top_e]  # (T, k, F, D)
+    xe = xf.astype(dtype)
+    gate = jnp.einsum("td,tkdf->tkf", xe, wg)
+    up = jnp.einsum("td,tkdf->tkf", xe, wu)
+    hidden = activation(act)(gate) * up
+    eo = jnp.einsum("tkf,tkfd->tkd", hidden, wd)
+    out = jnp.einsum("tkd,tk->td", eo, top_p.astype(dtype))
+
+    if "shared" in params:
+        sh = params["shared"]
+        g = xe @ sh["w_gate"].astype(dtype)
+        u = xe @ sh["w_up"].astype(dtype)
+        out = out + (activation(act)(g) * u) @ sh["w_down"].astype(dtype)
+    return out.reshape(b, s, d).astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
 # ==========================================================================
 # Expert-parallel MoE via shard_map (the production path)
 #

@@ -195,7 +195,7 @@ def _mixer_apply(
 
 
 def _mlp_apply(
-    cfg: C.ModelConfig, mlp: str, p: dict, x: jax.Array
+    cfg: C.ModelConfig, mlp: str, p: dict, x: jax.Array, *, decode: bool = False
 ) -> Tuple[jax.Array, jax.Array]:
     dtype = _dtype(cfg)
     if mlp == C.DENSE_MLP:
@@ -208,6 +208,12 @@ def _mlp_apply(
             return moe_mod.moe_mlp_expert_parallel(
                 p, x, cfg.moe, act=cfg.act, dtype=dtype, mesh=mesh
             )
+        if decode:
+            # the batched dispatch couples rows (capacity competition +
+            # scatter-add summation order), which would make a request's
+            # decode stream depend on its batch neighbours — serving and
+            # speculative verification need row-independent logits
+            return moe_mod.moe_mlp_decode(p, x, cfg.moe, act=cfg.act, dtype=dtype)
         return moe_mod.moe_mlp(p, x, cfg.moe, act=cfg.act, dtype=dtype)
     if mlp == C.RWKV_CHANNEL_MIX:
         return L.rwkv_cmix(p, x, dtype=dtype), jnp.zeros((), jnp.float32)
@@ -468,6 +474,24 @@ def cache_specs(
 # ==========================================================================
 # Decode step
 # ==========================================================================
+def _paged_write_page(
+    block_tables: jax.Array, pos: jax.Array, ps: int
+) -> jax.Array:
+    """Page id for a token write at `pos` ((B,) or (B, K); result matches),
+    routed to the null page (0, permanently garbage by convention) when
+    `pos` lies beyond the block-table horizon — a done-but-unretired slot
+    parked at the `max_len` boundary, or a speculative lookahead past the
+    allocated window, must never clamp into a real (possibly shared) page."""
+    mp = block_tables.shape[1]
+    qidx = pos // ps
+    clipped = jnp.clip(qidx, 0, mp - 1)
+    if pos.ndim == 1:
+        page = block_tables[jnp.arange(pos.shape[0]), clipped]
+    else:
+        page = jnp.take_along_axis(block_tables, clipped, axis=1)
+    return jnp.where(qidx < mp, page, jnp.int32(0))
+
+
 def _unit_decode(
     cfg: C.ModelConfig,
     unit: Tuple[str, str],
@@ -504,7 +528,7 @@ def _unit_decode(
             # into (page, offset) and attend through the block table
             assert ragged and block_tables is not None
             ps = ucache["k_pages"].shape[2]
-            page_id = block_tables[rows, pos // ps]
+            page_id = _paged_write_page(block_tables, pos, ps)
             off = pos % ps
             k_pages = ucache["k_pages"].at[:, page_id, off].set(
                 k[:, 0].transpose(1, 0, 2).astype(ucache["k_pages"].dtype)
@@ -524,11 +548,14 @@ def _unit_decode(
             s_cache = ucache["k"].shape[1]
             slot = pos % s_cache if mixer == C.LOCAL_ATTN else pos
             if ragged:
+                # mode="drop": a done-but-unretired slot parked at the slab
+                # boundary (pos == max_len) must not clamp into the last
+                # real position
                 k_cache = ucache["k"].at[rows, slot].set(
-                    k[:, 0].astype(ucache["k"].dtype)
+                    k[:, 0].astype(ucache["k"].dtype), mode="drop"
                 )
                 v_cache = ucache["v"].at[rows, slot].set(
-                    v[:, 0].astype(ucache["v"].dtype)
+                    v[:, 0].astype(ucache["v"].dtype), mode="drop"
                 )
             else:
                 k_cache = jax.lax.dynamic_update_slice(
@@ -552,10 +579,10 @@ def _unit_decode(
         )
         if ragged:
             ckv = ucache["ckv"].at[rows, pos].set(
-                ckv_new[:, 0].astype(ucache["ckv"].dtype)
+                ckv_new[:, 0].astype(ucache["ckv"].dtype), mode="drop"
             )
             kr = ucache["kr"].at[rows, pos].set(
-                kr_new[:, 0].astype(ucache["kr"].dtype)
+                kr_new[:, 0].astype(ucache["kr"].dtype), mode="drop"
             )
         else:
             ckv = jax.lax.dynamic_update_slice(
@@ -596,7 +623,7 @@ def _unit_decode(
         mo = L.rwkv_cmix(p["mlp"], h, dtype=dtype, shifted=shifted)
         new_cache["cmix_shift"] = h[:, -1, :].astype(ucache["cmix_shift"].dtype)
     else:
-        mo, _ = _mlp_apply(cfg, mlp, p["mlp"], h)
+        mo, _ = _mlp_apply(cfg, mlp, p["mlp"], h, decode=True)
     if cfg.use_post_norms:
         mo = L.rmsnorm(p["post_norm_mlp"], mo, eps=cfg.norm_eps)
     return x + mo, new_cache
@@ -669,6 +696,311 @@ def decode_step(
     )
     logits = L.softcap(logits, cfg.final_logit_softcap)
     return logits, new_cache
+
+
+# ==========================================================================
+# Multi-token (speculative) decode.  `decode_multi` processes K = 1 + k
+# tokens per slot in one call: the committed current token plus k
+# unverified drafts.  Paged global-attention units score all K queries in
+# ONE flash_decode pass (the K-query tile in kernels/flash_decode.py);
+# every other cache family runs an inner jax.lax.scan whose per-step body
+# is exactly `_unit_decode`, so per-token math matches K sequential
+# decode_step calls by construction.  The scan stages per-step carries so
+# `commit_multi` can rewind state written by rejected draft tokens.
+# ==========================================================================
+_REWIND_KEYS = ("conv", "h", "state", "shift", "cmix_shift")
+
+
+def _unit_decode_paged_multi(
+    cfg: C.ModelConfig,
+    unit: Tuple[str, str],
+    p: dict,
+    ucache: dict,
+    x: jax.Array,
+    pos: jax.Array,
+    block_tables: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    """Paged global-attention unit over K tokens in one pass: scatter all
+    K tokens into the page pools (beyond-horizon writes null-routed), then
+    one width-K flash_decode where query row t sees length pos+1+t."""
+    mixer, mlp = unit
+    dtype = _dtype(cfg)
+    rope_args = (cfg.rope_theta, cfg.rope_scaling)
+    b, kk, _ = x.shape
+    positions = pos[:, None] + jnp.arange(kk)[None, :]  # (B, K)
+    new_cache = dict(ucache)
+
+    h = L.rmsnorm(p["norm_mix"], x, eps=cfg.norm_eps)
+    q, k, v = attn.project_qkv(
+        p["mixer"], h, dtype=dtype, rope_args=rope_args, positions=positions
+    )
+    ps = ucache["k_pages"].shape[2]
+    page_id = _paged_write_page(block_tables, positions, ps)  # (B, K)
+    off = positions % ps
+    k_pages = ucache["k_pages"].at[:, page_id, off].set(
+        k.transpose(2, 0, 1, 3).astype(ucache["k_pages"].dtype)
+    )
+    v_pages = ucache["v_pages"].at[:, page_id, off].set(
+        v.transpose(2, 0, 1, 3).astype(ucache["v_pages"].dtype)
+    )
+    from repro.kernels import ops as kops
+
+    o = kops.flash_decode(
+        q, k_pages, v_pages, block_tables, pos + 1,
+        logit_cap=cfg.attn_logit_softcap, backend=cfg.kernel_backend,
+    )
+    mo = attn.attention_out(p["mixer"], o, dtype=dtype)
+    new_cache["k_pages"], new_cache["v_pages"] = k_pages, v_pages
+    if cfg.use_post_norms:
+        mo = L.rmsnorm(p["post_norm_mix"], mo, eps=cfg.norm_eps)
+    x = x + mo
+
+    h = L.rmsnorm(p["norm_mlp"], x, eps=cfg.norm_eps)
+    mo, _ = _mlp_apply(cfg, mlp, p["mlp"], h, decode=True)
+    if cfg.use_post_norms:
+        mo = L.rmsnorm(p["post_norm_mlp"], mo, eps=cfg.norm_eps)
+    return x + mo, new_cache
+
+
+def _unit_decode_multi(
+    cfg: C.ModelConfig,
+    unit: Tuple[str, str],
+    p: dict,
+    ucache: dict,
+    x: jax.Array,
+    pos: jax.Array,
+    block_tables: Optional[jax.Array],
+) -> Tuple[jax.Array, dict, dict]:
+    """x: (B, K, D); pos: (B,) position of x[:, 0].  Returns
+    (y (B, K, D), new_ucache, staged) where `staged` holds rollback state:
+    recurrent/shift carries after each of the K steps ((K, B, ...)), and
+    for local-attention rings the pre-write contents of the K written
+    slots ((K, B, kv, d))."""
+    mixer, mlp = unit
+    b, kk, _ = x.shape
+    if (
+        mixer == C.GLOBAL_ATTN
+        and "k_pages" in ucache
+        and mlp != C.RWKV_CHANNEL_MIX
+    ):
+        y, nuc = _unit_decode_paged_multi(
+            cfg, unit, p, ucache, x, pos, block_tables
+        )
+        return y, nuc, {}
+    if mixer == C.LOCAL_ATTN and kk > ucache["k"].shape[1]:
+        raise ValueError(
+            f"speculative width {kk} exceeds the local-attention ring size "
+            f"{ucache['k'].shape[1]}: ring slots would collide and rollback "
+            "could not restore rejected writes"
+        )
+    rows = jnp.arange(b)
+
+    def step(uc, xt, pt):
+        st = {}
+        if mixer == C.LOCAL_ATTN:
+            slot = pt % uc["k"].shape[1]
+            st["k_old"] = uc["k"][rows, slot]
+            st["v_old"] = uc["v"][rows, slot]
+        y, nuc = _unit_decode(cfg, unit, p, uc, xt, pt, block_tables)
+        for name in _REWIND_KEYS:
+            if name in nuc:
+                st[name] = nuc[name]
+        return y, nuc, st
+
+    # Per-token sequencing strategy is chosen per mixer so each step
+    # compiles bit-identically to the inlined single-step path (the
+    # stream-identity contract): XLA's fusion choices differ between a
+    # scanned body and an unrolled one by ulps, and which variant matches
+    # the plain `decode_step` compile differs by family — the recurrent
+    # mixers match under lax.scan, the attention/MLA mixers under a
+    # static unroll.  K (the speculation width) is small either way.
+    if mixer in (C.RGLRU, C.RWKV6):
+        def scan_step(uc, inp):
+            xt, pt = inp
+            y, nuc, st = step(uc, xt[:, None], pt)
+            return nuc, (y[:, 0], st)
+
+        steps_pos = pos[None, :] + jnp.arange(kk)[:, None]  # (K, B)
+        nuc, (ys, staged) = jax.lax.scan(
+            scan_step, ucache, (x.transpose(1, 0, 2), steps_pos)
+        )
+        return ys.transpose(1, 0, 2), nuc, staged
+
+    uc = ucache
+    ys = []
+    staged_steps = []
+    for t in range(kk):
+        y, uc, st = step(uc, x[:, t:t + 1], pos + t)
+        ys.append(y)
+        staged_steps.append(st)
+    staged = (
+        jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *staged_steps)
+        if staged_steps[0]
+        else {}
+    )
+    return jnp.concatenate(ys, axis=1), uc, staged
+
+
+def decode_multi(
+    cfg: C.ModelConfig,
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,
+    pos: jax.Array,
+    *,
+    block_tables: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict, dict]:
+    """Speculative decode over K tokens per slot.
+
+    tokens: (B, K) int32 — the committed current token followed by K-1
+    unverified drafts; pos: (B,) int32 position of tokens[:, 0].  Returns
+    (logits (B, K, V), new_cache, staged): new_cache holds all K token
+    writes including the rejected ones — pass `staged` plus the per-slot
+    accepted count to `commit_multi` to rewind.  logits[:, t] matches the
+    t-th of K sequential `decode_step` calls on the same tokens
+    bit-for-bit (CI-gated).  Text-only (num_codebooks == 1).
+    """
+    if cfg.num_codebooks != 1:
+        raise ValueError("decode_multi is text-only (num_codebooks == 1)")
+    dtype = _dtype(cfg)
+    x = L.embed_lookup(
+        params["embed"], tokens, dtype=dtype, scale=cfg.scale_embeddings
+    )
+    new_cache: Dict[str, Any] = {}
+    staged: Dict[str, Any] = {}
+
+    if cfg.n_blocks > 0:
+        def block_fn(carry, inp):
+            h, blocks_cache = carry
+            li, bp = inp
+            bc = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
+                blocks_cache,
+            )
+            nbc = {}
+            st = {}
+            for i, unit in enumerate(cfg.pattern):
+                h, nbc[f"u{i}"], st[f"u{i}"] = _unit_decode_multi(
+                    cfg, unit, bp[f"u{i}"], bc[f"u{i}"], h, pos, block_tables
+                )
+            blocks_cache = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), li, 0
+                ),
+                blocks_cache,
+                nbc,
+            )
+            return (h, blocks_cache), st
+
+        (x, new_cache["blocks"]), staged["blocks"] = jax.lax.scan(
+            block_fn,
+            (x, cache["blocks"]),
+            (jnp.arange(cfg.n_blocks), params["blocks"]),
+        )
+    if cfg.n_remainder > 0:
+        new_cache["rem"] = {}
+        staged["rem"] = {}
+        for i in range(cfg.n_remainder):
+            x, nc, st = _unit_decode_multi(
+                cfg, cfg.pattern[i], params["rem"][f"r{i}"], cache["rem"][f"r{i}"],
+                x, pos, block_tables,
+            )
+            new_cache["rem"][f"r{i}"] = nc
+            staged["rem"][f"r{i}"] = st
+
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.unembed(
+        params["embed"], x, dtype=dtype,
+        num_codebooks=cfg.num_codebooks, head=params.get("lm_head"),
+    )
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits, new_cache, staged
+
+
+def _commit_unit(
+    uc: dict, st: dict, sel: jax.Array, keep: jax.Array, pos: jax.Array,
+    stacked: bool,
+) -> dict:
+    if not st:
+        return uc
+    nuc = dict(uc)
+    ax = 1 if stacked else 0  # staged leaves: (NB, K, B, ...) or (K, B, ...)
+    for name in _REWIND_KEYS:
+        if name in st:
+            leaf = st[name]
+            idx_shape = [1] * leaf.ndim
+            idx_shape[ax + 1] = sel.shape[0]
+            idx = jnp.clip(sel, 0, leaf.shape[ax] - 1).reshape(idx_shape)
+            picked = jnp.take_along_axis(leaf, idx, axis=ax)
+            nuc[name] = jnp.squeeze(picked, axis=ax).astype(uc[name].dtype)
+    if "k_old" in st:
+        ko, vo = st["k_old"], st["v_old"]
+        if stacked:
+            ko = ko.transpose(0, 2, 1, 3, 4)  # (NB, B, K, kv, d)
+            vo = vo.transpose(0, 2, 1, 3, 4)
+        else:
+            ko = ko.transpose(1, 0, 2, 3)  # (B, K, kv, d)
+            vo = vo.transpose(1, 0, 2, 3)
+        kk = ko.shape[-3]
+        s_cache = uc["k"].shape[-3]
+        b = sel.shape[0]
+        slots = (pos[:, None] + jnp.arange(kk)[None, :]) % s_cache  # (B, K)
+        rej = jnp.arange(kk)[None, :] >= keep[:, None]  # (B, K)
+        brows = jnp.arange(b)[:, None]
+        if stacked:
+            m = rej[None, :, :, None, None]
+            nuc["k"] = nuc["k"].at[:, brows, slots].set(
+                jnp.where(m, ko, nuc["k"][:, brows, slots])
+            )
+            nuc["v"] = nuc["v"].at[:, brows, slots].set(
+                jnp.where(m, vo, nuc["v"][:, brows, slots])
+            )
+        else:
+            m = rej[:, :, None, None]
+            nuc["k"] = nuc["k"].at[brows, slots].set(
+                jnp.where(m, ko, nuc["k"][brows, slots])
+            )
+            nuc["v"] = nuc["v"].at[brows, slots].set(
+                jnp.where(m, vo, nuc["v"][brows, slots])
+            )
+    return nuc
+
+
+def commit_multi(
+    cfg: C.ModelConfig,
+    cache: dict,
+    staged: dict,
+    keep: jax.Array,
+    pos: jax.Array,
+) -> dict:
+    """Rewind a `decode_multi` cache to `keep` committed tokens per slot.
+
+    keep: (B,) int32 in [1, K]; pos: (B,) position of the first token of
+    the speculative window.  Slab and paged leaves need no rewind — writes
+    beyond the committed position sit past every future read's length mask
+    and are overwritten before they become visible.  Recurrent and
+    token-shift carries are re-selected at step keep-1; local-attention
+    ring slots written by rejected steps are restored from the staged
+    pre-write values (a ring write at pos+t lands in a slot still inside
+    the live window, so a plain pos rewind would leave it corrupted).
+    """
+    sel = keep - 1
+    new_cache = dict(cache)
+    if staged.get("blocks"):
+        blocks = dict(cache["blocks"])
+        for uk, st in staged["blocks"].items():
+            blocks[uk] = _commit_unit(
+                cache["blocks"][uk], st, sel, keep, pos, stacked=True
+            )
+        new_cache["blocks"] = blocks
+    if staged.get("rem"):
+        rem = dict(cache["rem"])
+        for rk, st in staged["rem"].items():
+            rem[rk] = _commit_unit(
+                cache["rem"][rk], st, sel, keep, pos, stacked=False
+            )
+        new_cache["rem"] = rem
+    return new_cache
 
 
 # ==========================================================================

@@ -24,18 +24,28 @@ from repro.serve.scheduler import (
     EngineHooks,
     Request,
 )
+from repro.serve.speculative import (
+    DraftModelProposer,
+    DraftProposer,
+    NGramProposer,
+    SpeculativeConfig,
+)
 
 __all__ = [
     "AdmissionTimeout",
     "BlockTables",
     "Completion",
     "ContinuousBatchingEngine",
+    "DraftModelProposer",
+    "DraftProposer",
     "EngineHooks",
     "FleetSpec",
     "FleetWorker",
+    "NGramProposer",
     "PageAllocator",
     "Request",
     "ServeEngine",
+    "SpeculativeConfig",
     "StepWatchdog",
     "make_decode_step",
     "make_prefill_step",

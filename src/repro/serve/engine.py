@@ -203,10 +203,19 @@ class ServeEngine:
         *,
         steps: int,
         key: Optional[jax.Array] = None,
+        uids: Optional[jax.Array] = None,
         image_embeds: Optional[jax.Array] = None,
     ) -> jax.Array:
         """tokens: (B, S0) prompt.  Returns (B, S0+steps) completed tokens
-        (fewer when every sequence hit eos at a sync point)."""
+        (fewer when every sequence hit eos at a sync point).
+
+        ``uids`` (B,) int32 — optional per-request ids for temperature
+        sampling: token *i* of request ``uid`` draws from
+        ``fold_in(fold_in(key, uid), i)``, the same chain the
+        continuous-batching scheduler uses, so fixed-engine and scheduler
+        streams stay token-level equivalent at temperature > 0 too.
+        Without uids the legacy batch-shared ``fold_in(key, i)`` applies
+        (rows of one batch then share each step's key)."""
         cfg = self.cfg
         b, s0 = tokens.shape[0], tokens.shape[1]
         if image_embeds is not None:
@@ -217,7 +226,7 @@ class ServeEngine:
         pad = self.pad_id if self.pad_id is not None else self.eos_id
         out = [tokens]
         done = jnp.zeros((b,), bool)
-        cur = self._sample(last, key, 0)
+        cur = self._sample(last, key, 0, uids)
         if self.eos_id is not None:
             done = done | (cur == self.eos_id)
         t = 0
@@ -227,7 +236,7 @@ class ServeEngine:
             logits, cache = self._decode(
                 self.params, cache, nt, jnp.int32(pos0 + t)
             )
-            cur = self._sample(logits[:, 0], key, t + 1)
+            cur = self._sample(logits[:, 0], key, t + 1, uids)
             if self.eos_id is not None:
                 # past-eos sequences emit pad, not live samples; the eos
                 # reduction stays on device — the host sync is hoisted to
@@ -239,8 +248,21 @@ class ServeEngine:
         self.last_stats = {"decode_steps": t + 1 if steps else 0, "batch": b}
         return jnp.concatenate(out, axis=1)
 
-    def _sample(self, logits: jax.Array, key, t: int) -> jax.Array:
-        k = None if key is None else jax.random.fold_in(key, t)
+    def _sample(self, logits: jax.Array, key, t: int, uids=None) -> jax.Array:
+        if key is None:
+            k = None
+        elif uids is None:
+            k = jax.random.fold_in(key, t)
+        else:
+            keys = jax.vmap(
+                lambda u: jax.random.fold_in(jax.random.fold_in(key, u), t)
+            )(jnp.asarray(uids, jnp.int32))
+            return jax.vmap(
+                lambda k_, l_: sample_tokens(
+                    l_, vocab_size=self.cfg.vocab_size,
+                    temperature=self.temperature, key=k_,
+                )
+            )(keys, logits)
         return sample_tokens(
             logits, vocab_size=self.cfg.vocab_size,
             temperature=self.temperature, key=k,

@@ -351,6 +351,33 @@ class BlockTables:
             grew = True
         return grew
 
+    def cover(self, slot: int, pos: int, want: int) -> Tuple[int, bool]:
+        """Best-effort lookahead allocation for speculative decode: try to
+        ensure pages for writes at ``pos .. pos + want - 1``.  Returns
+        ``(covered, grew)`` — how many leading positions actually have
+        pages (in ``[1, want]``) and whether the table changed.
+
+        Position ``pos`` itself is guaranteed (a plain `ensure`, which may
+        raise the usual typed `PageOverflowError` past the horizon); the
+        lookahead degrades page by page instead of raising when the pool
+        cannot cover it — the scheduler shrinks the speculation window to
+        the covered width rather than stalling the whole batch on draft
+        pages."""
+        if want < 1:
+            raise ValueError(f"cover wants at least one position, got {want}")
+        grew = self.ensure(slot, pos)
+        covered = 1
+        while covered < want:
+            nxt = pos + covered
+            needed = nxt // self.page_size + 1
+            if needed > self.max_pages:
+                break  # horizon: lookahead writes past it are null-routed
+            if len(self.owned[slot]) < needed and self.allocator.available < 1:
+                break  # pool dry: degrade instead of stealing live pages
+            grew |= self.ensure(slot, nxt)
+            covered += 1
+        return covered, grew
+
     def release(self, slot: int) -> None:
         """Drop a finished slot's ownership (eos/retirement): decref all
         pages; unshared ones return to the pool, shared prefix pages

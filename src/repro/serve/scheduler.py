@@ -84,6 +84,8 @@ import numpy as np
 
 from repro.models import config as C
 from repro.models.transformer import (
+    commit_multi,
+    decode_multi,
     decode_step,
     finish_prefill_carry,
     init_cache,
@@ -92,6 +94,7 @@ from repro.models.transformer import (
     prefill_chunk,
 )
 from repro.serve.engine import sample_tokens
+from repro.serve.speculative import NO_DRAFT, SpeculativeConfig
 from repro.serve.paged_cache import (
     NULL_PAGE,
     BlockTables,
@@ -340,6 +343,7 @@ class ContinuousBatchingEngine:
         admission_timeout_s: Optional[float] = None,
         on_starved: str = "raise",
         clock: Callable[[], float] = time.monotonic,
+        speculative: Optional[SpeculativeConfig] = None,
     ):
         assert cfg.num_codebooks == 1 and cfg.num_prefix_embeds == 0, (
             "continuous batching serves text-only configs"
@@ -378,6 +382,25 @@ class ContinuousBatchingEngine:
         self.admission_timeout_s = admission_timeout_s
         self.on_starved = on_starved
         self._clock = clock
+        if speculative is not None:
+            if temperature > 0.0:
+                # the verifier compares argmaxes; at temperature > 0 the
+                # draft/target token distributions differ and "acceptance"
+                # would silently change the sampled stream
+                raise ValueError(
+                    "speculative decoding is greedy-only: the exact "
+                    "accept rule verifies argmax equality — run with "
+                    "temperature=0.0"
+                )
+            if (speculative.proposer == "draft_model"
+                    and speculative.draft_cfg is not None
+                    and speculative.draft_cfg.vocab_size != cfg.vocab_size):
+                raise ValueError(
+                    "draft model vocab_size "
+                    f"{speculative.draft_cfg.vocab_size} != target "
+                    f"{cfg.vocab_size}: drafts would not be token ids"
+                )
+        self.spec = speculative
         self.stats: Dict[str, Any] = {}
 
         cap = prefill_cap(max_len, self.prefill_chunk_tokens)
@@ -400,6 +423,9 @@ class ContinuousBatchingEngine:
                 donate_argnums=(0,),
             )
         self._step = self._make_step()
+        self._spec_step = (
+            self._make_spec_step() if self.spec is not None else None
+        )
 
     # -- jitted decode step ------------------------------------------------
     def _make_step(self):
@@ -440,6 +466,83 @@ class ContinuousBatchingEngine:
             cur1 = jnp.where(done1, jnp.int32(pad_id), emit)
             pos1 = pos + live
             return cache, emit, bad, cur1, pos1, done1, gen1
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    # -- jitted speculative step -------------------------------------------
+    def _make_spec_step(self):
+        """Width-K verified decode: score [cur, d_1..d_k] in one
+        `decode_multi`, accept the longest draft prefix matching the
+        target argmaxes plus the target's correction token, rewind
+        rejected cache writes with `commit_multi`.
+
+        Exactness: row 0 sees the committed cache, so target[0] is the
+        plain step's token; row t's logits are only *used* when drafts
+        0..t-1 all matched — in which case its inputs equal the plain
+        sequential history bit-for-bit (`decode_multi`'s per-token
+        contract).  Emissions are always target tokens, never raw
+        drafts, and truncate at eos / token budget / non-finite rows
+        exactly where the plain loop would stop — so speculative streams
+        are bit-identical to non-speculative greedy decode and
+        speculation is pure latency."""
+        cfg = self.cfg
+        paged = self.cache_layout == "paged"
+        eos_id = self.eos_id
+        pad_id = self.pad_id
+        K = self.spec.k + 1
+
+        def step(params, cache, cur, draft, width, pos, done, gen, max_new, bt):
+            # draft: (B, K-1) proposer tokens (NO_DRAFT-padded); width:
+            # (B,) in [1, K] — rows past a slot's width (degraded pool
+            # cover, short proposal, budget) are scored but never used
+            toks = jnp.concatenate([cur[:, None], draft], axis=1)
+            logits, cache, staged = decode_multi(
+                cfg, params, cache, toks, pos,
+                block_tables=bt if paged else None,
+            )
+            live = ~done
+            targets = sample_tokens(logits, vocab_size=cfg.vocab_size)
+            tidx = jnp.arange(K)[None, :]
+            in_w = tidx < width[:, None]
+            match = (draft == targets[:, :-1]) & (
+                tidx[:, : K - 1] < width[:, None] - 1
+            )
+            acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+            n = acc + 1  # accepted drafts + the correction token
+            # poison: the plain loop emits the garbage token flagged, and
+            # the host sync drops it — emit through the first bad row
+            bad_rows = ~jnp.isfinite(logits).all(axis=-1) & in_w
+            first_bad = jnp.where(
+                bad_rows.any(axis=1), jnp.argmax(bad_rows, axis=1), K
+            )
+            n = jnp.minimum(n, first_bad + 1)
+            if eos_id is not None:
+                is_eos = (targets == eos_id) & in_w
+                first_eos = jnp.where(
+                    is_eos.any(axis=1), jnp.argmax(is_eos, axis=1), K
+                )
+                n = jnp.minimum(n, first_eos + 1)
+            n = jnp.minimum(n, max_new - gen)
+            n = jnp.where(live, jnp.maximum(n, 1), 0)
+            emit_mask = tidx < n[:, None]
+            emit = jnp.where(emit_mask, targets, jnp.int32(pad_id))
+            bad = bad_rows & emit_mask
+            gen1 = gen + n
+            done1 = done | (live & (gen1 >= max_new)) | bad.any(axis=1)
+            if eos_id is not None:
+                done1 = done1 | (live[:, None] & is_eos & emit_mask).any(axis=1)
+            last = jnp.take_along_axis(
+                targets, jnp.clip(n - 1, 0, K - 1)[:, None], axis=1
+            )[:, 0]
+            cur1 = jnp.where(done1, jnp.int32(pad_id), last)
+            pos1 = pos + n
+            # rewind rejected writes; frozen rows keep step 0 (their lane
+            # writes pad-token state at a fixed pos, same as the plain
+            # loop's dead lanes — discarded at re-admission)
+            cache = commit_multi(
+                cfg, cache, staged, jnp.clip(n, 1, K), pos
+            )
+            return cache, emit, bad, n, cur1, pos1, done1, gen1
 
         return jax.jit(step, donate_argnums=(1,))
 
@@ -497,7 +600,16 @@ class ContinuousBatchingEngine:
         peak_pages = shed = cancelled = errors = 0
         wait_uid: Optional[int] = None  # head-of-queue starvation tracking
         wait_t0 = 0.0
-        step_key = jax.random.fold_in(self.key, 1)  # per-row keys fold uid/gen
+        # per-row sampling keys are fold_in(fold_in(key, uid), token_index)
+        # — token 0 folds the base key at `finalize`, so the step must use
+        # the SAME base (an extra fold here once made scheduler streams
+        # diverge from the fixed engine's per-uid chain at temperature > 0)
+        step_key = self.key
+        proposer = (
+            self.spec.build(b, self.max_len) if self.spec is not None else None
+        )
+        spec_k = self.spec.k if self.spec is not None else 0
+        spec_steps = spec_drafted = spec_accepted = spec_degraded = 0
 
         def emit_tokens(uid: int) -> None:
             """Report any not-yet-reported tokens of a stream."""
@@ -552,6 +664,8 @@ class ContinuousBatchingEngine:
         def release_slot(slot: int) -> None:
             if paged:
                 tables.release(slot)
+            if proposer is not None:
+                proposer.release(slot)
             free.append(slot)
             free.sort(reverse=True)
 
@@ -629,6 +743,8 @@ class ContinuousBatchingEngine:
             results[req.uid] = [t0]
             pos_h[slot] = pl
             gen_prev[slot] = 1
+            if proposer is not None and not finished:
+                proposer.admit(slot, pp.prompt.tolist(), t0)
 
         def step_prefill(slot: int) -> None:
             nonlocal cache, prefill_chunks
@@ -766,6 +882,96 @@ class ContinuousBatchingEngine:
                     hooks.on_window_end()
                 continue
 
+            if proposer is not None:
+                # -- speculative window: one verified width-K step, then
+                # sync.  The proposer needs the verified tokens before it
+                # can draft the next round, so speculation syncs every
+                # step — the window amortizes dispatches across the K
+                # token positions instead of across sync_interval steps.
+                # done-but-unretired slots (first sampled token was eos or
+                # the budget was 1) were never admitted to the proposer:
+                # they ride the verified step at width 1, masked, and
+                # retire in this round's sync
+                done_now = np.asarray(done)
+                live_slots = [
+                    s for s, st in enumerate(active)
+                    if st is not None and not done_now[s]
+                ]
+                props = proposer.propose_batch(live_slots, spec_k)
+                draft_h = np.full((b, spec_k), self.pad_id, np.int32)
+                width_h = np.ones(b, np.int32)
+                grew = False
+                for slot in live_slots:
+                    st = active[slot]
+                    budget = int(st.max_new - gen_prev[slot])
+                    dr = props[slot]
+                    usable = 0
+                    while usable < spec_k and dr[usable] != NO_DRAFT:
+                        usable += 1
+                    w = max(1, min(spec_k + 1, budget, 1 + usable))
+                    if paged:
+                        wpos = int(pos_h[slot])
+                        want = max(1, min(w, self.max_len - wpos))
+                        cov, g = tables.cover(slot, wpos, want)
+                        grew |= g
+                        spec_degraded += cov < w
+                        w = cov
+                    width_h[slot] = w
+                    draft_h[slot, : w - 1] = dr[: w - 1]
+                if grew:
+                    bt_dev = jnp.asarray(tables.table)
+                    peak_pages = max(peak_pages, tables.pages_in_use)
+                cache, em, bf, nv, cur, pos, done, gen = self._spec_step(
+                    self.params, cache, cur, jnp.asarray(draft_h),
+                    jnp.asarray(width_h), pos, done, gen, max_new, bt_dev,
+                )
+                decode_steps += 1
+                spec_steps += 1
+                done_h = np.asarray(done)
+                gen_h = np.asarray(gen)
+                pos_dev = np.asarray(pos)
+                em_h = np.asarray(em)  # (B, K)
+                bf_h = np.asarray(bf)
+                n_h = np.asarray(nv)
+                for slot, st in enumerate(active):
+                    if st is None:
+                        continue
+                    if cancel_requested(st.uid):
+                        done = done.at[slot].set(True)
+                        cur = cur.at[slot].set(self.pad_id)
+                        active[slot] = None
+                        release_slot(slot)
+                        finish(st.uid, "cancelled")
+                        continue
+                    n_new = int(n_h[slot])
+                    toks = em_h[slot, :n_new]
+                    badw = bf_h[slot, :n_new]
+                    poisoned = bool(badw.any())
+                    if poisoned:
+                        toks = toks[: int(np.argmax(badw))]
+                    results[st.uid].extend(int(t) for t in toks)
+                    spec_drafted += int(width_h[slot]) - 1
+                    spec_accepted += max(0, n_new - 1)
+                    gen_prev[slot] = gen_h[slot]
+                    pos_h[slot] = int(pos_dev[slot])
+                    if done_h[slot]:
+                        active[slot] = None
+                        release_slot(slot)
+                        if poisoned:
+                            finish(
+                                st.uid, "error",
+                                f"non-finite logits for request {st.uid} at "
+                                f"token index {len(results[st.uid])}",
+                            )
+                        else:
+                            finish(st.uid, "ok")
+                    else:
+                        proposer.extend(slot, [int(t) for t in toks])
+                        emit_tokens(st.uid)
+                if hooks.on_window_end is not None:
+                    hooks.on_window_end()
+                continue
+
             emits = []
             bads = []
             for _ in range(self.sync_interval):
@@ -791,7 +997,17 @@ class ContinuousBatchingEngine:
                 bads.append(bad)
                 for slot, st in enumerate(active):
                     if st is not None:
-                        pos_h[slot] += 1
+                        # optimistic mirror of the device pos, bounded by
+                        # the request's true final write position: the
+                        # device freezes pos at retirement, so advancing
+                        # the mirror past prompt_len + max_new would make
+                        # alloc-on-write ensure pages the jitted step
+                        # never writes (a retiring-at-the-boundary slot
+                        # once allocated pages all the way to the clamped
+                        # horizon while scattering at its frozen pos)
+                        pos_h[slot] = min(
+                            pos_h[slot] + 1, st.prompt_len + st.max_new
+                        )
 
             # sync: pull the window's verdicts, distribute tokens, retire
             done_h = np.asarray(done)
@@ -852,6 +1068,16 @@ class ContinuousBatchingEngine:
             "cancelled": cancelled,
             "errors": errors,
         }
+        if self.spec is not None:
+            self.stats.update({
+                "spec_k": spec_k,
+                "spec_steps": spec_steps,
+                "spec_drafted": spec_drafted,
+                "spec_accepted": spec_accepted,
+                "spec_degraded": spec_degraded,
+                "spec_acceptance_rate": round(spec_accepted / spec_drafted, 4)
+                if spec_drafted else 0.0,
+            })
         if index is not None:
             self.stats.update(index.stats())
         return [comps[r.uid] for r in requests]

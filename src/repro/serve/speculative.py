@@ -1,0 +1,319 @@
+"""Speculative decoding for the serve engines: draft proposers + config.
+
+Speculative decode turns the DMA-bound decode loop's bandwidth into
+accepted tokens: a cheap *proposer* guesses k draft tokens per slot, the
+target model scores current-token + drafts in ONE width-(k+1)
+`decode_multi` pass (`kernels/flash_decode.py` gathers each page chunk
+once and serves every query row from it), and exact greedy verification
+accepts the longest prefix where the target's argmax equals the draft —
+plus the target's own next token as the free correction.  Rejected draft
+writes are rewound by `models/transformer.commit_multi`, so a request's
+token stream is bit-identical to non-speculative greedy decode; only the
+number of model dispatches per emitted token changes.  The same
+accept-or-fall-back discipline the kernel-evolution loop applies to
+candidate kernels applies here to candidate tokens: speculate freely,
+verify exactly, never emit an unverified token.
+
+Two built-in proposers:
+
+* `NGramProposer` — prompt-lookup decoding: scan the slot's own token
+  history (prompt + emitted) for the longest recent suffix match and
+  propose its continuation, re-running the lookup on ``history + drafts
+  so far`` for each draft token (a single lookup truncates at the end of
+  history exactly when the stream is most repetitive — the iterative
+  form proposes through cycles).  Zero parameters, pure host work; wins
+  on echo-heavy traffic where outputs repeat the prompt or themselves.
+* `DraftModelProposer` — a small dense-cache model (global-attention
+  families only) runs k greedy steps per speculation round, batched over
+  all live slots and catching up on accepted-but-unseen tokens first.
+  Costs real dispatches per round, so it only pays off when the draft is
+  much cheaper than the target AND agrees with it often — the benchmark
+  reports this honestly.
+
+Verification itself lives in `scheduler.ContinuousBatchingEngine` (the
+jitted spec step built on `decode_multi`/`commit_multi`); this module is
+the host-side draft machinery.  Speculation is greedy-only by contract:
+the verifier compares argmaxes, so `SpeculativeConfig` on a
+temperature > 0 engine raises instead of silently diverging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import config as C
+
+NO_DRAFT = -1  # proposer slots with nothing to propose (width degrades)
+
+
+class DraftProposer(Protocol):
+    """Host-side draft source for the speculative decode loop.
+
+    The scheduler calls ``admit`` when a prefilled request goes live
+    (prompt plus its first sampled token), ``propose_batch`` once per
+    speculation round for every live slot, ``extend`` with the tokens the
+    verifier actually emitted (accepted drafts + correction — NOT the
+    raw proposal), and ``release`` at retirement.  Proposals shorter
+    than k are padded with ``NO_DRAFT``; the scheduler shrinks that
+    slot's verify width accordingly."""
+
+    def admit(self, slot: int, prompt: Sequence[int], first_token: int) -> None: ...
+
+    def extend(self, slot: int, tokens: Sequence[int]) -> None: ...
+
+    def release(self, slot: int) -> None: ...
+
+    def propose_batch(self, slots: Sequence[int], k: int) -> Dict[int, List[int]]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """Speculation knobs for `ContinuousBatchingEngine`.
+
+    ``k`` draft tokens are verified per step (a width-(k+1) decode).
+    ``proposer`` picks a built-in ("ngram" or "draft_model");
+    ``make_proposer`` overrides it with a custom `DraftProposer` factory
+    (called per run with (slots, max_len) — proposer state is per-run,
+    like the prefix cache).  The draft-model arm needs ``draft_cfg`` +
+    ``draft_params``."""
+
+    k: int = 3
+    proposer: str = "ngram"
+    max_ngram: int = 3
+    min_ngram: int = 1
+    draft_cfg: Any = None
+    draft_params: Any = None
+    make_proposer: Optional[Callable[[int, int], "DraftProposer"]] = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"speculative k must be >= 1, got {self.k}")
+        if self.proposer not in ("ngram", "draft_model"):
+            raise ValueError(f"unknown proposer {self.proposer!r}")
+        if self.min_ngram < 1 or self.max_ngram < self.min_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram, got "
+                f"[{self.min_ngram}, {self.max_ngram}]"
+            )
+        if self.proposer == "draft_model" and self.make_proposer is None and (
+            self.draft_cfg is None or self.draft_params is None
+        ):
+            raise ValueError("draft_model proposer needs draft_cfg and draft_params")
+
+    def build(self, slots: int, max_len: int) -> "DraftProposer":
+        if self.make_proposer is not None:
+            return self.make_proposer(slots, max_len)
+        if self.proposer == "ngram":
+            return NGramProposer(max_n=self.max_ngram, min_n=self.min_ngram)
+        return DraftModelProposer(
+            self.draft_cfg, self.draft_params, slots=slots,
+            max_len=max_len + self.k,
+        )
+
+
+# --------------------------------------------------------------------------
+# n-gram / prompt-lookup proposer
+# --------------------------------------------------------------------------
+def _lookup_next(hist: List[int], max_n: int, min_n: int) -> int:
+    """Longest-suffix prompt lookup: find the most recent earlier
+    occurrence of the history's n-token suffix (longest n first) and
+    return the token that followed it; NO_DRAFT when nothing matches."""
+    ln = len(hist)
+    for n in range(max_n, min_n - 1, -1):
+        if ln < n + 1:
+            continue
+        suffix = hist[ln - n:]
+        for i in range(ln - n - 1, -1, -1):
+            if hist[i:i + n] == suffix:
+                return hist[i + n]
+    return NO_DRAFT
+
+
+class NGramProposer:
+    """Prompt-lookup drafts from each slot's own token history.
+
+    Each draft token re-runs the suffix lookup on ``history + drafts so
+    far``: when the stream sits in a cycle (the echo-heavy regime) the
+    virtual history extends the cycle and every draft continues it, where
+    a single longest-match lookup would truncate at the end of history
+    after one token."""
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        self.max_n = max_n
+        self.min_n = min_n
+        self._hist: Dict[int, List[int]] = {}
+
+    def admit(self, slot: int, prompt: Sequence[int], first_token: int) -> None:
+        self._hist[slot] = [int(t) for t in prompt] + [int(first_token)]
+
+    def extend(self, slot: int, tokens: Sequence[int]) -> None:
+        self._hist[slot].extend(int(t) for t in tokens)
+
+    def release(self, slot: int) -> None:
+        self._hist.pop(slot, None)
+
+    def propose_batch(self, slots: Sequence[int], k: int) -> Dict[int, List[int]]:
+        out = {}
+        for slot in slots:
+            h = list(self._hist[slot])
+            drafts: List[int] = []
+            for _ in range(k):
+                t = _lookup_next(h, self.max_n, self.min_n)
+                drafts.append(t)
+                if t == NO_DRAFT:
+                    break
+                h.append(t)
+            out[slot] = drafts + [NO_DRAFT] * (k - len(drafts))
+        return out
+
+
+# --------------------------------------------------------------------------
+# draft-model proposer
+# --------------------------------------------------------------------------
+def _insert_row(cache: Any, row: Any, slot: int) -> Any:
+    """Overwrite batch row `slot` of a dense decode cache with a batch-1
+    cache (leaves under "blocks" carry batch at axis 1, "rem" at 0)."""
+    out = {}
+    if "blocks" in cache:
+        out["blocks"] = {
+            uk: {
+                name: leaf.at[:, slot].set(
+                    row["blocks"][uk][name][:, 0].astype(leaf.dtype)
+                )
+                for name, leaf in cache["blocks"][uk].items()
+            }
+            for uk in cache["blocks"]
+        }
+    if "rem" in cache:
+        out["rem"] = {
+            rk: {
+                name: leaf.at[slot].set(
+                    row["rem"][rk][name][0].astype(leaf.dtype)
+                )
+                for name, leaf in cache["rem"][rk].items()
+            }
+            for rk in cache["rem"]
+        }
+    return out
+
+
+class DraftModelProposer:
+    """Greedy drafts from a small dense-cache model sharing the target's
+    tokenizer (vocab ids must line up — same vocab_size enforced).
+
+    Restricted to pure global-attention configs: a dense K/V slab is
+    positional, so re-feeding a position with the *true* token simply
+    overwrites the stale draft write — the catch-up pass needs no
+    explicit rollback.  Recurrent/shift/ring families would need the
+    full staged-rewind machinery the *target* uses; a draft model is
+    supposed to be cheap, so they are rejected at construction.
+
+    Per speculation round the proposer (a) catches up on tokens the
+    verifier emitted since the last round, then (b) rolls k greedy steps
+    — one batched `decode_step` per host step over every live slot, with
+    slots at different catch-up depths fed their own (token, position)
+    lanes.  Dead lanes park at position 0 feeding token 0; admission
+    overwrites the whole cache row."""
+
+    def __init__(self, cfg: C.ModelConfig, params: Any, *, slots: int,
+                 max_len: int):
+        from repro.models.transformer import decode_step, forward, init_cache
+
+        if cfg.num_codebooks != 1:
+            raise ValueError("draft model must be text-only")
+        for mixer, mlp in cfg.pattern:
+            if mixer != C.GLOBAL_ATTN or mlp == C.RWKV_CHANNEL_MIX:
+                raise ValueError(
+                    "draft model must be a pure global-attention config: "
+                    f"unit {(mixer, mlp)} keeps cache state outside the "
+                    "positional K/V slab, which the catch-up overwrite "
+                    "discipline cannot rewind"
+                )
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, slots, max_len)
+        self._hist: Dict[int, List[int]] = {}
+        self._cached: Dict[int, int] = {}  # true-token positions written
+        # one prefill shape: right-pad to max_len; causal attention keeps
+        # positions < prompt_len exact, later garbage is masked by the
+        # decode length and overwritten before it is ever read
+        self._prefill = jax.jit(
+            lambda p, t: forward(cfg, p, t, return_cache=True, last_only=True)
+        )
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos)
+        )
+        self._insert = jax.jit(_insert_row, donate_argnums=(0,),
+                               static_argnums=(2,))
+
+    def admit(self, slot: int, prompt: Sequence[int], first_token: int) -> None:
+        prompt = [int(t) for t in prompt]
+        buf = np.zeros((1, self.max_len), np.int32)
+        buf[0, :len(prompt)] = prompt
+        _, _, row = self._prefill(self.params, jnp.asarray(buf))
+        self.cache = self._insert(self.cache, row, slot)
+        self._hist[slot] = prompt + [int(first_token)]
+        self._cached[slot] = len(prompt)
+
+    def extend(self, slot: int, tokens: Sequence[int]) -> None:
+        self._hist[slot].extend(int(t) for t in tokens)
+
+    def release(self, slot: int) -> None:
+        self._hist.pop(slot, None)
+        self._cached.pop(slot, None)
+
+    def propose_batch(self, slots: Sequence[int], k: int) -> Dict[int, List[int]]:
+        if not slots:
+            return {}
+        feeds = {s: self._hist[s][self._cached[s]:] for s in slots}
+        assert all(feeds.values()), "proposer extend/admit invariant broken"
+        # cap total steps so draft positions stay inside the draft horizon
+        budget = {
+            s: max(0, self.max_len - self._cached[s] - len(feeds[s]))
+            for s in slots
+        }
+        steps = max(
+            len(feeds[s]) + min(k - 1, budget[s]) for s in slots
+        )
+        cur = np.zeros(self.slots, np.int32)
+        pos = np.zeros(self.slots, np.int32)
+        drafts: Dict[int, List[int]] = {s: [] for s in slots}
+        for i in range(steps):
+            for s in slots:
+                f = feeds[s]
+                if i < len(f):
+                    cur[s] = f[i]
+                elif i > len(f) - 1 + min(k - 1, budget[s]):
+                    cur[s] = 0  # horizon-parked: draft already complete
+                pos[s] = min(self._cached[s] + i, self.max_len - 1)
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(cur)[:, None],
+                jnp.asarray(pos),
+            )
+            nxt = np.asarray(
+                jnp.argmax(
+                    jnp.where(
+                        jnp.arange(logits.shape[-1]) < self.cfg.vocab_size,
+                        logits[:, 0], -jnp.inf,
+                    ),
+                    axis=-1,
+                )
+            ).astype(np.int32)
+            for s in slots:
+                f = feeds[s]
+                if i >= len(f) - 1 and len(drafts[s]) < k:
+                    drafts[s].append(int(nxt[s]))
+                if i >= len(f):
+                    cur[s] = nxt[s]  # greedy chain beyond true history
+        for s in slots:
+            self._cached[s] = len(self._hist[s])
+        return {
+            s: drafts[s] + [NO_DRAFT] * (k - len(drafts[s])) for s in slots
+        }

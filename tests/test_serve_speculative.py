@@ -1,0 +1,505 @@
+"""Speculative decoding: draft proposers, the verified width-K step, and
+the exactness contract.
+
+Contracts:
+* speculation is a pure latency optimization — token streams (and retire
+  statuses) are BIT-IDENTICAL to the non-speculative run for every cache
+  family (KV paged, local ring, MLA latents, recurrent state), for any
+  proposer, including one that drafts adversarial garbage;
+* the n-gram proposer continues cycles through its own drafts (iterative
+  prompt lookup), pads short proposals with NO_DRAFT, and the scheduler
+  shrinks the verify width accordingly;
+* rollback is exact: a rejected draft leaves no trace in the cache
+  (slabs are overwritten before read, carries rewound, rings restored);
+* decode is row-independent: one request's stream never depends on its
+  batch neighbours — the MoE decode path must not route rows through
+  shared capacity slots (the coupled scatter-add combine is a training
+  semantics, not a serving one);
+* boundary retirement: a request sized exactly to the horizon retires
+  cleanly with no page over-allocation and no clamped write into a live
+  page (beyond-horizon writes null-route to page 0).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe as moe_mod
+from repro.models.config import MoEConfig
+from repro.models.transformer import (
+    _paged_write_page,
+    decode_step,
+    init_cache,
+    init_params,
+)
+from repro.serve.engine import ServeEngine
+from repro.serve.paged_cache import BlockTables, required_pages
+from repro.serve.scheduler import ContinuousBatchingEngine, Request
+from repro.serve.speculative import (
+    NO_DRAFT,
+    NGramProposer,
+    SpeculativeConfig,
+)
+
+KEY = jax.random.key(0)
+
+
+def _smoke(arch):
+    return dataclasses.replace(get_config(arch, smoke=True), compute_dtype="float32")
+
+
+def _run_streams(cfg, params, reqs, *, spec=None, layout="paged", max_len=32,
+                 eos_id=None, slots=2, page_size=4, num_pages=None,
+                 prefix_cache=False, temperature=0.0, seed=0):
+    cbe = ContinuousBatchingEngine(
+        cfg, params, slots=slots, max_len=max_len, cache_layout=layout,
+        page_size=page_size, num_pages=num_pages, sync_interval=2,
+        eos_id=eos_id, prefix_cache=prefix_cache, temperature=temperature,
+        seed=seed, speculative=spec,
+    )
+    comps = cbe.run(reqs)
+    return [(c.status, c.tokens) for c in comps], cbe.stats
+
+
+# ---------------------------------------------------------------------------
+# proposers
+# ---------------------------------------------------------------------------
+def test_ngram_iterative_lookup_continues_cycle():
+    """A stream sitting in a cycle must draft *through* the cycle: each
+    draft token re-runs the suffix lookup on history + drafts-so-far.  A
+    single longest-match lookup would stop after one period."""
+    p = NGramProposer(max_n=3, min_n=1)
+    p.admit(0, [5, 1, 2, 3, 1, 2, 3, 1, 2], first_token=3)
+    # history ...1 2 3 1 2 [3]: the cycle (1 2 3) continues indefinitely
+    assert p.propose_batch([0], 7)[0] == [1, 2, 3, 1, 2, 3, 1]
+
+
+def test_ngram_no_match_pads_no_draft():
+    p = NGramProposer()
+    p.admit(0, [1, 2, 3, 4], first_token=5)  # all tokens distinct: no lookup hit
+    assert p.propose_batch([0], 4)[0] == [NO_DRAFT] * 4
+    # extend with a repeat: the suffix now has an earlier occurrence
+    p.extend(0, [1, 2])
+    drafts = p.propose_batch([0], 3)[0]
+    assert drafts[0] == 3  # after ...1 2 the history says 3 followed 1 2
+    p.release(0)
+    assert 0 not in p._hist
+
+
+def test_speculative_config_validates():
+    with pytest.raises(ValueError, match="k must be"):
+        SpeculativeConfig(k=0)
+    with pytest.raises(ValueError, match="unknown proposer"):
+        SpeculativeConfig(proposer="medusa")
+    with pytest.raises(ValueError, match="min_ngram"):
+        SpeculativeConfig(max_ngram=1, min_ngram=2)
+    with pytest.raises(ValueError, match="draft_cfg"):
+        SpeculativeConfig(proposer="draft_model")
+
+
+def test_speculative_rejects_temperature_and_vocab_mismatch():
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    with pytest.raises(ValueError, match="greedy-only"):
+        ContinuousBatchingEngine(
+            cfg, params, slots=1, max_len=16, temperature=0.5,
+            speculative=SpeculativeConfig(k=2),
+        )
+    other = _smoke("recurrentgemma_9b")  # different smoke vocab
+    assert other.vocab_size != cfg.vocab_size
+    with pytest.raises(ValueError, match="vocab_size"):
+        ContinuousBatchingEngine(
+            cfg, params, slots=1, max_len=16,
+            speculative=SpeculativeConfig(
+                proposer="draft_model", draft_cfg=other, draft_params={},
+            ),
+        )
+
+
+def test_draft_model_proposer_rejects_stateful_mixers():
+    cfg = _smoke("recurrentgemma_9b")  # recurrent units: no overwrite rewind
+    with pytest.raises(ValueError, match="global-attention"):
+        SpeculativeConfig(
+            proposer="draft_model", draft_cfg=cfg, draft_params={},
+        ).build(slots=2, max_len=16)
+
+
+# ---------------------------------------------------------------------------
+# the exactness contract: spec streams == plain streams, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "arch,layout",
+    [
+        ("qwen25_32b", "paged"),
+        ("qwen25_32b", "dense"),
+        ("gemma3_27b", "paged"),       # local-attention ring
+        ("deepseek_v2_lite_16b", "paged"),  # MLA latents + MoE MLP
+        ("recurrentgemma_9b", "paged"),     # RGLRU carries + local ring
+        ("rwkv6_1b6", "paged"),             # wkv state + token shifts
+    ],
+)
+def test_spec_streams_bit_identical(arch, layout):
+    cfg = _smoke(arch)
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(5)
+    lens = [14, 3, 9, 6, 11]
+    prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in lens]
+    reqs = [
+        Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
+        for i in range(len(lens))
+    ]
+    base, _ = _run_streams(cfg, params, reqs, layout=layout)
+    spec, st = _run_streams(
+        cfg, params, reqs, layout=layout, spec=SpeculativeConfig(k=3)
+    )
+    assert spec == base
+    assert st["spec_steps"] > 0 and st["spec_drafted"] > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen25_32b", "rwkv6_1b6"])
+def test_spec_streams_bit_identical_with_eos(arch):
+    """Mid-draft eos: the verifier truncates the accepted window at the
+    first eos; everything after it (already speculated into the cache)
+    must be rolled back, not emitted."""
+    cfg = _smoke(arch)
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, 5) for _ in range(4)]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=12) for i, p in enumerate(prompts)]
+    base, _ = _run_streams(cfg, params, reqs)
+    # pick an eos that actually occurs mid-stream in the base run
+    eos = base[0][1][len(base[0][1]) // 2]
+    base_e, _ = _run_streams(cfg, params, reqs, eos_id=eos)
+    spec_e, _ = _run_streams(
+        cfg, params, reqs, eos_id=eos, spec=SpeculativeConfig(k=4)
+    )
+    assert spec_e == base_e
+    assert any(len(t) < 12 for _, t in base_e)  # eos really fired early
+
+
+class RandomDraftProposer:
+    """Adversarial drafts: uniform random tokens (plus occasional NO_DRAFT
+    truncation).  Acceptance collapses and nearly every round rolls back —
+    the stream contract must survive garbage proposals unchanged."""
+
+    def __init__(self, vocab: int, seed: int = 0):
+        self.vocab = vocab
+        self.rng = np.random.default_rng(seed)
+        self.live: set = set()
+
+    def admit(self, slot, prompt, first_token):
+        self.live.add(slot)
+
+    def extend(self, slot, tokens):
+        assert slot in self.live
+
+    def release(self, slot):
+        self.live.discard(slot)
+
+    def propose_batch(self, slots, k):
+        out = {}
+        for s in slots:
+            n = int(self.rng.integers(0, k + 1))
+            dr = [int(t) for t in self.rng.integers(0, self.vocab, n)]
+            out[s] = dr + [NO_DRAFT] * (k - n)
+        return out
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["qwen25_32b", "gemma3_27b", "deepseek_v2_lite_16b", "rwkv6_1b6"],
+)
+def test_rollback_fuzz_random_drafts_stream_intact(arch):
+    cfg = _smoke(arch)
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(13)
+    lens = [13, 5, 10, 7]
+    prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in lens]
+    reqs = [
+        Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
+        for i in range(len(lens))
+    ]
+    base, _ = _run_streams(cfg, params, reqs)
+    spec = SpeculativeConfig(
+        k=3,
+        make_proposer=lambda slots, max_len: RandomDraftProposer(cfg.vocab_size),
+    )
+    fuzz, st = _run_streams(cfg, params, reqs, spec=spec)
+    assert fuzz == base
+    # garbage drafts mostly rejected, and rejection means rollback ran
+    assert st["spec_drafted"] > 0
+    assert st["spec_accepted"] < st["spec_drafted"]
+
+
+def test_rollback_fuzz_with_shared_prefix_pages():
+    """Random drafts over prefix-cache-shared pages: speculative writes on
+    one slot must never leak into a peer's shared prefix (lookahead past
+    the owned window null-routes; accepted writes land in owned pages)."""
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, cfg.vocab_size, 12)
+    prompts = [
+        np.concatenate([shared, rng.integers(0, cfg.vocab_size, 3)])
+        for _ in range(5)
+    ]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8) for i, p in enumerate(prompts)]
+    base, _ = _run_streams(cfg, params, reqs, max_len=28, prefix_cache=True)
+    spec = SpeculativeConfig(
+        k=3,
+        make_proposer=lambda slots, max_len: RandomDraftProposer(cfg.vocab_size, 7),
+    )
+    fuzz, st = _run_streams(
+        cfg, params, reqs, max_len=28, prefix_cache=True, spec=spec
+    )
+    assert fuzz == base
+    assert st["prefix_hits"] > 0
+
+
+class ConstantDraftProposer:
+    """Always proposes k copies of token 1 — (almost) never accepted, but
+    it keeps the requested verify width at k+1, which is what pressures
+    the page pool's lookahead allocation."""
+
+    def __init__(self, slots, max_len):
+        pass
+
+    def admit(self, slot, prompt, first_token):
+        pass
+
+    def extend(self, slot, tokens):
+        pass
+
+    def release(self, slot):
+        pass
+
+    def propose_batch(self, slots, k):
+        return {s: [1] * k for s in slots}
+
+
+def test_spec_degrades_under_page_pool_pressure():
+    """A pool too small for full-k lookahead must shrink the verify width
+    (spec_degraded), never stall or corrupt: the real write position is
+    guaranteed, drafts beyond the covered pages are dropped.  Small
+    prefill chunks matter: chunk-sized admission pre-allocation would
+    otherwise hand every slot its horizon pages up front."""
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(17)
+    lens = [8, 4, 8]
+    prompts = [rng.integers(0, cfg.vocab_size, 3) for _ in lens]
+    reqs = [
+        Request(uid=i, prompt=p, max_new_tokens=lens[i])
+        for i, p in enumerate(prompts)
+    ]
+
+    def run(spec=None):
+        cbe = ContinuousBatchingEngine(
+            cfg, params, slots=2, max_len=24, cache_layout="paged",
+            page_size=4, num_pages=6, prefill_chunk_tokens=4,
+            sync_interval=2, prefix_cache=False, speculative=spec,
+        )
+        comps = cbe.run(reqs)
+        return [(c.status, c.tokens) for c in comps], cbe.stats
+
+    base, _ = run()
+    spec, st = run(SpeculativeConfig(k=3, make_proposer=ConstantDraftProposer))
+    assert spec == base
+    assert st["spec_degraded"] > 0
+    assert st["spec_accepted"] < st["spec_drafted"]
+
+
+def test_local_ring_rejects_overwide_speculation():
+    """Verify width > local-attention ring size would overwrite ring
+    entries a rejected draft still needs — construction-time error, not
+    silent corruption."""
+    cfg = _smoke("recurrentgemma_9b")
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 5),
+                    max_new_tokens=12)]
+    cbe = ContinuousBatchingEngine(
+        cfg, params, slots=1, max_len=24, page_size=4, sync_interval=2,
+        prefix_cache=False, speculative=SpeculativeConfig(k=11),
+    )
+    with pytest.raises(ValueError, match="ring"):
+        cbe.run(reqs)
+
+
+# ---------------------------------------------------------------------------
+# decode-loop bugfix sweep
+# ---------------------------------------------------------------------------
+def test_moe_decode_rows_are_independent():
+    """The decode MoE path must be a per-token operation: a row's output
+    cannot depend on its batch neighbours.  The training path's shared
+    capacity slots (argsort dispatch + scatter-add combine) couple rows
+    at the ULP level and via capacity drops — decode routes around it."""
+    mcfg = MoEConfig(num_experts=8, num_shared_experts=1, top_k=2,
+                     capacity_factor=1.0, expert_d_ff=16)
+    d = 12
+    params = moe_mod.moe_init(jax.random.key(3), d, mcfg)
+    x = jax.random.normal(jax.random.key(4), (4, 1, d), jnp.float32)
+    full, _ = moe_mod.moe_mlp_decode(
+        params, x, mcfg, act="silu", dtype=jnp.float32
+    )
+    for i in range(4):
+        solo, _ = moe_mod.moe_mlp_decode(
+            params, x[i : i + 1], mcfg, act="silu", dtype=jnp.float32
+        )
+        np.testing.assert_array_equal(np.asarray(full[i]), np.asarray(solo[0]))
+
+
+def test_moe_model_decode_row_independent_of_neighbours():
+    """End to end on the MoE arch: decoding the same row alongside
+    *different* neighbours yields bitwise-identical logits.  This is the
+    serving invariant the capacity-coupled MoE combine broke (neighbour
+    tokens shifted a row's expert sums by ULPs, flipping argmaxes and
+    diverging live streams)."""
+    cfg = _smoke("deepseek_v2_lite_16b")
+    params = init_params(jax.random.key(0), cfg)
+    b, max_len = 3, 8
+    rng = np.random.default_rng(2)
+    step = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    row0 = rng.integers(0, cfg.vocab_size, 4)
+
+    def run_with_neighbours(seed):
+        nb = np.random.default_rng(seed).integers(0, cfg.vocab_size, (b - 1, 4))
+        cache = init_cache(cfg, b, max_len)
+        for t in range(4):
+            toks = jnp.asarray(
+                np.concatenate([[row0[t]], nb[:, t]]), jnp.int32
+            )[:, None]
+            lg, cache = step(params, cache, toks, jnp.int32(t))
+        return np.asarray(lg[0, 0])
+
+    np.testing.assert_array_equal(run_with_neighbours(100), run_with_neighbours(200))
+
+
+def test_paged_write_page_null_routes_beyond_horizon():
+    bt = jnp.asarray([[3, 5], [7, 2]], jnp.int32)  # MP = 2, page_size 4
+    pos = jnp.asarray([3, 8], jnp.int32)  # row 1 writes past the horizon
+    np.testing.assert_array_equal(
+        np.asarray(_paged_write_page(bt, pos, 4)), [3, 0]
+    )
+    # width-K form: per-lane routing, lookahead lanes past the horizon
+    # hit the null page while in-horizon lanes still map to real pages
+    posk = jnp.asarray([[3, 4, 11], [0, 7, 8]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(_paged_write_page(bt, posk, 4)), [[3, 5, 0], [7, 2, 0]]
+    )
+
+
+def test_boundary_retirement_exact_horizon():
+    """pl + max_new == max_len, page-aligned: the stream must complete
+    without PageOverflowError, without allocating pages past the horizon,
+    and bit-identical to the dense layout.  Regression: the host position
+    mirror kept advancing for done-but-unretired slots under
+    sync_interval > 1 and a later ensure() clamped it into a live page."""
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    ps, max_len = 4, 16
+    rng = np.random.default_rng(31)
+    pl = 8
+    prompts = [rng.integers(0, cfg.vocab_size, pl) for _ in range(3)]
+    # max_new fills the horizon exactly; prompts are page-aligned
+    reqs = [
+        Request(uid=i, prompt=p, max_new_tokens=max_len - pl)
+        for i, p in enumerate(prompts)
+    ]
+    dense, _ = _run_streams(cfg, params, reqs, layout="dense", max_len=max_len)
+    paged, st = _run_streams(
+        cfg, params, reqs, slots=2, max_len=max_len, page_size=ps,
+        num_pages=required_pages(2, max_len, ps),  # zero slack: over-alloc raises
+    )
+    assert paged == dense
+    assert all(s == "ok" and len(t) == max_len - pl for s, t in paged)
+    assert st["peak_pages"] <= 2 * (max_len // ps)
+    # and speculation at the same exact horizon stays clean too
+    spec, _ = _run_streams(
+        cfg, params, reqs, slots=2, max_len=max_len, page_size=ps,
+        num_pages=required_pages(2, max_len, ps),
+        spec=SpeculativeConfig(k=3),
+    )
+    assert spec == dense
+
+
+def test_first_token_eos_retires_at_admission():
+    """A request whose *first* sampled token is eos must retire with
+    exactly [eos] — matching the fixed engine, which freezes the row at
+    the prefill sample — and hand its slot to the next queued request."""
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, cfg.vocab_size, 5) for _ in range(3)]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8) for i, p in enumerate(prompts)]
+    base, _ = _run_streams(cfg, params, reqs, max_len=16)
+    eos = base[1][1][0]  # request 1's very first token
+    fixed = ServeEngine(cfg, params, max_len=16, eos_id=eos, sync_interval=2)
+    ref = np.asarray(fixed.generate(jnp.asarray(np.stack(prompts)), steps=8))[:, 5:]
+    got, st = _run_streams(
+        cfg, params, reqs, slots=1, max_len=16, eos_id=eos
+    )
+    assert got[1] == ("ok", [eos])
+    for i in (0, 2):
+        want = ref[i]
+        stop = np.where(want == eos)[0]
+        n = int(stop[0]) + 1 if len(stop) else 8
+        assert got[i] == ("ok", list(int(t) for t in want[:n]))
+    assert st["prefills"] == 3  # the freed slot really recycled
+    # speculative path: same admission semantics
+    spec, _ = _run_streams(
+        cfg, params, reqs, slots=1, max_len=16, eos_id=eos,
+        spec=SpeculativeConfig(k=3),
+    )
+    assert spec == got
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_temperature_streams_match_fixed_engine(layout):
+    """temperature > 0: the scheduler keys token i of request uid with
+    fold_in(fold_in(key, uid), i) — the same chain `ServeEngine.generate`
+    uses when passed uids — so continuous-batching streams stay
+    token-level equivalent to the fixed engine under sampling, regardless
+    of slot assignment or admission order."""
+    cfg = _smoke("qwen25_32b")
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(51)
+    n, pl, steps, seed = 4, 5, 7, 3
+    prompts = rng.integers(0, cfg.vocab_size, (n, pl))
+    fixed = ServeEngine(cfg, params, max_len=16, temperature=0.7)
+    ref = np.asarray(
+        fixed.generate(
+            jnp.asarray(prompts), steps=steps,
+            key=jax.random.key(seed), uids=jnp.arange(n, dtype=jnp.int32),
+        )
+    )[:, pl:]
+    reqs = [
+        Request(uid=i, prompt=prompts[i], max_new_tokens=steps)
+        for i in range(n)
+    ]
+    got, _ = _run_streams(
+        cfg, params, reqs, layout=layout, slots=2, max_len=16,
+        temperature=0.7, seed=seed,
+    )
+    for i in range(n):
+        assert got[i] == ("ok", [int(t) for t in ref[i]])
+
+
+def test_block_tables_cover_degrades_and_validates():
+    bt = BlockTables.with_pool(slots=2, max_len=16, page_size=4, num_pages=6)
+    with pytest.raises(ValueError, match="at least one"):
+        bt.cover(0, 0, 0)
+    bt.admit(0, prompt_len=3)  # 1 page; pool has 4 left... minus slot 1
+    bt.admit(1, prompt_len=9)  # 3 pages; pool now has 1 page free
+    # want 8 positions from pos 3: pos 3 is owned, lookahead can add only
+    # one page before the pool runs dry -> 5 covered (3..7), not 8
+    cov, grew = bt.cover(0, 3, 8)
+    assert (cov, grew) == (5, True)
+    # horizon: lookahead stops at max_len even with pages available
+    bt.release(1)
+    cov, _ = bt.cover(0, 13, 8)
+    assert cov == 3  # 13, 14, 15 — 16 is past the horizon
