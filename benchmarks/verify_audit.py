@@ -1,0 +1,110 @@
+"""Hack audit — the strict verification ladder vs the committed attacks.
+
+Two reports:
+
+* ``audit`` (default): every adversarial fixture in tests/fixtures/hacks/
+  is evaluated under ``verify=strict`` and must be rejected at its
+  manifest-declared tier.  Dynamic attacks (tier >= 2) are also run
+  through the legacy two-stage gate to show the vulnerability being
+  closed — tier-0 attacks are never executed outside the strict guard
+  because some (the allclose monkeypatch) corrupt the host process when
+  exec'd.  Exit status 1 if any fixture survives strict.
+* ``delta``: the quick 12-task subset's naive sources plus a synthetic
+  sweep under evoengineer-full vs evoengineer-strictverify, reporting the
+  validity-rate delta strict verification costs on honest candidates
+  (should be ~0) and on the fault regime's injected hacks.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.verify_audit              # audit
+  PYTHONPATH=src python -m benchmarks.verify_audit --mode delta
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import warnings
+
+warnings.filterwarnings("ignore")
+
+from repro.core.methods import get_method
+from repro.evaluation import EvalConfig, Evaluator
+from repro.sweep.driver import run_unit
+from repro.sweep.manifest import quick_subset
+from repro.tasks import benchmark_tasks, get_task
+
+HACKS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "tests", "fixtures", "hacks",
+)
+
+
+def audit() -> int:
+    with open(os.path.join(HACKS, "manifest.json")) as f:
+        manifest = json.load(f)
+    ev = Evaluator(
+        EvalConfig(timing_mode="simulated", verify_nonce=manifest["nonce"])
+    )
+    legacy = Evaluator(EvalConfig(timing_mode="simulated"))
+    print(f"{'fixture':24s} {'task':12s} {'want':>4s} {'got':>4s} "
+          f"{'legacy':>7s}  detail")
+    print("-" * 100)
+    bad = 0
+    for fx in manifest["fixtures"]:
+        with open(os.path.join(HACKS, fx["file"])) as f:
+            source = f.read()
+        task = get_task(fx["task"])
+        res = ev.evaluate(task, source, verify="strict")
+        rep = res.verification or {}
+        got = rep.get("failed_tier")
+        ok = (not res.valid) and got == fx["expected_tier"]
+        bad += 0 if ok else 1
+        if fx["expected_tier"] >= 2 and fx["legacy_accepts"]:
+            lres = legacy.evaluate(task, source, verify="off")
+            lverdict = "PASSES" if lres.valid else "caught"
+        else:
+            lverdict = "(skip)"  # tier-0 payloads are never exec'd legacy
+        fail = [t for t in rep.get("tiers", []) if not t["ok"]]
+        detail = fail[0].get("detail", "") if fail else res.error or ""
+        print(f"{fx['file']:24s} {fx['task']:12s} {fx['expected_tier']:4d} "
+              f"{got if got is not None else '-':>4} {lverdict:>7s}  "
+              f"{detail[:48]}")
+    print("-" * 100)
+    print("audit " + ("PASSED: every attack rejected at its declared tier"
+                      if bad == 0 else f"FAILED: {bad} fixture(s) survived"))
+    return 1 if bad else 0
+
+
+def delta(trials: int) -> int:
+    tasks = quick_subset(benchmark_tasks())
+    rag = [(t.name, t.initial_source) for t in tasks[:8]]
+    rows = {}
+    for mkey in ("evoengineer-full", "evoengineer-strictverify"):
+        ev = Evaluator(EvalConfig(timing_mode="simulated"))
+        vals = []
+        for task in tasks:
+            rec = run_unit(task, get_method(mkey), 0, evaluator=ev,
+                           trials=trials, rag_pool=rag, batch_size=1)
+            vals.append(rec["validity_rate"])
+        rows[mkey] = sum(vals) / len(vals)
+        print(f"{mkey:28s} validity {rows[mkey]*100:5.1f}% "
+              f"({len(tasks)} tasks x {trials} trials, simulated)")
+    d = rows["evoengineer-strictverify"] - rows["evoengineer-full"]
+    print(f"{'delta (strict - legacy)':28s} {d*100:+5.1f} pts "
+          "(strict rejects injected hacks the legacy gate scores valid; "
+          "honest candidates are unaffected)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["audit", "delta"], default="audit")
+    ap.add_argument("--trials", type=int, default=12)
+    args = ap.parse_args()
+    sys.exit(audit() if args.mode == "audit" else delta(args.trials))
+
+
+if __name__ == "__main__":
+    main()

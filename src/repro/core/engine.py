@@ -56,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 import os
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -89,16 +90,27 @@ class RunResult:
     ledger: TokenLedger
     baseline_us: float
 
+    @staticmethod
+    def _usable_runtime(rt: Optional[float]) -> bool:
+        """Non-finite or zero runtimes must never enter speedup accounting
+        (cross-checked with EvalResult.ok: a 0µs candidate would otherwise
+        report an infinite best_speedup)."""
+        return rt is not None and math.isfinite(rt) and rt > 0
+
     @property
     def best_speedup(self) -> float:
         """Paper metric: 1.0 when no valid improvement was found."""
         if self.best is None or not self.best.valid:
             return 1.0
+        if not self._usable_runtime(self.best.runtime_us):
+            return 1.0
         return max(1.0, self.baseline_us / self.best.runtime_us)
 
     @property
     def any_speedup(self) -> bool:
-        if self.best is None or not self.best.valid or not self.best.runtime_us:
+        if self.best is None or not self.best.valid:
+            return False
+        if not self._usable_runtime(self.best.runtime_us):
             return False
         return self.baseline_us / self.best.runtime_us > 1.0
 
@@ -220,7 +232,9 @@ class EvolutionEngine:
                 staged = self._stage_batch(trials)
                 # --- evaluate (concurrently under a ParallelEvaluator) ----
                 batch_results = self.evaluator.evaluate_batch(
-                    self.task, [sol.source for sol, _ in staged]
+                    self.task,
+                    [sol.source for sol, _ in staged],
+                    verify=self.method.verify,
                 )
             # --- tell in submission order: checkpoints stay bit-identical
             # to a serial-evaluator run with the same schedule --------------
@@ -262,6 +276,19 @@ class EvolutionEngine:
 
         op = self.method.schedule(trial)
         parents = self.population.sample(self.rng, self.method.guiding.n_historical or 2)
+        last_rejection: Optional[Dict[str, Any]] = None
+        if self.method.guiding.use_verification:
+            # the most recent rejected candidate's VerificationReport —
+            # derived from checkpointed history, so resumed runs render
+            # the identical prompt
+            last_rejection = next(
+                (
+                    s.verification
+                    for s in reversed(self.history)
+                    if s.verification is not None and not s.valid
+                ),
+                None,
+            )
         bundle = build_bundle(
             self.method.guiding,
             self.task.task_context(),
@@ -270,6 +297,7 @@ class EvolutionEngine:
             op,
             rag=self.rag_pool,
             baseline_diagnosis=self._baseline_diag,
+            last_rejection=last_rejection,
         )
         prompt = render_prompt(bundle, self.method.guiding)
         return op, ProposalRequest(
@@ -350,6 +378,7 @@ class EvolutionEngine:
                         self.evaluator.evaluate_batch,
                         self.task,
                         [sol.source for sol, _ in staged],
+                        self.method.verify,
                     )
                 )
                 staged_all.extend(staged)
@@ -368,11 +397,19 @@ class EvolutionEngine:
             # their history/checkpoints stay byte-identical to pre-diagnosis
             # runs (Solution.to_dict omits the None)
             sol.diagnosis = getattr(res, "diagnosis", None)
+        if self.method.guiding.use_verification:
+            # same contract for strict-off methods (Solution.to_dict omits
+            # the None, keeping their checkpoints byte-identical)
+            sol.verification = getattr(res, "verification", None)
         return sol
 
     def _evaluate(self, sol: Solution, baseline_us: float) -> Solution:
         return self._apply_result(
-            sol, self.evaluator.evaluate(self.task, sol.source), baseline_us
+            sol,
+            self.evaluator.evaluate(
+                self.task, sol.source, verify=self.method.verify
+            ),
+            baseline_us,
         )
 
     def _record_insight(self, sol: Solution, proposal) -> None:
@@ -397,6 +434,18 @@ class EvolutionEngine:
                 text += f" [{bound}-bound" + (
                     f", {ach:.0f}% roofline" if ach is not None else ""
                 ) + "]"
+        if (
+            self.method.guiding.use_verification
+            and not sol.valid
+            and sol.verification
+        ):
+            # tier-tag rejections so the insight stream teaches WHICH gate
+            # bit (mirrors the diagnosis regime tag above)
+            ft = sol.verification.get("failed_tier")
+            if ft is not None:
+                from repro.verify.report import TIER_NAMES
+
+                text += f" [rejected at tier {ft}: {TIER_NAMES.get(ft, '?')}]"
         self.insights.add(
             InsightRecord(
                 text=text,

@@ -44,6 +44,12 @@ class FaultRegime:
     p_syntax: float = 0.10  # stage-1 failures (does not compile/trace)
     p_semantic: float = 0.18  # stage-2 failures (wrong output)
     explore: float = 0.5  # probability of a random-jump proposal vs local step
+    # reward-hacking attempts (Sakana 2509.14279): the proposal wraps the
+    # kernel to special-case the benchmark shape instead of optimizing it.
+    # Default 0.0 keeps every existing method's RNG stream untouched (the
+    # proposer reuses its single fault draw, so a zero rate draws nothing
+    # extra).
+    p_hack: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +63,12 @@ class MethodConfig:
     fault: FaultRegime = FaultRegime()
     # AICE: number of trailing compose/RAG trials
     rag_trials: int = 0
+    # per-candidate verification mode this method requests from the
+    # evaluator: "strict" runs the repro.verify tier ladder, "off" the
+    # legacy two-stage gate, None inherits the evaluator's EvalConfig —
+    # per-method (not per-evaluator) because the table-4 grid shares one
+    # evaluator across all methods
+    verify: Optional[str] = None
 
 
 def _eoh_schedule(t: int) -> str:
@@ -128,6 +140,29 @@ def _diagnosis() -> MethodConfig:
     )
 
 
+def _strictverify() -> MethodConfig:
+    return MethodConfig(
+        name="EvoEngineer-StrictVerify",
+        guiding=GuidingConfig(
+            task_context=True,
+            n_historical=3,
+            use_insights=True,
+            use_verification=True,
+        ),
+        make_population=lambda: ElitePopulation(k=4),
+        schedule=lambda t: "propose",
+        # Full's regime plus a reward-hacking rate: some proposals try to
+        # game the gate by special-casing the benchmark shape (the failure
+        # mode Sakana 2509.14279 reports dominating agentic kernel search).
+        # Under the strict tier ladder those are rejected with a tier
+        # report the prompt feeds back; under the legacy gate they would
+        # score as valid — exactly the validity delta EXPERIMENTS.md
+        # §Robust verification measures.
+        fault=FaultRegime(p_syntax=0.045, p_semantic=0.10, explore=0.30, p_hack=0.06),
+        verify="strict",
+    )
+
+
 def _eoh() -> MethodConfig:
     return MethodConfig(
         name="EvoEngineer-Solution (EoH)",
@@ -170,6 +205,7 @@ METHODS = {
     "evoengineer-insight": _insight,
     "evoengineer-full": _full,
     "evoengineer-diagnosis": _diagnosis,
+    "evoengineer-strictverify": _strictverify,
     "eoh": _eoh,
     "funsearch": _funsearch,
     "aice": _aice,
@@ -183,6 +219,7 @@ DISPLAY_ORDER = [
     "evoengineer-insight",
     "evoengineer-full",
     "evoengineer-diagnosis",
+    "evoengineer-strictverify",
 ]
 
 

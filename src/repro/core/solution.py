@@ -40,6 +40,11 @@ class Solution:
     # (to_dict omits the key entirely when None)
     diagnosis: Optional[Dict[str, Any]] = None
 
+    # serialized VerificationReport (repro.verify) — attached by the
+    # engine only under strict verification, with the same omit-None
+    # contract so strict-off checkpoints stay byte-identical
+    verification: Optional[Dict[str, Any]] = None
+
     def __post_init__(self):
         if not self.sid:
             self.sid = hashlib.sha1(self.source.encode()).hexdigest()[:12]
@@ -66,6 +71,9 @@ class Solution:
             # keep diagnosis-off serializations byte-identical to the
             # pre-diagnosis schema (no "diagnosis": null key)
             del d["diagnosis"]
+        if self.verification is None:
+            # same contract for strict-off runs (no "verification": null)
+            del d["verification"]
         return d
 
     @classmethod

@@ -35,6 +35,11 @@ class GuidingConfig:
     # make InsightStore knob bias regime-aware.  Off by default — prompts,
     # RNG schedules and checkpoints of every existing method are untouched.
     use_diagnosis: bool = False
+    # strict tiered verification (repro.verify): evaluate candidates under
+    # the full gate ladder and render the most recent rejection's
+    # VerificationReport (which tier bit, and why) into the prompt.  Off by
+    # default with the same untouched-byte contract as use_diagnosis.
+    use_verification: bool = False
 
 
 @dataclasses.dataclass
@@ -48,6 +53,9 @@ class InformationBundle:
     # (populated only under GuidingConfig.use_diagnosis)
     diagnosis: Optional[Dict[str, Any]] = None
     baseline_diagnosis: Optional[Dict[str, Any]] = None
+    # serialized VerificationReport of the run's most recent *rejected*
+    # candidate (populated only under GuidingConfig.use_verification)
+    last_rejection: Optional[Dict[str, Any]] = None
 
 
 def build_bundle(
@@ -58,6 +66,7 @@ def build_bundle(
     operator: str,
     rag: Optional[List[Tuple[str, str]]] = None,
     baseline_diagnosis: Optional[Dict[str, Any]] = None,
+    last_rejection: Optional[Dict[str, Any]] = None,
 ) -> InformationBundle:
     b = InformationBundle(operator=operator)
     if guiding.task_context:
@@ -75,6 +84,8 @@ def build_bundle(
             (s.diagnosis for s in parents if s.diagnosis is not None), None
         )
         b.baseline_diagnosis = baseline_diagnosis
+    if guiding.use_verification:
+        b.last_rejection = last_rejection
     return b
 
 
@@ -125,6 +136,15 @@ def render_prompt(bundle: InformationBundle, guiding: GuidingConfig) -> str:
         )
         if section:
             parts.append("## Performance diagnosis (best parent)\n" + section)
+    if bundle.last_rejection:
+        from repro.verify.report import render_verification_section  # lazy:
+        # keep the prompt layer import-light for strict-off methods
+
+        section = render_verification_section(bundle.last_rejection)
+        if section:
+            parts.append(
+                "## Verification feedback (last rejected candidate)\n" + section
+            )
     if bundle.rag_solutions:
         lines = [
             f"### Retrieved from task {name}\n```python\n{src}\n```"

@@ -19,9 +19,15 @@ message.  The worker then imports ``repro.tasks`` (populating the task
 registry, plus any ``extra_task_modules``), builds a process-local
 `Evaluator`, and sends ``("ready",)``.  Then, in a loop:
 
-    parent -> worker   ("eval", job_id, task_name, source)
+    parent -> worker   ("eval", job_id, task_name, source, verify_mode)
     worker -> parent   ("result", job_id, eval_result_dict, stats_dict)
     parent -> worker   None                      # shutdown request
+
+The init config ships the parent's *resolved* strict-verification nonce
+(``EvalConfig.verify_nonce`` is pinned to ``Evaluator.verify_nonce``
+before the send), so every worker draws the identical tier-2/3 inputs
+the parent would — parallel strict evaluation stays bit-identical to
+serial, and one recorded nonce replays the whole pool's rejections.
 
 Timeouts are layered.  Inside the worker the per-candidate SIGALRM
 deadline (``EvalConfig.timeout_s``) fires on the worker's main thread —
@@ -104,10 +110,10 @@ def _worker_main(conn, config: EvalConfig, cache_dir: Optional[str], extra_task_
             break
         if msg is None:
             break
-        _, job_id, task_name, source = msg
+        _, job_id, task_name, source, verify = msg
         try:
             task = tasks_mod.get_task(task_name)
-            payload = dataclasses.asdict(ev.evaluate(task, source))
+            payload = dataclasses.asdict(ev.evaluate(task, source, verify=verify))
         except BaseException as e:  # noqa: BLE001 — a worker never dies on a job
             payload = dataclasses.asdict(
                 EvalResult(error=_errmsg(e), stage="unexpected")
@@ -206,7 +212,10 @@ class ParallelEvaluator(Evaluator):
             stderr=subprocess.DEVNULL,
         )
         child_conn.close()
-        parent_conn.send(("init", self.config, self.cache_dir, self.extra_task_modules))
+        # pin the parent's resolved nonce so every worker draws identical
+        # strict-verification inputs (see module docstring)
+        cfg = dataclasses.replace(self.config, verify_nonce=self.verify_nonce)
+        parent_conn.send(("init", cfg, self.cache_dir, self.extra_task_modules))
         self._uid_seq += 1
         w = _Worker(proc, parent_conn, self._uid_seq)
         self._pool.append(w)
@@ -261,15 +270,20 @@ class ParallelEvaluator(Evaluator):
     # ------------------------------------------------------------------
     # evaluation
     # ------------------------------------------------------------------
-    def evaluate(self, task: KernelTask, source: str) -> EvalResult:
-        return self.evaluate_batch(task, [source])[0]
+    def evaluate(
+        self, task: KernelTask, source: str, verify: Optional[str] = None
+    ) -> EvalResult:
+        return self.evaluate_batch(task, [source], verify=verify)[0]
 
-    def evaluate_batch(self, task: KernelTask, sources: List[str]) -> List[EvalResult]:
+    def evaluate_batch(
+        self, task: KernelTask, sources: List[str], verify: Optional[str] = None
+    ) -> List[EvalResult]:
+        mode = verify or self.config.verify
         results: List[Optional[EvalResult]] = [None] * len(sources)
-        pending: Dict[Tuple[str, str], List[int]] = {}
+        pending: Dict[Tuple[str, str, str], List[int]] = {}
         queue: List[Tuple[str, str]] = []  # (sha, source), submission order
         for i, src in enumerate(sources):
-            key = source_key(task.name, src)
+            key = source_key(task.name, src) + (mode,)
             if key in self._cache:
                 self.cache_hits += 1
                 results[i] = self._cache[key]
@@ -282,23 +296,24 @@ class ParallelEvaluator(Evaluator):
             # spawn the full pool up front: workers warm (JAX import, ~s)
             # concurrently instead of trickling in behind the first batch
             self._ensure_pool(self.workers)
-            self._run_jobs(task, queue, pending, results)
+            self._run_jobs(task, queue, pending, results, mode)
         return results  # type: ignore[return-value]
 
     def _finish(
         self,
         task_name: str,
         sha: str,
+        mode: str,
         res: EvalResult,
-        pending: Dict[Tuple[str, str], List[int]],
+        pending: Dict[Tuple[str, str, str], List[int]],
         results: List[Optional[EvalResult]],
     ) -> None:
-        key = (task_name, sha)
+        key = (task_name, sha, mode)
         self._cache[key] = res
         for i in pending.pop(key):
             results[i] = res
 
-    def _run_jobs(self, task, queue, pending, results) -> None:
+    def _run_jobs(self, task, queue, pending, results, mode) -> None:
         todo = list(reversed(queue))  # pop() from the end = submission order
         sources = {sha: src for sha, src in queue}
         n_outstanding = len(todo)
@@ -317,7 +332,7 @@ class ParallelEvaluator(Evaluator):
                     break
                 if w.state == "idle":
                     sha, src = todo.pop()
-                    w.conn.send(("eval", sha, task.name, src))
+                    w.conn.send(("eval", sha, task.name, src, mode))
                     w.state = "busy"
                     w.job_id = sha
                     w.started = time.monotonic()
@@ -350,7 +365,7 @@ class ParallelEvaluator(Evaluator):
                             todo.append((w.job_id, sources[w.job_id]))
                         else:
                             self._finish(
-                                task.name, w.job_id,
+                                task.name, w.job_id, mode,
                                 EvalResult(error="evaluation worker crashed", stage="unexpected"),
                                 pending, results,
                             )
@@ -363,7 +378,9 @@ class ParallelEvaluator(Evaluator):
                 elif msg[0] == "result":
                     _, job_id, payload, stats = msg
                     self._worker_stats[w.uid] = stats
-                    self._finish(task.name, job_id, EvalResult(**payload), pending, results)
+                    self._finish(
+                        task.name, job_id, mode, EvalResult(**payload), pending, results
+                    )
                     n_outstanding -= 1
                     w.state = "idle"
                     w.job_id = None
@@ -373,7 +390,7 @@ class ParallelEvaluator(Evaluator):
                 for w in list(self._pool):
                     if w.state == "busy" and now - w.started > self.worker_deadline_s:
                         self._finish(
-                            task.name, w.job_id,
+                            task.name, w.job_id, mode,
                             EvalResult(
                                 error=(
                                     f"candidate exceeded {self.worker_deadline_s}s "

@@ -74,6 +74,32 @@ def _break_semantics(source: str, rng: np.random.Generator) -> str:
     return source.replace("return out", "return out * 1.01")
 
 
+def _reward_hack(task: KernelTask, source: str, rng: np.random.Generator) -> str:
+    """Introduce a reward-hacking attempt: the kernel is wrapped so it is
+    exactly right on the benchmark configuration and wrong (or
+    NaN-laundering) everywhere else — it passes the legacy fixed-shape
+    fixed-seed gate but is caught by the strict tier ladder (fuzz shapes /
+    NaN probe).  Shape checks are static under jit, so both wrappers
+    compile and trace cleanly."""
+    shape = tuple(np.asarray(task.make_inputs(0)[0]).shape)
+    hacked = re.sub(r"\bdef kernel\b", "def _inner", source, count=1)
+    if int(rng.integers(2)) == 0:
+        wrapper = (
+            "\n\ndef kernel(*args):\n"
+            "    # 'optimized' fast path: special-cases the benchmark shape\n"
+            f"    if args[0].shape == {shape}:\n"
+            "        return _inner(*args)\n"
+            "    return _inner(*args) * 0.0\n"
+        )
+    else:
+        wrapper = (
+            "\n\ndef kernel(*args):\n"
+            "    # 'numerical stabilization': launders NaN/Inf to zeros\n"
+            "    return jnp.nan_to_num(_inner(*args))\n"
+        )
+    return hacked + wrapper
+
+
 class SyntheticLLM(Proposer):
     name = "synthetic"
 
@@ -115,6 +141,13 @@ class SyntheticLLM(Proposer):
         elif r < fault.p_syntax + fault.p_semantic:
             source = _break_semantics(source, rng)
             insight = f"set {knob}={choice} (subtly wrong)"
+            genome = None
+        elif fault.p_hack and r < fault.p_syntax + fault.p_semantic + fault.p_hack:
+            # reuses the single fault draw above: a zero p_hack (every
+            # pre-existing method) consumes no extra RNG, keeping their
+            # proposal streams bit-identical
+            source = _reward_hack(task, source, rng)
+            insight = f"set {knob}={choice} (tuned to the benchmark shape)"
             genome = None
 
         return Proposal(

@@ -41,6 +41,16 @@ class KernelTask:
     naive_genome: Dict[str, Any]  # the initial (deliberately slow) point
     rtol: float = 2e-4
     atol: float = 2e-4
+    # ---- strict-verification declarations (repro.verify) -------------
+    # extra input tuples at off-canonical shapes (ragged, non-multiple-of-
+    # block, degenerate dims) for the tier-2 fuzz sweep; seeded by the run
+    # nonce.  None = fuzz only the canonical shape at nonce seeds.
+    fuzz_cases: Optional[Callable[[int], List[Tuple[np.ndarray, ...]]]] = None
+    # tier-3 algebraic invariants (repro.verify.properties.PropertySpec)
+    properties: Tuple[Any, ...] = ()
+    # opt out of the tier-2 NaN-propagation probe for ops whose naive
+    # implementation legitimately drops NaN (e.g. sort-based min/argmax)
+    nan_probe: bool = True
 
     @property
     def initial_source(self) -> str:

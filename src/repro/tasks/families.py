@@ -19,6 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.tasks.base import KernelTask, register
+from repro.verify.properties import (
+    homogeneous,
+    permute_rows_equivariant,
+    shift_invariant,
+)
 
 _HEADER = "import jax\nimport jax.numpy as jnp\nfrom functools import partial\n\n"
 
@@ -32,6 +37,18 @@ def _rng_inputs(shapes, seed, scale=1.0, positive=False, dtype=np.float32):
             a = np.abs(a) + 0.1
         out.append(a)
     return tuple(out)
+
+
+def _fuzz_inputs(shape_tuples, seed, scale=1.0, positive=False):
+    """Tier-2 fuzz cases: one input tuple per entry of ``shape_tuples``
+    (each entry = the full shape list for one call), seeds offset per
+    entry so no two cases share data.  Shapes are deliberately ragged /
+    non-multiple-of-block / degenerate — a candidate special-cased to the
+    benchmark configuration fails here."""
+    return [
+        _rng_inputs(list(shapes), seed + i, scale, positive)
+        for i, shapes in enumerate(shape_tuples)
+    ]
 
 
 def _dtype_lines(genome) -> Tuple[str, str]:
@@ -123,6 +140,22 @@ def _mm_ref(spec):
     return ref
 
 
+def _mm_fuzz(ta, tb, batched):
+    """Ragged (m, k, n) triples re-laid-out under the task's transpose /
+    batch convention: degenerate rows, inner dim 1, nothing a multiple of
+    any tile size."""
+
+    def shapes(m, k, n, b):
+        a = (k, m) if ta else (m, k)
+        bsh = (n, k) if tb else (k, n)
+        if batched:
+            return [(b,) + a, (b,) + bsh]
+        return [a, bsh]
+
+    cases = [shapes(7, 13, 5, 1), shapes(1, 9, 4, 2), shapes(6, 1, 3, 3)]
+    return lambda seed: _fuzz_inputs(cases, seed, 0.5)
+
+
 def make_matmul_task(name, desc, a_shape, b_shape, *, ta=False, tb=False, batched=False):
     spec = {"ta": ta, "tb": tb, "batched": batched}
     space = {
@@ -151,6 +184,9 @@ def make_matmul_task(name, desc, a_shape, b_shape, *, ta=False, tb=False, batche
             naive_genome=naive,
             rtol=5e-3,
             atol=5e-3,
+            fuzz_cases=_mm_fuzz(ta, tb, batched),
+            # bilinear in each operand
+            properties=(homogeneous(arg=0), homogeneous(arg=1)),
         )
     )
 
@@ -325,6 +361,13 @@ def make_conv_task(
     }
     if lhs_dilation:
         spec["lhs_dilation"] = lhs_dilation
+    # fuzz: keep channels/weights fixed (groups must divide), vary batch +
+    # spatial dims; effective kernel extent lower-bounds VALID spatials
+    eff = tuple((w_shape[2 + i] - 1) * dilation[i] + 1 for i in range(nd))
+    fuzz_shapes = [
+        [(1, x_shape[1]) + tuple(e + 4 for e in eff), w_shape],
+        [(3, x_shape[1]) + tuple(e + 7 for e in eff), w_shape],
+    ]
     impls = ["taps_loop", "im2col", "lax_conv"] if nd <= 2 else ["taps_loop", "lax_conv"]
     space = {
         "impl": impls,
@@ -344,6 +387,9 @@ def make_conv_task(
             naive_genome=naive,
             rtol=2e-3,
             atol=2e-3,
+            fuzz_cases=lambda seed: _fuzz_inputs(fuzz_shapes, seed, 0.3),
+            # bilinear in activations and weights
+            properties=(homogeneous(arg=0), homogeneous(arg=1)),
         )
     )
 
@@ -418,6 +464,11 @@ def make_activation_task(name, op, shape):
             },
             render=_act_render(op),
             naive_genome={"impl": "chunked_loop", "chunks": 64, "dtype": "float32"},
+            fuzz_cases=lambda seed: _fuzz_inputs(
+                [[(7, 33)], [(1, 5)], [(3, 1)]], seed, 2.0
+            ),
+            # elementwise: row order cannot matter
+            properties=(permute_rows_equivariant(),),
         )
     )
 
@@ -470,6 +521,12 @@ def make_softmax_task(name, shape, log=False):
             },
             render=_softmax_render(log),
             naive_genome={"impl": "stable", "rowloop": 64, "dtype": "float32"},
+            fuzz_cases=lambda seed: _fuzz_inputs(
+                [[(7, 33)], [(1, 17)], [(5, 1)]], seed, 2.0
+            ),
+            # (log-)softmax's defining stability property plus row
+            # independence
+            properties=(shift_invariant(), permute_rows_equivariant()),
         )
     )
 
@@ -547,5 +604,15 @@ def make_pool_task(name, desc, shape, *, k, s, op):
             },
             render=_pool_render(spec),
             naive_genome={"impl": "stack_slices", "batch_loop": True, "dtype": "float32"},
+            fuzz_cases=lambda seed: _fuzz_inputs(
+                [
+                    [(2, 3) + tuple(2 * kk + 1 for kk in k)],
+                    [(1, 2) + tuple(k)],
+                ],
+                seed,
+                1.0,
+            ),
+            # positively homogeneous (holds for both max and avg)
+            properties=(homogeneous(arg=0, scale=2.0),),
         )
     )

@@ -9,7 +9,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.tasks.base import KernelTask, register
-from repro.tasks.families import _HEADER, _dtype_lines, _rng_inputs
+from repro.tasks.families import _HEADER, _dtype_lines, _fuzz_inputs, _rng_inputs
+from repro.verify.properties import (
+    homogeneous,
+    permute_rows_invariant,
+    scale_invariant,
+    shift_equivariant,
+    shift_invariant,
+)
 
 
 # ==========================================================================
@@ -76,6 +83,13 @@ def make_norm_task(name, desc, op, shape, ref, axis_repr="-1"):
     # batch-statistics norms must see the whole batch: row-chunking would
     # change semantics, so the knob collapses for them
     allow_rowloop = op not in ("batchnorm",)
+    if op == "groupnorm":
+        # the 8-group reshape hardcodes C % 8 == 0 in render and ref
+        fuzz_shapes = [[(2, 16, 5, 3)], [(1, 8, 3, 2)]]
+    elif op in ("batchnorm", "instancenorm"):
+        fuzz_shapes = [[(2, 3, 5, 7)], [(3, 2, 4, 4)]]
+    else:  # row-wise: layernorm / rmsnorm / l2norm
+        fuzz_shapes = [[(7, 33)], [(1, 17)], [(5, 1)]]
     return register(
         KernelTask(
             name=name,
@@ -96,6 +110,9 @@ def make_norm_task(name, desc, op, shape, ref, axis_repr="-1"):
             },
             rtol=1e-3,
             atol=1e-3,
+            fuzz_cases=lambda seed: _fuzz_inputs(fuzz_shapes, seed, 1.5),
+            # normalization is scale-free (up to eps; tol_factor absorbs it)
+            properties=(scale_invariant(),),
         )
     )
 
@@ -158,8 +175,25 @@ def _reduce_render(op, axis_repr):
     return render
 
 
+_REDUCE_PROPS = {
+    "sum": lambda: (homogeneous(),),
+    "mean": lambda: (homogeneous(),),
+    "max": lambda: (shift_equivariant(),),
+    "min": lambda: (shift_equivariant(),),
+    "logsumexp": lambda: (shift_equivariant(),),
+    "std": lambda: (shift_invariant(),),
+    "frobenius": lambda: (homogeneous(),),
+    # argmax: a shift can flip float32 near-ties between the top two row
+    # elements into a different (large-integer) answer — too flaky for a
+    # hard gate.  prod: s^n overflows for any usable n.
+    "argmax": lambda: (),
+    "prod": lambda: (),
+}
+
+
 def make_reduce_task(name, desc, op, shape, ref, axis_repr="-1"):
     positive = op == "prod"
+    scale = 0.05 if op == "prod" else 1.0
     return register(
         KernelTask(
             name=name,
@@ -182,6 +216,14 @@ def make_reduce_task(name, desc, op, shape, ref, axis_repr="-1"):
             },
             rtol=1e-3,
             atol=1e-3,
+            fuzz_cases=lambda seed: _fuzz_inputs(
+                [[(7, 33)], [(1, 17)], [(5, 1)]], seed, scale, positive
+            ),
+            properties=_REDUCE_PROPS[op](),
+            # sort-based min drops NaN (sort orders NaN last, [..., 0]
+            # misses it) — the legitimate naive implementation would fail
+            # the probe
+            nan_probe=op != "min",
         )
     )
 
@@ -246,24 +288,33 @@ def _loss_render(op):
 
 
 def make_loss_task(name, desc, op, shape, ref, *, target_kind="real"):
-    def make_inputs(seed):
+    def _inputs(seed, shp=shape):
         rng = np.random.default_rng(seed)
-        pred = rng.standard_normal(shape).astype(np.float32)
+        pred = rng.standard_normal(shp).astype(np.float32)
         if target_kind == "real":
-            target = rng.standard_normal(shape).astype(np.float32)
+            target = rng.standard_normal(shp).astype(np.float32)
         elif target_kind == "binary":
-            target = (rng.random(shape) > 0.5).astype(np.float32)
+            target = (rng.random(shp) > 0.5).astype(np.float32)
         elif target_kind == "pm1":
-            target = np.sign(rng.standard_normal(shape)).astype(np.float32)
+            target = np.sign(rng.standard_normal(shp)).astype(np.float32)
         elif target_kind == "simplex":
-            t = np.abs(rng.standard_normal(shape)) + 1e-3
+            t = np.abs(rng.standard_normal(shp)) + 1e-3
             target = (t / t.sum(-1, keepdims=True)).astype(np.float32)
             pred = np.abs(pred) + 1e-3
             pred = (pred / pred.sum(-1, keepdims=True)).astype(np.float32)
         elif target_kind == "onehot":
-            idx = rng.integers(0, shape[-1], shape[:-1])
-            target = np.eye(shape[-1], dtype=np.float32)[idx]
+            idx = rng.integers(0, shp[-1], shp[:-1])
+            target = np.eye(shp[-1], dtype=np.float32)[idx]
         return pred, target
+
+    def make_inputs(seed):
+        return _inputs(seed)
+
+    def fuzz_cases(seed):
+        return [
+            _inputs(seed + i, shp)
+            for i, shp in enumerate([(7, 33), (1, 16), (5, 2)])
+        ]
 
     return register(
         KernelTask(
@@ -278,6 +329,9 @@ def make_loss_task(name, desc, op, shape, ref, *, target_kind="real"):
             },
             render=_loss_render(op),
             naive_genome={"rowloop": 64, "dtype": "float32"},
+            fuzz_cases=fuzz_cases,
+            # batch-mean losses: example order cannot change the value
+            properties=(permute_rows_invariant(),),
         )
     )
 
@@ -380,15 +434,24 @@ def make_cumulative_task(name, desc, shape, *, op="cumsum", **flags):
                 )
         return out
 
-    def make_inputs(seed):
+    def _inputs(seed, shp=shape):
         rng = np.random.default_rng(seed)
-        x = rng.standard_normal(shape).astype(np.float32) * 0.1
+        x = rng.standard_normal(shp).astype(np.float32) * 0.1
         if op == "cumprod":
             x = 1.0 + x * 0.05
         if flags.get("masked"):
-            mask = (rng.random(shape) > 0.3).astype(np.float32)
+            mask = (rng.random(shp) > 0.3).astype(np.float32)
             return x, mask
         return (x,)
+
+    def make_inputs(seed):
+        return _inputs(seed)
+
+    def fuzz_cases(seed):
+        return [
+            _inputs(seed + i, shp)
+            for i, shp in enumerate([(7, 33), (1, 16), (3, 1)])
+        ]
 
     impls = (
         ["matmul_tri", "assoc_scan", "builtin"]
@@ -407,5 +470,8 @@ def make_cumulative_task(name, desc, shape, *, op="cumsum", **flags):
             naive_genome={"impl": impls[0], "dtype": "float32"},
             rtol=1e-3,
             atol=1e-3,
+            fuzz_cases=fuzz_cases,
+            # cumsum (masked or not) is linear in x; cumprod is not
+            properties=(homogeneous(arg=0),) if op == "cumsum" else (),
         )
     )

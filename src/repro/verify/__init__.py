@@ -1,0 +1,60 @@
+"""Tiered adversarial verification for candidate kernels.
+
+Strict mode runs every candidate through escalating gates — static AST
+guards, compile/trace, nonce-randomized functional fuzzing, algebraic
+property invariants, and the tolerance-vs-oracle comparison — and emits
+a structured `VerificationReport` that threads through `EvalResult` →
+`Solution` → the proposer prompt, so the LLM learns *which* gate bit and
+why.  Strict-off behavior is byte-identical to the pre-verification
+engine (golden-locked in tests/test_verify.py).
+"""
+
+from repro.verify.policy import (
+    N_NONCE_SEEDS,
+    VerificationPolicy,
+    derive_seed_base,
+    error_stats,
+)
+from repro.verify.properties import (
+    PropertySpec,
+    check_property,
+    homogeneous,
+    negate_equivariant,
+    permute_rows_equivariant,
+    permute_rows_invariant,
+    scale_invariant,
+    shift_equivariant,
+    shift_invariant,
+)
+from repro.verify.report import (
+    TIER_NAMES,
+    VERIFY_PROMPT_BUDGET,
+    TierResult,
+    VerificationReport,
+    render_verification_section,
+    validate,
+)
+from repro.verify.static_guard import static_violations
+
+__all__ = [
+    "N_NONCE_SEEDS",
+    "VerificationPolicy",
+    "derive_seed_base",
+    "error_stats",
+    "PropertySpec",
+    "check_property",
+    "homogeneous",
+    "negate_equivariant",
+    "permute_rows_equivariant",
+    "permute_rows_invariant",
+    "scale_invariant",
+    "shift_equivariant",
+    "shift_invariant",
+    "TIER_NAMES",
+    "VERIFY_PROMPT_BUDGET",
+    "TierResult",
+    "VerificationReport",
+    "render_verification_section",
+    "validate",
+    "static_violations",
+]

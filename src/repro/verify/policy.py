@@ -1,0 +1,217 @@
+"""`VerificationPolicy`: the tiered gate a candidate must clear in strict
+mode, one instance per (task, run-nonce).
+
+The policy owns everything nonce-derived: the seed base is
+``sha1(f"{nonce}:{task.name}")`` so every run draws fresh functional
+inputs (killing seed memorization) while remaining exactly replayable by
+pinning the nonce.  Reference outputs for the nonce/fuzz/NaN cases are
+computed once per policy and memoized — `warm()` lets the evaluator pay
+that cost *outside* the candidate deadline, so the first candidate on a
+cold task is never charged for oracle construction (the same bug class
+as the tier-4 disk-oracle warmup).
+
+The policy never decides tier 1 (compile) or tier 4 (tolerance-vs-
+oracle): those stay in the evaluator, byte-identical to the legacy path.
+It contributes tier 0 (static guard), tier 2 (determinism + nonce seeds
++ fuzz shapes + NaN propagation) and tier 3 (property invariants), each
+recorded on the caller's `VerificationReport`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.tasks.base import KernelTask
+from repro.verify.properties import check_property
+from repro.verify.report import VerificationReport
+from repro.verify.static_guard import static_violations
+
+N_NONCE_SEEDS = 3
+
+
+def derive_seed_base(nonce: str, task_name: str) -> int:
+    """The per-(run, task) seed base: stable for a pinned nonce, fresh
+    otherwise.  31-bit so seed_base + offsets stay well inside int64."""
+    h = hashlib.sha1(f"{nonce}:{task_name}".encode()).hexdigest()
+    return int(h[:8], 16) % (2**31)
+
+
+def error_stats(got: np.ndarray, want: np.ndarray) -> Tuple[float, float, List[int]]:
+    """(max_abs, max_rel, argmax_index) of the elementwise error.
+    Non-finite differences (candidate NaN/Inf vs finite reference) are
+    clamped to a large sentinel so the stats stay JSON-serializable."""
+    g = np.asarray(got, dtype=np.float64)
+    w = np.asarray(want, dtype=np.float64)
+    diff = np.abs(g - w)
+    diff = np.where(np.isfinite(diff), diff, 1e300)
+    if diff.size == 0:
+        return 0.0, 0.0, []
+    flat = int(np.argmax(diff))
+    max_abs = float(diff.reshape(-1)[flat])
+    denom = np.maximum(np.abs(w), 1e-12)
+    max_rel = float(np.max(diff / denom))
+    idx = [int(i) for i in np.unravel_index(flat, diff.shape)]
+    return max_abs, max_rel, idx
+
+
+def _scrub(e: BaseException, limit: int = 300) -> str:
+    """Deterministic candidate-fault message (same address scrubbing as
+    the evaluator's _errmsg; duplicated to keep the import DAG acyclic —
+    the evaluator imports this module)."""
+    msg = re.sub(r"0x[0-9a-fA-F]+", "0x<addr>", str(e)[:limit])
+    return f"{type(e).__name__}: {msg}"
+
+
+class VerificationPolicy:
+    """Tier 0/2/3 checks for one task under one run nonce."""
+
+    def __init__(self, task: KernelTask, nonce: str):
+        self.task = task
+        self.nonce = nonce
+        self.seed_base = derive_seed_base(nonce, task.name)
+        # (label, inputs, want) — nonce-seeded paper-shape cases then fuzz
+        self._cases: Optional[List[Tuple[str, Tuple[np.ndarray, ...], np.ndarray]]] = None
+        # (inputs_with_nan, want) or None when the task opts out
+        self._nan_case: Optional[Tuple[Tuple[np.ndarray, ...], np.ndarray]] = None
+        self._nan_ready = False
+
+    # ------------------------------------------------------------------
+    # tier 0
+    # ------------------------------------------------------------------
+    def static_check(self, source: str) -> List[str]:
+        return static_violations(source)
+
+    # ------------------------------------------------------------------
+    # case construction (reference runs; call under enable_x64)
+    # ------------------------------------------------------------------
+    def warm(self) -> None:
+        """Compute and memoize every reference output this policy will
+        compare against.  Idempotent; run it outside the candidate
+        deadline so oracle construction is never billed to a candidate."""
+        self.functional_cases()
+        self.nan_case()
+
+    def functional_cases(self):
+        if self._cases is not None:
+            return self._cases
+        task = self.task
+        cases = []
+        for i in range(N_NONCE_SEEDS):
+            inputs = task.make_inputs(self.seed_base + i)
+            want = np.asarray(task.ref(*inputs))
+            cases.append((f"nonce seed {i}", inputs, want))
+        if task.fuzz_cases is not None:
+            for j, inputs in enumerate(task.fuzz_cases(self.seed_base + 100)):
+                inputs = tuple(inputs)
+                want = np.asarray(task.ref(*inputs))
+                shapes = tuple(tuple(a.shape) for a in inputs)
+                cases.append((f"fuzz shape {shapes}", inputs, want))
+        self._cases = cases
+        return cases
+
+    def nan_case(self):
+        if self._nan_ready:
+            return self._nan_case
+        self._nan_ready = True
+        task = self.task
+        if not task.nan_probe:
+            return None
+        inputs = task.make_inputs(self.seed_base + 50)
+        x = np.array(inputs[0], copy=True)
+        if x.size == 0 or not np.issubdtype(x.dtype, np.floating):
+            return None
+        x.reshape(-1)[self.seed_base % x.size] = np.nan
+        nan_inputs = (x,) + tuple(inputs[1:])
+        want = np.asarray(task.ref(*nan_inputs))
+        if not np.isnan(want).any():
+            return None  # reference not NaN-sensitive here: nothing to probe
+        self._nan_case = (nan_inputs, want)
+        return self._nan_case
+
+    # ------------------------------------------------------------------
+    # tier 2: determinism + nonce seeds + fuzz shapes + NaN propagation
+    # ------------------------------------------------------------------
+    def run_functional(self, jfn: Callable[..., Any], report: VerificationReport) -> bool:
+        task = self.task
+        try:
+            cases = self.functional_cases()
+            # determinism: two calls at one fixed input must agree exactly
+            _, inputs0, _ = cases[0]
+            g1 = np.asarray(jfn(*inputs0))
+            g2 = np.asarray(jfn(*inputs0))
+            if g1.shape != g2.shape or not np.array_equal(g1, g2, equal_nan=True):
+                report.record(2, False, "nondeterministic output at a fixed input")
+                return False
+            for label, inputs, want in cases:
+                got = np.asarray(jfn(*inputs))
+                if got.shape != want.shape:
+                    report.record(
+                        2, False, f"{label}: shape {got.shape} vs {want.shape}"
+                    )
+                    return False
+                if not np.allclose(got, want, rtol=task.rtol, atol=task.atol):
+                    max_abs, max_rel, idx = error_stats(got, want)
+                    report.max_abs_err = max_abs
+                    report.max_rel_err = max_rel
+                    report.err_argmax = idx
+                    report.record(
+                        2, False,
+                        f"{label}: max abs err {max_abs:.3e} "
+                        f"(rel {max_rel:.3e})",
+                    )
+                    return False
+            nan_detail = "nan probe skipped"
+            nc = self.nan_case()
+            if nc is not None:
+                nan_inputs, want = nc
+                got = np.asarray(jfn(*nan_inputs))
+                if got.shape != want.shape:
+                    report.record(
+                        2, False, f"nan probe: shape {got.shape} vs {want.shape}"
+                    )
+                    return False
+                hidden = np.isnan(want) & ~np.isnan(got)
+                if hidden.any():
+                    report.record(
+                        2, False,
+                        "nan probe: candidate hides NaN the reference propagates",
+                    )
+                    return False
+                nan_detail = "nan probe ok"
+        except Exception as e:  # noqa: BLE001 — candidate faults are data
+            report.record(2, False, f"functional check raised: {_scrub(e)}")
+            return False
+        n_fuzz = len(cases) - N_NONCE_SEEDS
+        report.record(
+            2, True,
+            f"{N_NONCE_SEEDS} nonce seeds, {n_fuzz} fuzz shapes, {nan_detail}",
+        )
+        return True
+
+    # ------------------------------------------------------------------
+    # tier 3: property invariants
+    # ------------------------------------------------------------------
+    def run_properties(self, jfn: Callable[..., Any], report: VerificationReport) -> bool:
+        task = self.task
+        specs = tuple(task.properties)
+        if not specs:
+            report.record(3, True, "no invariants declared")
+            return True
+        for j, spec in enumerate(specs):
+            try:
+                inputs = task.make_inputs(self.seed_base + 200 + j)
+                rng = np.random.default_rng(self.seed_base + 500 + j)
+                ok, detail = check_property(
+                    spec, jfn, inputs, rng, task.rtol, task.atol
+                )
+            except Exception as e:  # noqa: BLE001
+                ok, detail = False, f"{spec.name}: raised {_scrub(e)}"
+            if not ok:
+                report.record(3, False, detail)
+                return False
+        report.record(3, True, f"{len(specs)} invariants ok")
+        return True

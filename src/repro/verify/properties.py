@@ -1,0 +1,154 @@
+"""Tier-3 property invariants: oracle-free algebraic checks.
+
+A `PropertySpec` encodes one invariant of the *operation* as a transform
+pair: perturb the inputs in a way whose effect on the true output is
+known exactly, then require the candidate to be self-consistent —
+
+    candidate(transform(inputs)) ≈ out_map(candidate(inputs))
+
+No reference implementation appears on either side, so a candidate that
+memorizes oracle outputs (or wraps the oracle itself) still has to
+honor the operation's algebra on inputs it has never seen.  This is the
+same idea as the shape/parameter draws in tests/test_kernel_properties.py
+(hypothesis over non-multiple-of-block shapes), specialized to the
+single-function candidate contract.
+
+Transforms take and return numpy input tuples at the task's canonical
+shapes/dtypes (so the candidate's existing jit trace is reused — tier 3
+adds zero compiles), and must preserve dtype: a python-float scale like
+``2.0`` keeps float32 arrays float32 under numpy's promotion rules.
+
+Tolerances are deliberately loose (``tol_factor`` × the task tolerance,
+default 10×): properties exist to kill structural cheats that are wrong
+by orders of magnitude, not to re-litigate rounding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+# (inputs, rng) -> (transformed_inputs, out_map)
+Transform = Callable[
+    [Tuple[np.ndarray, ...], np.random.Generator],
+    Tuple[Tuple[np.ndarray, ...], Callable[[np.ndarray], np.ndarray]],
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PropertySpec:
+    name: str
+    transform: Transform
+    tol_factor: float = 10.0
+
+
+def _replace(inputs: Tuple[np.ndarray, ...], i: int, arr: np.ndarray):
+    out = list(inputs)
+    out[i] = arr
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# factories — declared on tasks via KernelTask.properties
+# ---------------------------------------------------------------------------
+
+
+def homogeneous(arg: int = 0, scale: float = 2.0, degree: float = 1.0) -> PropertySpec:
+    """f(..., s·x_i, ...) = s^degree · f(..., x_i, ...) — linearity of
+    matmul/conv/reductions in each operand (degree 1), squared losses in
+    the residual (degree 2)."""
+
+    def t(inputs, rng):
+        new = _replace(inputs, arg, inputs[arg] * scale)
+        return new, lambda y: y * (scale ** degree)
+
+    return PropertySpec(f"homogeneous(arg{arg},s={scale:g},d={degree:g})", t)
+
+
+def scale_invariant(arg: int = 0, scale: float = 2.0) -> PropertySpec:
+    """f(s·x) = f(x) for s>0 — normalization layers (the eps in the
+    denominator makes this approximate; tol_factor absorbs it)."""
+
+    def t(inputs, rng):
+        return _replace(inputs, arg, inputs[arg] * scale), lambda y: y
+
+    return PropertySpec(f"scale_invariant(arg{arg},s={scale:g})", t)
+
+
+def shift_invariant(arg: int = 0, shift: float = 1.5) -> PropertySpec:
+    """f(x + c) = f(x) — softmax's defining stability property, argmax."""
+
+    def t(inputs, rng):
+        return _replace(inputs, arg, inputs[arg] + shift), lambda y: y
+
+    return PropertySpec(f"shift_invariant(arg{arg},c={shift:g})", t)
+
+
+def shift_equivariant(arg: int = 0, shift: float = 1.5) -> PropertySpec:
+    """f(x + c) = f(x) + c — logsumexp, max/min reductions."""
+
+    def t(inputs, rng):
+        return _replace(inputs, arg, inputs[arg] + shift), lambda y: y + shift
+
+    return PropertySpec(f"shift_equivariant(arg{arg},c={shift:g})", t)
+
+
+def negate_equivariant(arg: int = 0) -> PropertySpec:
+    """f(-x) = -f(x) — odd elementwise ops (tanh), linear ops."""
+
+    def t(inputs, rng):
+        return _replace(inputs, arg, -inputs[arg]), lambda y: -y
+
+    return PropertySpec(f"negate_equivariant(arg{arg})", t)
+
+
+def permute_rows_equivariant() -> PropertySpec:
+    """f(x[π]) = f(x)[π] over the leading axis, one shared random
+    permutation applied to *every* input — row-independent ops
+    (elementwise activations, row softmax, per-row norms).  Kills
+    position-special-cased candidates."""
+
+    def t(inputs, rng):
+        n = inputs[0].shape[0]
+        perm = rng.permutation(n)
+        new = tuple(a[perm] if a.ndim >= 1 and a.shape[0] == n else a for a in inputs)
+        return new, lambda y: y[perm] if y.ndim >= 1 and y.shape[0] == n else y
+
+    return PropertySpec("permute_rows_equivariant", t)
+
+
+def permute_rows_invariant() -> PropertySpec:
+    """f(x[π], y[π], ...) = f(x, y, ...) — scalar losses averaged over the
+    batch: reordering examples cannot change the loss."""
+
+    def t(inputs, rng):
+        n = inputs[0].shape[0]
+        perm = rng.permutation(n)
+        new = tuple(a[perm] if a.ndim >= 1 and a.shape[0] == n else a for a in inputs)
+        return new, lambda y: y
+
+    return PropertySpec("permute_rows_invariant", t)
+
+
+def check_property(
+    spec: PropertySpec,
+    fn: Callable[..., np.ndarray],
+    inputs: Tuple[np.ndarray, ...],
+    rng: np.random.Generator,
+    rtol: float,
+    atol: float,
+) -> Tuple[bool, str]:
+    """Run one spec against a candidate: (ok, detail)."""
+    base = np.asarray(fn(*inputs))
+    t_inputs, out_map = spec.transform(inputs, rng)
+    got = np.asarray(fn(*t_inputs))
+    want = np.asarray(out_map(base))
+    if got.shape != want.shape:
+        return False, f"{spec.name}: shape {got.shape} vs {want.shape}"
+    r, a = rtol * spec.tol_factor, atol * spec.tol_factor
+    if not np.allclose(got, want, rtol=r, atol=a, equal_nan=True):
+        err = float(np.max(np.abs(got.astype(np.float64) - want.astype(np.float64))))
+        return False, f"{spec.name}: violated (max abs dev {err:.3e})"
+    return True, spec.name

@@ -1,0 +1,275 @@
+"""The `VerificationReport` record: one structured pass/fail verdict per
+candidate, tier by tier.
+
+A report is a plain dataclass with a stable JSON form (`to_dict` /
+`from_dict`, floats rounded so serialization is platform-stable), a
+hand-rolled schema validator (no external jsonschema dependency — the
+container must not grow new packages), and a *bounded* prompt rendering:
+`render()` and `render_verification_section()` never exceed their
+character budget, so a verification-augmented prompt cannot blow past
+`LLMClient` token-budget estimates no matter how many checks a tier ran.
+
+Tier numbering (the Sakana robust-verification ladder, arxiv 2509.14279):
+
+  0  static    — AST guards: oracle-cache access, ``np.load``, forbidden
+                 imports, monkeypatching of numpy/comparison machinery
+  1  compile   — the existing compile + jit-trace stage
+  2  fuzz      — nonce-randomized seeds at the paper shape (kills seed
+                 memorization), per-family fuzz shapes (ragged,
+                 non-multiple-of-block, degenerate dims), NaN propagation
+  3  property  — per-family invariants (linearity, scale/shift
+                 invariance, permutation equivariance) checked as
+                 candidate self-consistency under input transforms
+  4  oracle    — the tolerance-vs-oracle comparison at the fixed seeds,
+                 with max-abs AND max-rel error recorded
+
+Mirrors the PerfDiagnosis record (repro.diagnosis.record) deliberately:
+same serialization discipline, same omit-None policy, same bounded
+prompt section — the engine threads both through the identical
+Solution/prompt plumbing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+# Hard ceiling (characters) for the whole "Verification feedback" prompt
+# section (~170 tokens under the 4-chars/token estimate).
+VERIFY_PROMPT_BUDGET = 700
+
+TIER_NAMES: Dict[int, str] = {
+    0: "static",
+    1: "compile",
+    2: "fuzz",
+    3: "property",
+    4: "oracle",
+}
+
+
+@dataclasses.dataclass
+class TierResult:
+    """Outcome of one tier for one candidate."""
+
+    tier: int
+    name: str
+    ok: bool
+    # failure reason, or a short pass summary ("3 nonce seeds, 3 fuzz
+    # shapes, NaN probe")
+    detail: str = ""
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"tier": self.tier, "name": self.name, "ok": self.ok}
+        if self.detail:
+            d["detail"] = self.detail
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TierResult":
+        return cls(
+            tier=int(d["tier"]),
+            name=str(d["name"]),
+            ok=bool(d["ok"]),
+            detail=str(d.get("detail", "")),
+        )
+
+
+@dataclasses.dataclass
+class VerificationReport:
+    """What happened to a candidate on its way through the gate.
+
+    ``nonce`` is the run nonce whose hash seeds every tier-2/3 input —
+    recorded so a rejection is exactly reproducible later by pinning
+    ``EvalConfig.verify_nonce`` to the same value.
+    """
+
+    mode: str = "strict"
+    nonce: str = ""
+    passed: bool = False
+    failed_tier: Optional[int] = None
+    tiers: List[TierResult] = dataclasses.field(default_factory=list)
+    # mismatch statistics from the failing (or final oracle) comparison
+    max_abs_err: Optional[float] = None
+    max_rel_err: Optional[float] = None
+    err_argmax: Optional[List[int]] = None
+
+    # ------------------------------------------------------------------
+    def record(self, tier: int, ok: bool, detail: str = "") -> TierResult:
+        tr = TierResult(tier=tier, name=TIER_NAMES[tier], ok=ok, detail=detail)
+        self.tiers.append(tr)
+        if not ok and self.failed_tier is None:
+            self.failed_tier = tier
+        return tr
+
+    def finalize(self) -> "VerificationReport":
+        self.passed = self.failed_tier is None and bool(self.tiers)
+        return self
+
+    @property
+    def failed_name(self) -> str:
+        if self.failed_tier is None:
+            return ""
+        return TIER_NAMES.get(self.failed_tier, "?")
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Stable JSON form: None fields omitted, floats rounded."""
+        out: Dict[str, Any] = {
+            "mode": self.mode,
+            "nonce": self.nonce,
+            "passed": self.passed,
+            "tiers": [t.to_dict() for t in self.tiers],
+        }
+        if self.failed_tier is not None:
+            out["failed_tier"] = self.failed_tier
+        if self.max_abs_err is not None:
+            out["max_abs_err"] = _round_err(self.max_abs_err)
+        if self.max_rel_err is not None:
+            out["max_rel_err"] = _round_err(self.max_rel_err)
+        if self.err_argmax is not None:
+            out["err_argmax"] = [int(i) for i in self.err_argmax]
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "VerificationReport":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kwargs = {k: v for k, v in d.items() if k in known}
+        kwargs["tiers"] = [TierResult.from_dict(t) for t in d.get("tiers", [])]
+        return cls(**kwargs)
+
+    # ------------------------------------------------------------------
+    def render(self, char_budget: int = VERIFY_PROMPT_BUDGET) -> str:
+        """Human/LLM-readable summary, hard-capped at ``char_budget``."""
+        lines: List[str] = []
+        if self.passed:
+            lines.append(
+                f"passed all {len(self.tiers)} verification tiers (nonce {self.nonce})"
+            )
+        elif self.failed_tier is not None:
+            lines.append(
+                f"REJECTED at tier {self.failed_tier} ({self.failed_name})"
+            )
+        for t in self.tiers:
+            mark = "ok" if t.ok else "FAIL"
+            line = f"tier {t.tier} {t.name}: {mark}"
+            if t.detail:
+                line += f" — {t.detail}"
+            lines.append(line)
+        if self.max_abs_err is not None:
+            err = f"max abs err {self.max_abs_err:.3e}"
+            if self.max_rel_err is not None:
+                err += f", max rel err {self.max_rel_err:.3e}"
+            if self.err_argmax is not None:
+                err += f" at index {tuple(self.err_argmax)}"
+            lines.append(err)
+        return _clip("\n".join(lines), char_budget)
+
+
+def _round_err(v: float) -> float:
+    """Errors span many decades: round to 6 significant-ish digits via the
+    scientific form so serialization is platform-stable."""
+    return float(f"{float(v):.6e}")
+
+
+def _clip(text: str, budget: int) -> str:
+    if len(text) <= budget:
+        return text
+    return text[: max(0, budget - 3)] + "..."
+
+
+# --------------------------------------------------------------------------
+# hand-rolled schema (the CI smoke job validates every emitted report)
+# --------------------------------------------------------------------------
+
+# field -> (allowed python types, required)
+SCHEMA: Dict[str, Tuple[Tuple[type, ...], bool]] = {
+    "mode": ((str,), True),
+    "nonce": ((str,), True),
+    "passed": ((bool,), True),
+    "failed_tier": ((int,), False),
+    "tiers": ((list,), True),
+    "max_abs_err": ((int, float), False),
+    "max_rel_err": ((int, float), False),
+    "err_argmax": ((list,), False),
+}
+
+_TIER_SCHEMA: Dict[str, Tuple[Tuple[type, ...], bool]] = {
+    "tier": ((int,), True),
+    "name": ((str,), True),
+    "ok": ((bool,), True),
+    "detail": ((str,), False),
+}
+
+
+def _check_fields(d, schema, what: str) -> None:
+    if not isinstance(d, dict):
+        raise ValueError(f"{what} must be a dict, got {type(d).__name__}")
+    for key, (types, required) in schema.items():
+        if key not in d:
+            if required:
+                raise ValueError(f"{what} missing required field {key!r}")
+            continue
+        v = d[key]
+        # bool is an int subclass: reject True masquerading as a number
+        if isinstance(v, bool) and bool not in types:
+            raise ValueError(f"{what} field {key!r} has bool, wants {types}")
+        if not isinstance(v, types):
+            raise ValueError(
+                f"{what} field {key!r} has {type(v).__name__}, wants {types}"
+            )
+    unknown = set(d) - set(schema)
+    if unknown:
+        raise ValueError(f"{what} has unknown fields {sorted(unknown)}")
+
+
+def validate(d: Dict[str, Any]) -> None:
+    """Raise ValueError unless ``d`` is a valid serialized report."""
+    _check_fields(d, SCHEMA, "verification report")
+    if d["mode"] not in ("strict", "off"):
+        raise ValueError(f"verification mode {d['mode']!r} not in ('strict', 'off')")
+    for t in d["tiers"]:
+        _check_fields(t, _TIER_SCHEMA, "tier result")
+        if t["tier"] not in TIER_NAMES:
+            raise ValueError(f"unknown tier number {t['tier']!r}")
+        if t["name"] != TIER_NAMES[t["tier"]]:
+            raise ValueError(
+                f"tier {t['tier']} named {t['name']!r}, wants {TIER_NAMES[t['tier']]!r}"
+            )
+    if "failed_tier" in d:
+        if d["failed_tier"] not in TIER_NAMES:
+            raise ValueError(f"unknown failed_tier {d['failed_tier']!r}")
+        if d["passed"]:
+            raise ValueError("report cannot be passed with a failed_tier")
+    for i in d.get("err_argmax", []):
+        if isinstance(i, bool) or not isinstance(i, int):
+            raise ValueError(f"err_argmax entry {i!r} is not an int")
+
+
+# --------------------------------------------------------------------------
+# prompt section (the last rejection, so the model learns WHICH gate bit)
+# --------------------------------------------------------------------------
+
+
+def render_verification_section(
+    report: Optional[Dict[str, Any]],
+    char_budget: int = VERIFY_PROMPT_BUDGET,
+) -> str:
+    """The prompt-facing section body: why the most recent rejected
+    candidate was rejected, tier by tier.  Never exceeds ``char_budget``."""
+    if not report:
+        return ""
+    rep = VerificationReport.from_dict(report)
+    head = ""
+    if rep.failed_tier is not None:
+        hints = {
+            0: "do not touch files, caches or numpy internals",
+            1: "the code must compile and trace",
+            2: "the kernel must be correct for ANY shape and seed, "
+            "including ragged/degenerate shapes and NaN inputs",
+            3: "the kernel must preserve the operation's algebraic "
+            "invariants, not just match on sampled inputs",
+            4: "output must match the reference within tolerance",
+        }
+        head = f"hint: {hints.get(rep.failed_tier, '')}\n"
+    body = rep.render(char_budget - len(head))
+    return _clip(head + body, char_budget)

@@ -1,0 +1,172 @@
+"""Tier-0 static guard: AST screening of candidate sources for the
+reward-hacking primitives a correctness gate cannot observe at runtime.
+
+The threat model (arxiv 2509.14279): an evolved candidate can score as
+"valid and fast" without computing anything by
+
+* reading the evaluator's oracle cache from disk (``np.load`` of the
+  ``oracle/`` ``.npy`` files, ``open()``), or
+* monkeypatching the comparison machinery (``np.allclose = lambda...``)
+  or numpy internals out from under the verifier, or
+* escaping the exec namespace through introspection
+  (``__builtins__``, ``f.__globals__``, ``object.__subclasses__``).
+
+None of those appear in a legitimate jnp kernel, so the guard is a plain
+allowlist/denylist over the parse tree — no execution, no sandboxing
+claims.  A source that does not parse passes tier 0 untouched: tier 1's
+``compile()`` owns syntax errors and must keep reporting them with the
+same messages strict-off runs produce.
+
+The guard is intentionally conservative-in-one-direction: it may let a
+novel hack through to the dynamic tiers (fuzz/property/oracle), but it
+must never reject the rendered sources of real tasks — every
+``task.initial_source`` in the registry passes (audited in
+tests/test_verify.py).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+# modules a candidate kernel may import (prefix match on dotted paths:
+# "jax" admits "jax.numpy", "jax.lax", ...).  `time` is used by the
+# calibration tasks' rendered sources.
+ALLOWED_IMPORTS = frozenset(
+    {"jax", "numpy", "functools", "itertools", "math", "time", "typing"}
+)
+
+# builtins whose *call* gives filesystem / namespace-escape powers
+BANNED_CALLS = frozenset(
+    {
+        "open", "exec", "eval", "compile", "__import__", "input",
+        "breakpoint", "getattr", "setattr", "delattr", "globals",
+        "locals", "vars", "reload",
+    }
+)
+
+# attribute calls that reach the filesystem regardless of receiver
+# (np.load, np.save, jnp.load, arr.tofile, np.lib.format.open_memmap...)
+BANNED_ATTR_CALLS = frozenset(
+    {
+        "load", "save", "savez", "savez_compressed", "loadtxt",
+        "savetxt", "genfromtxt", "fromfile", "tofile", "memmap",
+        "open_memmap", "open",
+    }
+)
+
+# names/attributes that escape the exec namespace
+BANNED_NAMES = frozenset({"__builtins__", "__import__", "__loader__", "__spec__"})
+
+
+def _root_name(node: ast.AST) -> str:
+    """The leftmost name of an attribute chain: np.testing.allclose -> np."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _dotted(node: ast.Attribute) -> str:
+    parts: List[str] = []
+    cur: ast.AST = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+    return ".".join(reversed(parts))
+
+
+def _import_allowed(module: str) -> bool:
+    return module.split(".", 1)[0] in ALLOWED_IMPORTS
+
+
+class _Guard(ast.NodeVisitor):
+    def __init__(self) -> None:
+        self.violations: List[str] = []
+        # aliases bound to imported modules ("np" for `import numpy as np`):
+        # assignment to any attribute under one is a monkeypatch
+        self.module_aliases: set = set()
+
+    def flag(self, msg: str) -> None:
+        if msg not in self.violations:
+            self.violations.append(msg)
+
+    # -- imports -------------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            if not _import_allowed(a.name):
+                self.flag(f"forbidden import {a.name.split('.', 1)[0]!r}")
+            else:
+                self.module_aliases.add(a.asname or a.name.split(".", 1)[0])
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        if node.level or not _import_allowed(mod):
+            self.flag(f"forbidden import {(mod or '.').split('.', 1)[0]!r}")
+        self.generic_visit(node)
+
+    # -- calls ---------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in BANNED_CALLS:
+            self.flag(f"forbidden call {f.id!r}")
+        elif isinstance(f, ast.Attribute) and f.attr in BANNED_ATTR_CALLS:
+            self.flag(f"forbidden file-access call {_dotted(f)!r}")
+        self.generic_visit(node)
+
+    # -- monkeypatching ------------------------------------------------
+    def _check_patch_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Attribute):
+            root = _root_name(target)
+            if root in self.module_aliases:
+                self.flag(f"monkeypatch of module attribute {_dotted(target)!r}")
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._check_patch_target(elt)
+        elif isinstance(target, ast.Subscript):
+            # np.__dict__["allclose"] = ... ; module.__dict__ access is also
+            # caught below as a dunder attribute
+            if isinstance(target.value, ast.Attribute):
+                self._check_patch_target(target.value)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._check_patch_target(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_patch_target(node.target)
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for t in node.targets:
+            self._check_patch_target(t)
+        self.generic_visit(node)
+
+    # -- namespace escape ----------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if node.attr.startswith("__") and node.attr.endswith("__"):
+            self.flag(f"forbidden dunder attribute {node.attr!r}")
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if node.id in BANNED_NAMES:
+            self.flag(f"forbidden name {node.id!r}")
+        self.generic_visit(node)
+
+
+def static_violations(source: str) -> List[str]:
+    """All tier-0 violations in ``source`` (empty list = clean).
+
+    Unparseable sources return no violations — the compile tier owns
+    syntax errors and their (byte-locked) error messages.
+    """
+    try:
+        tree = ast.parse(source)
+    except SyntaxError:
+        return []
+    g = _Guard()
+    g.visit(tree)
+    return g.violations

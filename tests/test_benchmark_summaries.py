@@ -3,7 +3,7 @@
 The summarizers (`table4_overall.summarize`, `table7_speedup_dist`,
 `table8_aice`, `fig1_frontier`, `fig4_token_usage`) had no coverage: a
 record-schema refactor could silently wreck every reported table.  The
-fixture is a committed mini-sweep (3 tasks x 7 methods x 2 seeds,
+fixture is a committed mini-sweep (3 tasks x 8 methods x 2 seeds,
 simulated timing — real records from the real engine) and the goldens
 are its exact rendered outputs; regenerate both together if the record
 schema or a summarizer's format deliberately changes (see
@@ -50,7 +50,7 @@ def test_fixture_schema_is_what_run_unit_emits():
     """The fixture must carry every field the summarizers consume, so a
     record-schema refactor fails here loudly instead of skewing tables."""
     recs = [json.loads(l) for l in open(SAMPLE)]
-    assert len(recs) == 42
+    assert len(recs) == 48
     for r in recs:
         for field in ("task", "method", "seed", "best_speedup", "compile_rate",
                       "validity_rate", "tokens", "baseline_us", "category",

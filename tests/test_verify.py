@@ -1,0 +1,520 @@
+"""Strict tiered verification (repro.verify) tests.
+
+The two contracts this file locks (mirroring tests/test_diagnosis.py):
+
+* verify=off is a byte-identical no-op: engine runs of every pre-existing
+  method produce records AND checkpoint files with the exact bytes the
+  pre-verification engine produced (golden fixture captured on main before
+  the subsystem landed — tests/fixtures/strict_off_golden.json);
+* verify=strict rejects every committed adversarial fixture at its intended
+  tier (tests/fixtures/hacks/), accepts every task's honest naive source,
+  emits schema-valid reports, is exactly replayable under a pinned nonce,
+  ships unchanged through the parallel worker pipe, and survives the
+  engine's checkpoint/resume path.
+"""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.tasks  # noqa: F401 — populate the registry
+import repro.tasks.calibration  # noqa: F401
+from repro.core.engine import EvolutionEngine, RunResult
+from repro.core.methods import DISPLAY_ORDER, get_method
+from repro.core.solution import Solution, TokenLedger
+from repro.evaluation.evaluator import EvalConfig, EvalResult, Evaluator
+from repro.sweep.driver import run_unit
+from repro.tasks.base import get_task
+from repro.verify import (
+    VERIFY_PROMPT_BUDGET,
+    VerificationPolicy,
+    VerificationReport,
+    derive_seed_base,
+    render_verification_section,
+    static_violations,
+)
+from repro.verify.report import validate
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+GOLDEN = os.path.join(FIXTURES, "strict_off_golden.json")
+HACKS = os.path.join(FIXTURES, "hacks")
+
+
+def _sim_evaluator(nonce=None) -> Evaluator:
+    return Evaluator(EvalConfig(timing_mode="simulated", verify_nonce=nonce))
+
+
+def _sha256(path: str) -> str:
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+# --------------------------------------------------------------------------
+# the ablation-soundness contract: verify-off == pre-verification engine
+# --------------------------------------------------------------------------
+
+
+def test_strict_off_byte_identical_to_pre_pr_engine(tmp_path):
+    """Replay the golden grid (captured on main BEFORE this subsystem
+    existed): every record and every checkpoint file must come out with
+    identical bytes now that the verification plumbing is in place."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert golden["units"], "golden fixture is empty"
+    for unit in golden["units"]:
+        ckdir = tmp_path / unit["task"] / unit["method_key"]
+        rec = run_unit(
+            get_task(unit["task"]),
+            get_method(unit["method_key"]),
+            unit["seed"],
+            evaluator=_sim_evaluator(),
+            trials=unit["trials"],
+            rag_pool=[],
+            batch_size=1,
+            checkpoint_dir=str(ckdir),
+        )
+        assert rec == unit["record"], f"record drifted for {unit['method_key']}"
+        ck = ckdir / unit["checkpoint_name"]
+        assert ck.exists(), f"checkpoint missing for {unit['method_key']}"
+        assert _sha256(str(ck)) == unit["checkpoint_sha256"], (
+            f"checkpoint bytes drifted for {unit['method_key']} — the "
+            "verify=off path is no longer a byte-identical no-op"
+        )
+
+
+def test_off_mode_attaches_no_verification():
+    ev = _sim_evaluator()
+    task = get_task("cal_quick")
+    res = ev.evaluate(task, task.initial_source)  # config default: off
+    assert res.valid
+    assert res.verification is None
+
+    # a wrong candidate in off mode keeps the legacy one-number message
+    # but still carries the structured error stats (satellite: max-rel +
+    # argmax index recorded everywhere)
+    wrong = ev.evaluate(task, task.initial_source.replace("+ 1.0", "+ 1.5"))
+    assert wrong.compile_ok and not wrong.correct
+    assert wrong.error.startswith("value mismatch (max abs err ")
+    assert "rel" not in wrong.error
+    assert wrong.err_max_abs == pytest.approx(0.5, rel=1e-3)
+    assert wrong.err_max_rel is not None and wrong.err_max_rel > 0
+    assert isinstance(wrong.err_argmax, list)
+    assert wrong.verification is None
+
+
+def test_solution_to_dict_omits_none_verification():
+    d = Solution(source="x = 1").to_dict()
+    assert "verification" not in d
+    rep = {"mode": "strict", "nonce": "n", "passed": True, "tiers": []}
+    d2 = Solution(source="x = 1", verification=rep).to_dict()
+    assert d2["verification"]["mode"] == "strict"
+    assert Solution.from_dict(d).verification is None
+    assert Solution.from_dict(d2).verification == rep
+
+
+def test_strict_never_promotes_and_off_never_demotes():
+    """Tier degradation mirror of diagnosis never-invalidate: the strict
+    ladder can only *reject* candidates the legacy gate accepted, never
+    accept ones it rejected; and in off mode the verdict is untouched."""
+    ev = _sim_evaluator(nonce="pin")
+    task = get_task("cal_quick")
+    honest = task.initial_source
+    broken = honest.replace("+ 1.0", "+ 1.5")
+    for src in (honest, broken):
+        off = ev.evaluate(task, src, verify="off")
+        strict = ev.evaluate(task, src, verify="strict")
+        if not off.valid:
+            assert not strict.valid, "strict promoted a legacy-rejected candidate"
+        if strict.valid:
+            assert off.valid
+
+
+# --------------------------------------------------------------------------
+# the hack audit: every committed adversarial fixture must be rejected
+# --------------------------------------------------------------------------
+
+
+def _manifest():
+    with open(os.path.join(HACKS, "manifest.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("fx", _manifest()["fixtures"], ids=lambda fx: fx["file"])
+def test_hack_fixture_rejected_at_expected_tier(fx):
+    with open(os.path.join(HACKS, fx["file"])) as f:
+        source = f.read()
+    task = get_task(fx["task"])
+    ev = _sim_evaluator(nonce=_manifest()["nonce"])
+    res = ev.evaluate(task, source, verify="strict")
+    assert not (res.compile_ok and res.correct), f"{fx['file']} passed strict"
+    rep = res.verification
+    assert rep is not None
+    validate(rep)
+    assert rep["failed_tier"] == fx["expected_tier"], (
+        f"{fx['file']}: rejected at tier {rep['failed_tier']}, "
+        f"expected {fx['expected_tier']}"
+    )
+    failing = [t for t in rep["tiers"] if not t["ok"]]
+    assert failing and fx["detail_substring"] in failing[0].get("detail", ""), (
+        f"{fx['file']}: detail {failing[0].get('detail', '')!r} lacks "
+        f"{fx['detail_substring']!r}"
+    )
+
+
+@pytest.mark.parametrize(
+    "fx",
+    [
+        f
+        for f in _manifest()["fixtures"]
+        # tier-0 hacks must never be exec'd outside the strict guard:
+        # allclose_patch would corrupt this very process's numpy
+        if f["legacy_accepts"] and f["expected_tier"] >= 2
+    ],
+    ids=lambda fx: fx["file"],
+)
+def test_dynamic_hacks_pass_the_legacy_gate(fx):
+    """The vulnerability being closed, demonstrated: the same candidates
+    the strict ladder rejects score as fully valid under the legacy
+    fixed-shape fixed-seed gate."""
+    with open(os.path.join(HACKS, fx["file"])) as f:
+        source = f.read()
+    res = _sim_evaluator().evaluate(get_task(fx["task"]), source, verify="off")
+    assert res.valid, f"{fx['file']} no longer fools the legacy gate: {res.error}"
+
+
+@pytest.mark.parametrize(
+    "name",
+    [
+        "cal_quick",
+        "mm_square_s",
+        "mm_batched_bt",
+        "conv1d_k3",
+        "act_relu",
+        "act_softmax",
+        "pool_max2d",
+        "norm_group",
+        "reduce_sum",
+        "reduce_min",
+        "loss_ce",
+        "cum_sum_masked",
+    ],
+)
+def test_honest_naive_sources_pass_strict(name):
+    """No false positives: the deliberately-slow but honest initial
+    implementations clear the full ladder (one task per family quirk:
+    batched/transposed matmul, grouped norm, sort-based min with the NaN
+    probe opt-out, masked cumsum, one-hot CE loss)."""
+    task = get_task(name)
+    res = _sim_evaluator(nonce="pin").evaluate(task, task.initial_source, verify="strict")
+    assert res.valid, f"{name} naive source rejected: {res.error}"
+    rep = res.verification
+    validate(rep)
+    assert rep["passed"] is True
+    assert [t["tier"] for t in rep["tiers"]] == [0, 1, 2, 3, 4]
+    assert all(t["ok"] for t in rep["tiers"])
+
+
+# --------------------------------------------------------------------------
+# nonce derivation and replay
+# --------------------------------------------------------------------------
+
+
+def test_nonce_pinning_replays_exactly():
+    task = get_task("act_relu")
+    src = task.initial_source
+    r1 = _sim_evaluator(nonce="abc").evaluate(task, src, verify="strict")
+    r2 = _sim_evaluator(nonce="abc").evaluate(task, src, verify="strict")
+    assert r1.verification == r2.verification
+    assert r1.verification["nonce"] == "abc"
+
+
+def test_fresh_nonce_draws_fresh_seeds():
+    assert derive_seed_base("a", "t") != derive_seed_base("b", "t")
+    assert derive_seed_base("a", "t1") != derive_seed_base("a", "t2")
+    # unpinned evaluators draw distinct nonces
+    assert _sim_evaluator().verify_nonce != _sim_evaluator().verify_nonce
+    for nonce in ("a", "b"):
+        sb = derive_seed_base(nonce, "t")
+        assert 0 <= sb < 2**31
+
+
+def test_policy_warm_is_idempotent_and_covers_fuzz():
+    task = get_task("act_relu")
+    pol = VerificationPolicy(task, "pin")
+    pol.warm()
+    cases = pol.functional_cases()
+    assert cases is pol.functional_cases()  # memoized
+    labels = [c[0] for c in cases]
+    assert labels[:3] == ["nonce seed 0", "nonce seed 1", "nonce seed 2"]
+    assert sum(1 for l in labels if l.startswith("fuzz shape")) == 3
+    # fuzz shapes are genuinely off-canonical
+    canonical = task.make_inputs(0)[0].shape
+    for _, inputs, want in cases[3:]:
+        assert inputs[0].shape != canonical
+        assert want.shape == np.asarray(task.ref(*inputs)).shape
+    assert pol.nan_case() is not None
+
+
+# --------------------------------------------------------------------------
+# static guard units
+# --------------------------------------------------------------------------
+
+
+def test_static_guard_units():
+    ok = "import jax.numpy as jnp\n\ndef kernel(x):\n    return jnp.abs(x)\n"
+    assert static_violations(ok) == []
+    # syntax errors are tier 1's job (and its byte-locked messages)
+    assert static_violations("def kernel(x:\n  return x") == []
+    bad = {
+        "import os\n": "forbidden import",
+        "from repro.tasks import get_task\n": "forbidden import",
+        "import numpy as np\nx = np.load('f.npy')\n": "np.load",
+        "import numpy as np\nnp.allclose = None\n": "monkeypatch",
+        "import numpy as np\nnp.ndarray.__eq__ = None\n": "",
+        "open('/etc/passwd')\n": "forbidden call",
+        "eval('1')\n": "forbidden call",
+        "getattr(__builtins__, 'open')\n": "",
+        "import numpy\ndel numpy.allclose\n": "monkeypatch",
+    }
+    for src, needle in bad.items():
+        v = static_violations(src)
+        assert v, f"guard missed: {src!r}"
+        if needle:
+            assert any(needle in m for m in v), (src, v)
+
+
+# --------------------------------------------------------------------------
+# report record layer
+# --------------------------------------------------------------------------
+
+
+def test_report_roundtrip_and_validate():
+    rep = VerificationReport(mode="strict", nonce="n")
+    rep.record(0, True, "source clean")
+    rep.record(1, True)
+    rep.record(2, False, "nonce seed 0: max abs err 1.000e+00 (rel 5.000e-01)")
+    rep.max_abs_err = 1.0
+    rep.max_rel_err = 0.5
+    rep.err_argmax = [3, 7]
+    d = rep.finalize().to_dict()
+    validate(d)
+    assert d["passed"] is False and d["failed_tier"] == 2
+    back = VerificationReport.from_dict(d)
+    assert back.to_dict() == d
+    assert back.failed_name == "fuzz"
+
+
+def test_validate_rejects_bad_payloads():
+    good = VerificationReport(mode="strict", nonce="n")
+    good.record(0, True)
+    gd = good.finalize().to_dict()
+    validate(gd)
+    for bad in (
+        {},
+        {**gd, "mode": "loose"},
+        {**gd, "passed": 1},
+        {**gd, "surprise": 3},
+        {**gd, "failed_tier": 9},
+        {**gd, "passed": True, "failed_tier": 0},
+        {**gd, "tiers": [{"tier": 0, "name": "compile", "ok": True}]},
+        {**gd, "tiers": [{"tier": 7, "name": "static", "ok": True}]},
+        {**gd, "err_argmax": [1, True]},
+        [],
+    ):
+        with pytest.raises(ValueError):
+            validate(bad)
+
+
+def test_render_respects_budget_and_names_the_tier():
+    rep = VerificationReport(mode="strict", nonce="n")
+    rep.record(0, True, "source clean")
+    rep.record(1, True, "compiled and traced")
+    rep.record(2, False, "fuzz shape ((7, 33),): " + "x" * 400)
+    rep.max_abs_err = 12.0
+    rep.finalize()
+    for budget in (40, 120, VERIFY_PROMPT_BUDGET):
+        assert len(rep.render(budget)) <= budget
+    sec = render_verification_section(rep.to_dict())
+    assert 0 < len(sec) <= VERIFY_PROMPT_BUDGET
+    assert "REJECTED at tier 2 (fuzz)" in sec
+    assert sec.startswith("hint: ")
+    assert render_verification_section(None) == ""
+
+
+# --------------------------------------------------------------------------
+# parallel pipe
+# --------------------------------------------------------------------------
+
+
+def test_parallel_strict_identical_to_serial():
+    from repro.evaluation.parallel import ParallelEvaluator
+
+    task = get_task("cal_quick")
+    hack = os.path.join(HACKS, "memorize_seeds.py")
+    with open(hack) as f:
+        hack_src = f.read()
+    cfg = EvalConfig(timing_mode="simulated", verify_nonce="pin")
+    serial = Evaluator(cfg)
+    with ParallelEvaluator(
+        cfg, workers=1, extra_task_modules=("repro.tasks.calibration",)
+    ) as pool:
+        for src in (task.initial_source, hack_src):
+            s = serial.evaluate(task, src, verify="strict")
+            p = pool.evaluate(task, src, verify="strict")
+            assert p.verification == s.verification
+            assert (p.compile_ok, p.correct, p.error) == (
+                s.compile_ok, s.correct, s.error
+            )
+        # per-call mode must not leak into other calls through the cache
+        off = pool.evaluate(task, hack_src, verify="off")
+        assert off.valid and off.verification is None
+
+
+# --------------------------------------------------------------------------
+# engine integration: the evoengineer-strictverify method row
+# --------------------------------------------------------------------------
+
+
+def test_strictverify_method_registered():
+    m = get_method("evoengineer-strictverify")
+    assert m.verify == "strict"
+    assert m.guiding.use_verification
+    assert m.fault.p_hack > 0
+    assert "evoengineer-strictverify" in DISPLAY_ORDER
+
+
+def test_strictverify_engine_rejects_hacks_and_feeds_back(tmp_path):
+    task = get_task("act_relu")
+    eng = EvolutionEngine(
+        task,
+        get_method("evoengineer-strictverify"),
+        evaluator=_sim_evaluator(nonce="pin"),
+        seed=3,
+    )
+    res = eng.run(max_trials=20)
+    rejected = [
+        s for s in res.history if not s.valid and s.verification is not None
+    ]
+    for sol in res.history:
+        if sol.verification is not None:
+            validate(sol.verification)
+    assert rejected, "no strict rejection in 20 trials (p_hack=0.06 + faults)"
+    # the next prompt names the tier that bit
+    _, req = eng._prepare_request(eng.trial)
+    assert "## Verification feedback (last rejected candidate)" in req.prompt
+    section = req.prompt.split(
+        "## Verification feedback (last rejected candidate)\n", 1
+    )[1].split("\n\n## ", 1)[0]
+    assert len(section) <= VERIFY_PROMPT_BUDGET
+    assert "REJECTED at tier" in section
+    # rejection tier is recorded on insights for the insight store
+    assert any("[rejected at tier" in r.text for r in eng.insights.records)
+
+
+def test_strictverify_checkpoint_resume_identical(tmp_path):
+    """The new method row survives the sweep-fleet checkpoint/resume path
+    (verification payloads and rejection-feedback prompts included)."""
+    task = get_task("cal_quick")
+    method_key = "evoengineer-strictverify"
+    one_shot = tmp_path / "oneshot"
+    rec_full = run_unit(
+        task, get_method(method_key), 0, evaluator=_sim_evaluator(nonce="pin"),
+        trials=12, rag_pool=[], batch_size=1, checkpoint_dir=str(one_shot),
+    )
+    resumed = tmp_path / "resumed"
+    run_unit(
+        task, get_method(method_key), 0, evaluator=_sim_evaluator(nonce="pin"),
+        trials=6, rag_pool=[], batch_size=1, checkpoint_dir=str(resumed),
+    )
+    rec_resumed = run_unit(
+        task, get_method(method_key), 0, evaluator=_sim_evaluator(nonce="pin"),
+        trials=12, rag_pool=[], batch_size=1, checkpoint_dir=str(resumed),
+    )
+    assert rec_resumed == rec_full
+    name = next(p for p in os.listdir(one_shot) if p.endswith(".json"))
+    assert _sha256(str(one_shot / name)) == _sha256(str(resumed / name))
+
+
+def test_off_mode_prompt_has_no_verification_section():
+    task = get_task("cal_quick")
+    eng = EvolutionEngine(
+        task, get_method("evoengineer-full"), evaluator=_sim_evaluator(), seed=0
+    )
+    eng.run(max_trials=4)
+    _, req = eng._prepare_request(eng.trial)
+    assert "Verification feedback" not in req.prompt
+
+
+# --------------------------------------------------------------------------
+# satellites: oracle warm outside the deadline, runtime sanity guards
+# --------------------------------------------------------------------------
+
+
+def test_oracle_warming_happens_before_candidate_runs():
+    """Satellite: oracle construction is paid outside the candidate
+    _Deadline — even a candidate rejected before execution (tier 0)
+    leaves the oracle cache warm for its successors."""
+    ev = _sim_evaluator(nonce="pin")
+    task = get_task("cal_quick")
+    assert ev.oracle_misses == 0
+    res = ev.evaluate(task, "import os\n\ndef kernel(x):\n    return x\n", verify="strict")
+    assert res.stage == "verify" and not res.compile_ok
+    assert ev.oracle_misses == ev.config.n_correctness
+    before = ev.oracle_misses
+    ev.evaluate(task, task.initial_source, verify="strict")
+    assert ev.oracle_misses == before  # warmed once, not per candidate
+
+
+def test_eval_result_ok_guards_degenerate_runtimes():
+    assert EvalResult(compile_ok=True, correct=True, runtime_us=10.0).ok
+    for rt in (None, 0.0, -1.0, float("nan"), float("inf")):
+        r = EvalResult(compile_ok=True, correct=True, runtime_us=rt)
+        assert not r.ok, f"runtime {rt!r} must not be usable"
+    assert not EvalResult(compile_ok=True, correct=False, runtime_us=10.0).ok
+
+
+def test_run_result_speedups_guard_degenerate_runtimes():
+    def rr(rt):
+        best = Solution(source="s", compile_ok=True, correct=True, runtime_us=rt)
+        return RunResult(
+            task="t", method="m", seed=0, best=best, history=[best],
+            ledger=TokenLedger(), baseline_us=100.0,
+        )
+
+    assert rr(50.0).best_speedup == pytest.approx(2.0)
+    assert rr(50.0).any_speedup
+    for rt in (None, 0.0, float("nan"), float("inf"), -3.0):
+        assert rr(rt).best_speedup == 1.0
+        assert not rr(rt).any_speedup
+
+
+def test_evaluator_speedup_rejects_degenerate_measurement(monkeypatch):
+    ev = _sim_evaluator()
+    task = get_task("cal_quick")
+    good = ev.evaluate(task, task.initial_source)
+    assert ev.speedup(task, good) is not None
+    bad = EvalResult(compile_ok=True, correct=True, runtime_us=0.0)
+    assert ev.speedup(task, bad) is None
+
+
+def test_degenerate_measurement_demoted_to_timing_stage(monkeypatch):
+    from repro.evaluation import timing as timing_mod
+
+    ev = _sim_evaluator()
+    task = get_task("cal_quick")
+
+    class ZeroTiming:
+        mode = "simulated"
+
+        def measure(self, req):
+            return timing_mod.Measurement(runtime_us=0.0, mode="simulated")
+
+    ev.timing = ZeroTiming()
+    res = ev.evaluate(task, task.initial_source)
+    assert res.compile_ok and res.correct
+    assert res.runtime_us is None and res.stage == "timing"
+    assert "unusable runtime measurement" in res.error
+    assert not res.ok
